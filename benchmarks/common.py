@@ -1,0 +1,56 @@
+"""Shared benchmark plumbing: budget-scaled configs, timing, CSV emission.
+
+Every benchmark module exposes ``run(fast: bool) -> List[Row]``; ``run.py``
+orchestrates. Rows print as ``name,us_per_call,derived`` per the harness
+contract: ``us_per_call`` is wall-microseconds for the measured unit and
+``derived`` carries the paper-comparable quantity (accuracy, MB, ratio …).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+from repro.core.rounds import MFedMCConfig
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def fast_cfg(**kw) -> MFedMCConfig:
+    base = dict(rounds=6, local_epochs=2, background_size=24, eval_size=24,
+                seed=0)
+    base.update(kw)
+    return MFedMCConfig(**base)
+
+
+def paper_cfg(**kw) -> MFedMCConfig:
+    base = dict(rounds=20, local_epochs=5, background_size=50, eval_size=32,
+                seed=0)
+    base.update(kw)
+    return MFedMCConfig(**base)
+
+
+def cfg_for(fast: bool, **kw) -> MFedMCConfig:
+    return fast_cfg(**kw) if fast else paper_cfg(**kw)
+
+
+def samples_for(fast: bool) -> int:
+    return 48 if fast else 96
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.us = (time.perf_counter() - self.t0) * 1e6

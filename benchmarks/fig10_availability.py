@@ -1,0 +1,32 @@
+"""Fig. 10 — client availability / churn robustness."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row, Timer, cfg_for, samples_for
+from repro.core.baselines import run_baseline
+from repro.core.rounds import run_mfedmc
+
+
+def run(fast: bool = True) -> List[Row]:
+    rows: List[Row] = []
+    n = samples_for(fast)
+    rates = [1.0, 0.5] if fast else [1.0, 0.75, 0.5, 0.25]
+    for rate in rates:
+        cfg = cfg_for(fast, availability=rate)
+        with Timer() as t:
+            h = run_mfedmc("actionsense", "natural", cfg,
+                           samples_per_client=n)
+        rows.append(Row(f"fig10/mfedmc_avail{int(rate*100)}", t.us,
+                        f"final={h.final_accuracy():.4f};"
+                        f"MB={h.comm_mb[-1]:.2f}"))
+    if not fast:
+        for rate in (1.0, 0.5):
+            cfg = cfg_for(fast, availability=rate)
+            with Timer() as t:
+                h = run_baseline("mmfed", "actionsense", "natural", cfg,
+                                 samples_per_client=n)
+            rows.append(Row(f"fig10/mmfed_avail{int(rate*100)}", t.us,
+                            f"final={h.final_accuracy():.4f};"
+                            f"MB={h.comm_mb[-1]:.2f}"))
+    return rows

@@ -1,0 +1,21 @@
+"""Fig. 11 — uplink quantization (32/8/4-bit) composed with joint
+selection."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row, Timer, cfg_for, samples_for
+from repro.core.rounds import run_mfedmc
+
+
+def run(fast: bool = True) -> List[Row]:
+    rows: List[Row] = []
+    n = samples_for(fast)
+    for bits in (32, 8, 4):
+        cfg = cfg_for(fast, quantize_bits=bits)
+        with Timer() as t:
+            h = run_mfedmc("ucihar", "iid", cfg, samples_per_client=n)
+        rows.append(Row(f"fig11/q{bits}", t.us,
+                        f"final={h.final_accuracy():.4f};"
+                        f"MB={h.comm_mb[-1]:.3f}"))
+    return rows

@@ -1,0 +1,23 @@
+"""Fig. 5 — modality-impact dynamics: mean |Shapley| per modality across
+communication rounds (the interpretability readout)."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row, Timer, cfg_for, samples_for
+from repro.core.rounds import run_mfedmc
+
+
+def run(fast: bool = True) -> List[Row]:
+    n = samples_for(fast)
+    cfg = cfg_for(fast)
+    with Timer() as t:
+        h = run_mfedmc("actionsense", "natural", cfg, samples_per_client=n)
+    rows: List[Row] = []
+    mods = sorted({m for r in h.records for m in r.shapley})
+    for m in mods:
+        series = [r.shapley.get(m, float("nan")) for r in h.records]
+        traj = "|".join(f"{v:.4f}" for v in series)
+        rows.append(Row(f"fig5/actionsense/{m}", t.us / max(len(mods), 1),
+                        f"phi_by_round={traj}"))
+    return rows

@@ -1,0 +1,33 @@
+"""Fig. 8 — heterogeneous uplink tiers: every client participates under
+bandwidth restrictions; end-to-end baselines lock out restricted clients."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row, Timer, cfg_for, samples_for
+from repro.core.baselines import run_baseline
+from repro.core.rounds import run_mfedmc
+
+LIGHT4 = {"eye", "emg_left", "emg_right", "body"}
+LIGHT3 = {"eye", "emg_left", "emg_right"}
+TIERS = {**{k: LIGHT4 for k in (2, 3, 4)}, **{k: LIGHT3 for k in range(5, 9)}}
+
+
+def run(fast: bool = True) -> List[Row]:
+    rows: List[Row] = []
+    n = samples_for(fast)
+    cfg = cfg_for(fast, allowed_modalities=TIERS)
+    with Timer() as t:
+        h = run_mfedmc("actionsense", "natural", cfg, samples_per_client=n)
+    rows.append(Row("fig8/mfedmc_tiered", t.us,
+                    f"final={h.final_accuracy():.4f};MB={h.comm_mb[-1]:.2f}"))
+    # end-to-end baseline: only clients 0-1 can upload full models
+    cfg_b = cfg_for(fast)
+    with Timer() as t:
+        hb = run_baseline("flfd", "actionsense", "natural", cfg_b,
+                          samples_per_client=n,
+                          allowed_full_upload=[0, 1])
+    rows.append(Row("fig8/flfd_clients01_only", t.us,
+                    f"final={hb.final_accuracy():.4f};"
+                    f"MB={hb.comm_mb[-1]:.2f}"))
+    return rows

@@ -1,0 +1,28 @@
+"""Fig. 9 — long-tail client-size imbalance × loss/recency client-selection
+weight blends."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row, Timer, cfg_for, samples_for
+from repro.core.rounds import run_mfedmc
+
+
+def run(fast: bool = True) -> List[Row]:
+    rows: List[Row] = []
+    ifs = [10, 100] if fast else [10, 20, 50, 80, 100]
+    blends = [(1.0, "pure_loss"), (0.2, "loss02_rec08")] if fast else \
+        [(1.0, "pure_loss"), (0.8, "loss08_rec02"), (0.5, "loss05_rec05"),
+         (0.2, "loss02_rec08"), (0.0, "pure_recency")]
+    n = samples_for(fast)
+    for imf in ifs:
+        for w, tag in blends:
+            cfg = cfg_for(fast, client_strategy="loss_recency",
+                          loss_weight=w)
+            with Timer() as t:
+                h = run_mfedmc("ucihar", "longtail", cfg,
+                               imbalance_factor=imf, max_samples=n)
+            rows.append(Row(f"fig9/IF{imf}/{tag}", t.us,
+                            f"final={h.final_accuracy():.4f};"
+                            f"MB={h.comm_mb[-1]:.2f}"))
+    return rows

@@ -1,0 +1,84 @@
+"""Generate EXPERIMENTS.md §Dry-run and §Roofline markdown tables from the
+dry-run JSON artifact.
+
+    PYTHONPATH=src python -m benchmarks.make_tables results/dryrun_all.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List
+
+
+def fmt_eng(x: float) -> str:
+    return f"{x:.2e}" if x else "0"
+
+
+def dryrun_table(results: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | status | peak GiB/chip | fits 16G |"
+        " compile s |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in results:
+        mesh = "2×16×16" if r.get("multi_pod") else "16×16"
+        status = r.get("status", "?")
+        if status == "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {mesh} | ok "
+                f"| {r.get('peak_gib_per_chip', '—')} "
+                f"| {'✓' if r.get('fits_hbm_16g') else '✗'} "
+                f"| {r.get('compile_s', 0):.0f} |")
+        else:
+            short = status if len(status) < 60 else status[:57] + "…"
+            lines.append(f"| {r['arch']} | {r['shape']} | {mesh} "
+                         f"| {short} | — | — | — |")
+    return "\n".join(lines)
+
+
+def roofline_table(results: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant |"
+        " useful-FLOPs | bottleneck note |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in results:
+        if r.get("status") != "ok" or r.get("multi_pod"):
+            continue
+        note = _note(r)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {fmt_eng(r['compute_s_term'])} "
+            f"| {fmt_eng(r['memory_s_term'])} "
+            f"| {fmt_eng(r['collective_s_term'])} "
+            f"| **{r['dominant']}** "
+            f"| {r['useful_flops_ratio']:.2f} | {note} |")
+    return "\n".join(lines)
+
+
+def _note(r: Dict) -> str:
+    dom = r["dominant"]
+    if dom == "compute":
+        return "more chips / fewer remat FLOPs move it"
+    if dom == "memory":
+        hb = r.get("hbm_breakdown", {})
+        big = max(hb, key=hb.get) if hb else "?"
+        return f"HBM traffic dominated by {big}"
+    return "shrink or overlap the dominant collective"
+
+
+def main(path: str) -> None:
+    with open(path) as f:
+        results = json.load(f)
+    ok = sum(1 for r in results if r.get("status") == "ok")
+    skipped = sum(1 for r in results if "skipped" in str(r.get("status")))
+    failed = len(results) - ok - skipped
+    print(f"## §Dry-run — {ok} ok / {skipped} skipped / {failed} failed "
+          f"of {len(results)}\n")
+    print(dryrun_table(results))
+    print("\n## §Roofline — single-pod (16×16 = 256 chips)\n")
+    print(roofline_table(results))
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_all.json")

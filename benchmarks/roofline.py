@@ -1,0 +1,82 @@
+"""Roofline benchmark (deliverable g): per (arch × shape × mesh) compute /
+memory / collective terms from the compiled dry-run.
+
+The full 40-combo sweep takes ~1 h of XLA compile time, so this module
+*consumes* the dry-run artifact (``results/dryrun_single.json`` +
+``results/dryrun_multi.json`` written by ``repro.launch.dryrun --all
+--json …``) when present and otherwise runs a representative 3-combo subset
+in a subprocess (the 512-device flag must not leak into this process).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from typing import List, Optional
+
+from benchmarks.common import Row
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+SUBSET = [("xlstm-125m", "train_4k"), ("phi3-medium-14b", "decode_32k"),
+          ("granite-moe-1b-a400m", "train_4k")]
+
+
+def _load_results() -> Optional[list]:
+    out = []
+    for f in ("dryrun_single.json", "dryrun_multi.json",
+              "dryrun_all.json"):
+        p = os.path.join(RESULTS, f)
+        if os.path.exists(p):
+            with open(p) as fh:
+                out.extend(json.load(fh))
+    return out or None
+
+
+def _run_subset() -> list:
+    os.makedirs(RESULTS, exist_ok=True)
+    results = []
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    for arch, shape in SUBSET:
+        tmp = os.path.join(RESULTS, f"_roofline_{arch}_{shape}.json")
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--json", tmp]
+        r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                           timeout=3600)
+        if os.path.exists(tmp):
+            with open(tmp) as fh:
+                results.extend(json.load(fh))
+            os.remove(tmp)
+        elif r.returncode:
+            results.append({"arch": arch, "shape": shape,
+                            "status": f"FAILED rc={r.returncode}"})
+    return results
+
+
+def rows_from_results(results: list) -> List[Row]:
+    rows = []
+    for r in results:
+        if r.get("status") != "ok":
+            continue
+        mesh = "multi" if r.get("multi_pod") else "single"
+        name = f"roofline/{r['arch']}/{r['shape']}/{mesh}"
+        rows.append(Row(
+            name, r.get("compile_s", 0) * 1e6,
+            f"compute_s={r['compute_s_term']:.3e};"
+            f"memory_s={r['memory_s_term']:.3e};"
+            f"collective_s={r['collective_s_term']:.3e};"
+            f"dominant={r['dominant']};"
+            f"useful_flops={r['useful_flops_ratio']:.3f}"))
+    return rows
+
+
+def run(fast: bool = True) -> List[Row]:
+    results = _load_results()
+    if results is None:
+        results = _run_subset()
+    rows = rows_from_results(results)
+    if not rows:
+        rows.append(Row("roofline/none", 0.0,
+                        "no dry-run artifact; run repro.launch.dryrun"))
+    return rows

@@ -1,0 +1,87 @@
+"""Roofline of the paper's technique on the production mesh: one MFedMC
+round (local SGD epochs + masked Eq.-21 aggregation) for a K-client LSTM
+encoder population, lowered on the multi-pod mesh.
+
+Modes compared (§Perf hillclimb #3):
+    flat          — cross-(pod×data) masked all-reduce every round
+    hierarchical  — per-step within-pod pmean (cheap axis) + per-round
+                    cross-pod selective aggregation (expensive axis)
+
+Runs in a subprocess (the 512-device XLA flag must not leak here).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from typing import List
+
+from benchmarks.common import Row
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+import jax, jax.numpy as jnp
+from repro.core.distributed import make_federated_round, federated_input_specs
+from repro.core.encoders import init_encoder
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import param_specs
+from repro.roofline import collective_bytes, count_step_flops
+
+K, STEPS, BATCH = 512, 15, 32          # 512 clients, E*steps local SGD
+FEAT = (16, 8)                          # reduced ActionSense-ish modality
+mesh = make_production_mesh(multi_pod=True)
+enc_spec = jax.eval_shape(lambda: init_encoder(jax.random.key(0), FEAT, 20))
+specs = federated_input_specs(K, STEPS, BATCH, FEAT, enc_spec)
+out = []
+for mode in ("flat", "hierarchical", "flat_bf16_uplink"):
+    rnd = make_federated_round(mesh, local_steps=STEPS, lr=0.1,
+                               hierarchical=(mode == "hierarchical"),
+                               uplink_dtype=(jnp.bfloat16 if "bf16" in mode
+                                             else None))
+    prev = jax.sharding.get_mesh()
+    jax.sharding.set_mesh(mesh)
+    try:
+        lowered = jax.jit(rnd).lower(specs["params"], specs["batches"],
+                                     specs["select"], specs["weight"])
+        compiled = lowered.compile()
+    finally:
+        jax.sharding.set_mesh(prev)
+    coll = collective_bytes(compiled.as_text())
+    flops = count_step_flops(rnd, specs["params"], specs["batches"],
+                             specs["select"], specs["weight"])
+    mem = compiled.memory_analysis()
+    out.append({
+        "mode": mode,
+        "collective_bytes": coll,
+        "collective_total": sum(coll.values()),
+        "flops_total": flops,
+        "peak_bytes": int(mem.argument_size_in_bytes
+                          + mem.temp_size_in_bytes),
+    })
+print("RESULT_JSON:" + json.dumps(out))
+"""
+
+
+def run(fast: bool = True) -> List[Row]:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=3600)
+    rows: List[Row] = []
+    for line in r.stdout.splitlines():
+        if line.startswith("RESULT_JSON:"):
+            for entry in json.loads(line[len("RESULT_JSON:"):]):
+                per_chip = entry["collective_total"] / 512
+                rows.append(Row(
+                    f"roofline_federated/{entry['mode']}", 0.0,
+                    f"collective_total={entry['collective_total']:.3e}B;"
+                    f"per_chip={per_chip:.3e}B;"
+                    f"ici_s={per_chip / 50e9:.3e};"
+                    f"flops={entry['flops_total']:.3e}"))
+    if not rows:
+        rows.append(Row("roofline_federated/error", 0.0,
+                        f"stderr={r.stderr[-200:]}"))
+    return rows

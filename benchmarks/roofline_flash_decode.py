@@ -1,0 +1,88 @@
+"""Context-parallel flash-decode roofline: explicit shard_map partial-softmax
+combine vs the XLA-inferred sharded contraction, at long_500k scale
+(batch 1, 512k context, one attention layer).
+
+The explicit path's collective is (o, m, l) — O(B·H·d) — independent of
+context length; the XLA-inferred path is whatever SPMD picks for the sharded
+contraction. Runs on the multi-pod mesh in a subprocess.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from typing import List
+
+from benchmarks.common import Row
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.mesh import make_production_mesh
+from repro.models.decode_attention import make_flash_decode, _partial_attention
+from repro.roofline import collective_bytes
+
+B, H, KV, T, D = 1, 32, 8, 524288, 128
+mesh = make_production_mesh(multi_pod=True)
+S = jax.ShapeDtypeStruct
+q = S((B, H, D), jnp.bfloat16)
+k = S((B, T, KV, D), jnp.bfloat16)
+v = S((B, T, KV, D), jnp.bfloat16)
+kv_pos = S((T,), jnp.int32)
+pos = S((), jnp.int32)
+seq_axes = ("pod", "data", "model")
+jax.sharding.set_mesh(mesh)
+out = []
+
+# explicit shard_map flash-decode
+fd = make_flash_decode(mesh, seq_axes=seq_axes)
+compiled = jax.jit(fd).lower(q, k, v, kv_pos, pos).compile()
+coll = collective_bytes(compiled.as_text())
+out.append({"mode": "shard_map_flash_decode",
+            "collective_total": sum(coll.values()),
+            "breakdown": coll})
+
+# XLA-inferred: same math, sharding via constraints only
+def xla_path(q, k, v, kv_pos, pos):
+    o, m, l = _partial_attention(q, k, v, kv_pos, pos)
+    return (o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+kv_sh = NamedSharding(mesh, P(None, seq_axes))
+compiled2 = jax.jit(
+    xla_path,
+    in_shardings=(NamedSharding(mesh, P()), kv_sh, kv_sh,
+                  NamedSharding(mesh, P(seq_axes)),
+                  NamedSharding(mesh, P())),
+    out_shardings=NamedSharding(mesh, P())).lower(
+        q, k, v, kv_pos, pos).compile()
+coll2 = collective_bytes(compiled2.as_text())
+out.append({"mode": "xla_inferred",
+            "collective_total": sum(coll2.values()),
+            "breakdown": coll2})
+print("RESULT_JSON:" + json.dumps(out))
+"""
+
+
+def run(fast: bool = True) -> List[Row]:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=3600)
+    rows: List[Row] = []
+    for line in r.stdout.splitlines():
+        if line.startswith("RESULT_JSON:"):
+            for e in json.loads(line[len("RESULT_JSON:"):]):
+                per_chip = e["collective_total"] / 512
+                rows.append(Row(
+                    f"roofline_flash_decode/{e['mode']}", 0.0,
+                    f"collective_total={e['collective_total']:.3e}B;"
+                    f"per_chip={per_chip:.3e}B;"
+                    f"ici_s={per_chip / 50e9:.3e}"))
+    if not rows:
+        rows.append(Row("roofline_flash_decode/error", 0.0,
+                        f"stderr={r.stderr[-200:]}"))
+    return rows

@@ -1,0 +1,64 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only table2,fig11]
+
+Prints ``name,us_per_call,derived`` CSV rows. ``--full`` uses paper-scale
+rounds/epochs (slow on CPU); the default fast mode reproduces every table's
+*relative* structure in minutes.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+
+MODULES = [
+    "table2_overall",
+    "table3_weights",
+    "table5_client_selection",
+    "fig5_impact",
+    "fig7_noniid",
+    "fig8_heterogeneous_network",
+    "fig9_longtail",
+    "fig10_availability",
+    "fig11_quantization",
+    "table7_runtime",
+    "fig12_shapley_runtime",
+    "roofline",
+    "roofline_federated",
+    "roofline_flash_decode",
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module prefixes")
+    args = ap.parse_args(argv)
+
+    mods = MODULES
+    if args.only:
+        want = args.only.split(",")
+        mods = [m for m in MODULES if any(m.startswith(w) for w in want)]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in mods:
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            rows = mod.run(fast=not args.full)
+            for row in rows:
+                print(row.csv(), flush=True)
+            print(f"# {name}: {len(rows)} rows in {time.time()-t0:.0f}s",
+                  file=sys.stderr)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0,ERROR:{type(e).__name__}:{e}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

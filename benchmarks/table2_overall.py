@@ -1,0 +1,62 @@
+"""Table 2 / Fig. 4 — overall comparison: MFedMC vs ablations vs SOTA
+baselines; (i) accuracy under a communication budget and (ii) overhead to
+reach a target accuracy."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from benchmarks.common import Row, Timer, cfg_for, samples_for
+from repro.core.baselines import run_baseline
+from repro.core.rounds import run_mfedmc
+
+BUDGET_MB = 5.0
+TARGETS = {"actionsense": 0.5, "ucihar": 0.5}
+FAST_TARGETS = {"actionsense": 0.3, "ucihar": 0.4}
+
+
+def run(fast: bool = True) -> List[Row]:
+    rows: List[Row] = []
+    targets = FAST_TARGETS if fast else TARGETS
+    datasets = ["actionsense"] if fast else ["actionsense", "ucihar"]
+    n = samples_for(fast)
+    for ds in datasets:
+        scenario = "natural"
+        cfg = cfg_for(fast, comm_budget_mb=BUDGET_MB)
+        systems = {
+            "mfedmc": lambda c=cfg: run_mfedmc(ds, scenario, c,
+                                               samples_per_client=n),
+            "wo_modality_sel": lambda c=cfg: run_mfedmc(
+                ds, scenario,
+                dataclasses.replace(c, modality_strategy="random"),
+                samples_per_client=n),
+            "wo_client_sel": lambda c=cfg: run_mfedmc(
+                ds, scenario, dataclasses.replace(c, client_strategy="all"),
+                samples_per_client=n),
+            "wo_joint_sel": lambda c=cfg: run_mfedmc(
+                ds, scenario,
+                dataclasses.replace(c, modality_strategy="random",
+                                    client_strategy="random"),
+                samples_per_client=n),
+            "flfd": lambda c=cfg: run_baseline("flfd", ds, scenario, c,
+                                               samples_per_client=n),
+            "flash": lambda c=cfg: run_baseline("flash", ds, scenario, c,
+                                                samples_per_client=n),
+        }
+        if not fast:
+            systems.update({
+                "mmfed": lambda c=cfg: run_baseline(
+                    "mmfed", ds, scenario, c, samples_per_client=n),
+                "harmony": lambda c=cfg: run_baseline(
+                    "harmony", ds, scenario, c, samples_per_client=n),
+            })
+        for name, fn in systems.items():
+            with Timer() as t:
+                h = fn()
+            acc = h.accuracy_under_budget(BUDGET_MB)
+            mb = h.overhead_to_target(targets[ds])
+            rows.append(Row(
+                f"table2/{ds}/{name}", t.us,
+                f"acc@{BUDGET_MB}MB={acc:.4f};MB@{targets[ds]:.0%}="
+                f"{mb:.2f};final={h.final_accuracy():.4f}"))
+    return rows

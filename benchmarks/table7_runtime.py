@@ -1,0 +1,41 @@
+"""Table 7 — end-to-end system time: measured wall-clock training time plus
+the paper's modeled transmission time (10 Mbps uplink × 1.2 protocol × 1.5
+FEC), per method."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import Row, cfg_for, samples_for
+from repro.core.aggregation import IOT_UPLINK
+from repro.core.baselines import run_baseline
+from repro.core.rounds import run_mfedmc
+
+
+def run(fast: bool = True) -> List[Row]:
+    rows: List[Row] = []
+    n = samples_for(fast)
+    systems = {
+        "mfedmc": lambda c: run_mfedmc("actionsense", "natural", c,
+                                       samples_per_client=n),
+        "flfd": lambda c: run_baseline("flfd", "actionsense", "natural", c,
+                                       samples_per_client=n),
+        "flash": lambda c: run_baseline("flash", "actionsense", "natural",
+                                        c, samples_per_client=n),
+    }
+    if not fast:
+        systems["mmfed"] = lambda c: run_baseline(
+            "mmfed", "actionsense", "natural", c, samples_per_client=n)
+        systems["harmony"] = lambda c: run_baseline(
+            "harmony", "actionsense", "natural", c, samples_per_client=n)
+    for name, fn in systems.items():
+        cfg = cfg_for(fast)
+        t0 = time.perf_counter()
+        h = fn(cfg)
+        train_s = time.perf_counter() - t0
+        comm_s = IOT_UPLINK.seconds(h.comm_mb[-1] * 1e6)
+        rows.append(Row(
+            f"table7/{name}", train_s * 1e6,
+            f"train_s={train_s:.1f};comm_s={comm_s:.1f};"
+            f"total_s={train_s + comm_s:.1f};MB={h.comm_mb[-1]:.2f}"))
+    return rows

@@ -1,0 +1,40 @@
+"""Fig. 8 scenario: heterogeneous uplink restrictions.
+
+    PYTHONPATH=src python examples/heterogeneous_network.py [--rounds 10]
+
+Clients 1–2 upload anything; clients 3–5 are limited to the four light
+modalities; clients 6–9 to the three lightest. MFedMC routes around the
+restriction (priority selection within the allowed set); end-to-end
+baselines would lock out clients 3–9 entirely.
+"""
+import argparse
+
+from repro.core import MFedMCConfig
+from repro.core.rounds import run_mfedmc
+
+LIGHT4 = {"eye", "emg_left", "emg_right", "body"}
+LIGHT3 = {"eye", "emg_left", "emg_right"}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=10)
+    args = ap.parse_args()
+
+    tiers = {0: None, 1: None}                       # unrestricted
+    tiers.update({k: LIGHT4 for k in (2, 3, 4)})     # moderate
+    tiers.update({k: LIGHT3 for k in (5, 6, 7, 8)})  # severe
+    allowed = {k: v for k, v in tiers.items() if v is not None}
+
+    cfg = MFedMCConfig(rounds=args.rounds, local_epochs=2,
+                       allowed_modalities=allowed,
+                       background_size=32, eval_size=32, seed=0)
+    h = run_mfedmc("actionsense", "natural", cfg, verbose=True,
+                   samples_per_client=48)
+    print(f"\nfinal accuracy {h.final_accuracy():.4f} with every client "
+          f"participating despite tiered uplink restrictions "
+          f"({h.comm_mb[-1]:.2f} MB total)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Quickstart: MFedMC in ~30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py [--rounds 5]
+
+Builds the ActionSense-shaped federation (9 clients, 6 modalities, subjects
+6–9 missing tactile), runs joint modality+client selection for a few rounds,
+and prints accuracy vs cumulative uplink megabytes.
+"""
+import argparse
+
+from repro.core import MFedMCConfig, run_mfedmc
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--dataset", default="actionsense")
+    ap.add_argument("--scenario", default="natural")
+    args = ap.parse_args()
+
+    cfg = MFedMCConfig(
+        rounds=args.rounds,
+        local_epochs=2,            # paper: 5; reduced for a fast demo
+        gamma=1, delta=0.2,        # paper's headline config
+        alpha_s=1 / 3, alpha_c=1 / 3, alpha_r=1 / 3,
+        background_size=32, eval_size=32,
+        seed=0,
+    )
+    history = run_mfedmc(args.dataset, args.scenario, cfg, verbose=True,
+                         samples_per_client=48)
+
+    print("\nround  accuracy  cumulative-MB")
+    for r in history.records:
+        print(f"{r.round:5d}  {r.accuracy:8.4f}  {r.comm_mb:12.3f}")
+    print(f"\nfinal accuracy {history.final_accuracy():.4f} after "
+          f"{history.comm_mb[-1]:.2f} MB of uplink "
+          f"(vs ~10 MB/round for upload-everything baselines)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Serving example: batched greedy decoding for any zoo architecture.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch minicpm3-4b \
+        [--tokens 32] [--batch 4]
+
+Demonstrates the same serve_step the multi-pod dry-run lowers for
+decode_32k — KV cache for attention archs, O(1) recurrent state for
+SSM/hybrid archs, absorbed-latent cache for MLA.
+"""
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minicpm3-4b")
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+    serve_main(["--arch", args.arch, "--tokens", str(args.tokens),
+                "--batch", str(args.batch)])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import re, jax
+from collections import Counter
+from repro.launch.dryrun import dryrun_one
+import repro.launch.dryrun as dr
+from repro.configs import get_config, get_shape
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_train_step
+from repro.models.model import param_specs, input_specs
+from repro.optim import adamw
+from repro.sharding.partition import param_pspecs, batch_pspec, register_mesh
+from jax.sharding import NamedSharding
+
+cfg = get_config("phi3-medium-14b")
+shape = get_shape("train_4k")
+mesh = make_production_mesh(multi_pod=False)
+register_mesh(mesh)
+p_specs = param_specs(cfg)
+p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), param_pspecs(p_specs))
+in_specs = input_specs(cfg, shape)
+b_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), batch_pspec(shape, cfg, False))
+opt = adamw(1e-4)
+o_specs = jax.eval_shape(opt.init, p_specs)
+o_sh = dr._opt_shardings(p_specs, o_specs, mesh)
+step = make_train_step(cfg, opt, shape)
+jax.sharding.set_mesh(mesh)
+lowered = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                  out_shardings=(p_sh, o_sh, None), donate_argnums=(0,1)).lower(p_specs, o_specs, in_specs)
+compiled = lowered.compile()
+hlo = compiled.as_text()
+
+from repro.roofline.collectives import split_computations, computation_multipliers, _shape_bytes
+comps, mult = computation_multipliers(hlo)
+rows = []
+for cname, lines in comps.items():
+    for line in lines:
+        line = line.strip()
+        m = re.match(r"(?:ROOT\s+)?\S+ = ((?:\([^)]*\))|(?:\S+\[[\d,]*\]\S*)) (all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)", line)
+        if m:
+            tys, kind = m.groups()
+            b = sum(_shape_bytes(t.strip()) for t in tys[1:-1].split(",")) if tys.startswith("(") else _shape_bytes(tys)
+            rows.append((b*mult.get(cname,1), b, mult.get(cname,1), kind, tys[:60], cname[:30]))
+rows.sort(reverse=True)
+print("top collectives (weighted_bytes, bytes, trips, kind, type, comp):")
+for r in rows[:12]:
+    print(f"  {r[0]:.3e} {r[1]:.3e} x{r[2]:<4.0f} {r[3]:<18} {r[4]:<60} {r[5]}")
+
+# biggest temp buffers
+print()
+mem = compiled.memory_analysis()
+print("args GiB", mem.argument_size_in_bytes/2**30, "temp GiB", mem.temp_size_in_bytes/2**30)
+# largest tensors in HLO (rough): find biggest shapes
+sizes = Counter()
+for m in re.finditer(r"(bf16|f32)\[([\d,]+)\]", hlo):
+    dims = [int(x) for x in m.group(2).split(",")]
+    n = 1
+    for d in dims: n *= d
+    sizes[(m.group(1), tuple(dims))] += 1
+big = sorted(sizes.items(), key=lambda kv: -(kv[0][1] and 1) * (4 if kv[0][0]=='f32' else 2) * __import__('math').prod(kv[0][1]))[:10]
+for (dt, dims), cnt in big:
+    import math
+    print(f"  {dt}{list(dims)} x{cnt} = {math.prod(dims)*(4 if dt=='f32' else 2)/2**30:.2f} GiB each")

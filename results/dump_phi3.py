@@ -1,0 +1,31 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           "--xla_dump_to=/tmp/xla_dump --xla_dump_hlo_as_text "
+                           "--xla_dump_hlo_pass_re=buffer")
+import jax
+from jax.sharding import NamedSharding
+import repro.launch.dryrun as dr
+from repro.configs import get_config, get_shape
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_train_step
+from repro.models.model import param_specs, input_specs
+from repro.optim import adamw
+from repro.sharding.partition import param_pspecs, batch_pspec, register_mesh
+
+cfg = get_config("phi3-medium-14b")
+shape = get_shape("train_4k")
+mesh = make_production_mesh(multi_pod=False)
+register_mesh(mesh)
+p_specs = param_specs(cfg)
+p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), param_pspecs(p_specs))
+in_specs = input_specs(cfg, shape)
+b_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), batch_pspec(shape, cfg, False))
+opt = adamw(1e-4)
+o_specs = jax.eval_shape(opt.init, p_specs)
+o_sh = dr._opt_shardings(p_specs, o_specs, mesh)
+step = make_train_step(cfg, opt, shape)
+jax.sharding.set_mesh(mesh)
+compiled = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                   out_shardings=(p_sh, o_sh, None), donate_argnums=(0,1)
+                   ).lower(p_specs, o_specs, in_specs).compile()
+print("temp GiB", compiled.memory_analysis().temp_size_in_bytes/2**30)

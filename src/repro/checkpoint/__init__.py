@@ -1,0 +1,4 @@
+from repro.checkpoint.checkpoint import (load_pytree, restore_sharded,
+                                         save_pytree)
+
+__all__ = ["save_pytree", "load_pytree", "restore_sharded"]

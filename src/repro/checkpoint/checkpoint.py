@@ -1,0 +1,72 @@
+"""Checkpointing: arbitrary pytrees <-> .npz archives.
+
+Leaves are flattened to '/'-joined key paths. ``restore_sharded`` re-places
+each restored leaf with its target ``NamedSharding`` so a checkpoint written
+on one mesh restores onto another (the arrays are host-resident between).
+Federated runs store the global encoder bank plus the selection state
+(recency counters) so a run can resume mid-federation.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(p.key) if isinstance(p, jax.tree_util.DictKey)
+            else str(p.idx) if isinstance(p, jax.tree_util.SequenceKey)
+            else str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_pytree(path: str, tree, *, meta: Optional[Dict[str, Any]] = None
+                ) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    flat = _flatten(tree)
+    if meta is not None:
+        flat["__meta__"] = np.frombuffer(
+            json.dumps(meta).encode(), dtype=np.uint8)
+    np.savez(path, **flat)
+
+
+def load_pytree(path: str, like=None):
+    """Load an .npz checkpoint. With ``like`` (a template pytree), values are
+    re-nested into the template's structure; otherwise returns the flat dict.
+    Returns (tree_or_flat, meta)."""
+    with np.load(path if path.endswith(".npz") else path + ".npz",
+                 allow_pickle=False) as z:
+        flat = {k: z[k] for k in z.files}
+    meta = None
+    if "__meta__" in flat:
+        meta = json.loads(bytes(flat.pop("__meta__")).decode())
+    if like is None:
+        return flat, meta
+    like_flat = _flatten(like)
+    missing = set(like_flat) - set(flat)
+    if missing:
+        raise KeyError(f"checkpoint missing leaves: {sorted(missing)[:5]} …")
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    keys = ["/".join(
+        str(p.key) if isinstance(p, jax.tree_util.DictKey)
+        else str(p.idx) if isinstance(p, jax.tree_util.SequenceKey)
+        else str(p) for p in path) for path, _ in paths]
+    leaves = [jnp.asarray(flat[k]) for k in keys]
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta
+
+
+def restore_sharded(path: str, like, shardings):
+    """Load and place each leaf with its target sharding (mesh-aware)."""
+    tree, meta = load_pytree(path, like)
+    placed = jax.tree.map(
+        lambda x, s: jax.device_put(x, s) if s is not None else x,
+        tree, shardings)
+    return placed, meta

@@ -1,0 +1,51 @@
+"""Architecture config registry: ``get_config("<arch-id>")`` / ``--arch``."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (INPUT_SHAPES, InputShape, MLAConfig,
+                                ModelConfig, smoke_shape)
+from repro.configs.paper_mfl import EncoderConfig, MFedMCConfig
+
+_ARCH_MODULES = {
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+    "granite-moe-1b-a400m": "repro.configs.granite_moe_1b_a400m",
+    "phi3-medium-14b": "repro.configs.phi3_medium_14b",
+    "llama-3.2-vision-11b": "repro.configs.llama_3_2_vision_11b",
+    "whisper-small": "repro.configs.whisper_small",
+    "minicpm3-4b": "repro.configs.minicpm3_4b",
+    "yi-34b": "repro.configs.yi_34b",
+    "xlstm-125m": "repro.configs.xlstm_125m",
+    "granite-34b": "repro.configs.granite_34b",
+    "arctic-480b": "repro.configs.arctic_480b",
+}
+
+
+def list_archs() -> List[str]:
+    return list(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch]).CONFIG
+
+
+def get_shape(name: str) -> InputShape:
+    return INPUT_SHAPES[name]
+
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> bool:
+    """Whether (arch, shape) is a supported combination (DESIGN.md skips)."""
+    if shape.requires_subquadratic and cfg.family == "audio":
+        # whisper: enc-dec full attention, no windowed variant (DESIGN.md)
+        return False
+    return True
+
+
+__all__ = [
+    "ModelConfig", "MLAConfig", "InputShape", "INPUT_SHAPES", "smoke_shape",
+    "EncoderConfig", "MFedMCConfig", "get_config", "get_shape", "list_archs",
+    "shape_applicable",
+]

@@ -1,0 +1,23 @@
+"""Snowflake Arctic-480B — 128-expert top-2 MoE with a dense residual path.
+
+[hf:Snowflake/snowflake-arctic-base] 35 layers, d_model=7168, 56 heads
+(GQA kv=8), expert d_ff=4864, vocab=32000, 128 experts top-2, plus a dense
+FFN residual branch in parallel with the MoE branch (Arctic's
+"dense-MoE hybrid" design).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    num_layers=35,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    d_ff=4864,
+    vocab_size=32_000,
+    num_experts=128,
+    experts_per_token=2,
+    moe_dense_residual=True,
+    citation="hf:Snowflake/snowflake-arctic-base",
+)

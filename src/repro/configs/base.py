@@ -1,0 +1,185 @@
+"""Unified model/shape configuration dataclasses for the model zoo.
+
+Every assigned architecture is expressed as a ``ModelConfig``. Families:
+
+- ``dense``  — llama-style decoder (GQA or MLA attention)
+- ``moe``    — dense attention + mixture-of-experts FFN (optionally with a
+               dense residual FFN path, as in Arctic)
+- ``hybrid`` — RG-LRU recurrent blocks interleaved with local attention
+               (RecurrentGemma / Griffin 1:2 pattern)
+- ``ssm``    — xLSTM (sLSTM + mLSTM blocks)
+- ``vlm``    — dense decoder with cross-attention image layers every K layers
+               (Llama 3.2 Vision); vision frontend is a stub embedding input
+- ``audio``  — encoder-decoder (Whisper); conv/mel frontend is a stub
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3 style)."""
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_head_dim: int = 64
+    qk_rope_head_dim: int = 32
+    v_head_dim: int = 64
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | hybrid | ssm | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    citation: str = ""
+
+    head_dim: int = 0                # 0 -> d_model // num_heads
+
+    # --- attention ---
+    attn_type: str = "gqa"           # gqa | mla
+    rope_theta: float = 10_000.0
+    sliding_window: int = 0          # 0 = full attention; >0 = window size
+    # window applied only for shapes that require sub-quadratic attention
+    long_context_window: int = 4096
+    mla: Optional[MLAConfig] = None
+
+    # --- FFN ---
+    act: str = "silu"                # silu (SwiGLU) | gelu (plain MLP)
+    gated_ffn: bool = True
+
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_dense_residual: bool = False # Arctic: dense FFN in parallel with MoE
+    router_aux_loss_coef: float = 0.01
+
+    # --- hybrid (RG-LRU + local attention) ---
+    # pattern of block kinds repeated to fill num_layers, e.g.
+    # ("rglru", "rglru", "local_attn") is the RecurrentGemma 1:2 pattern.
+    block_pattern: Tuple[str, ...] = ()
+    rglru_conv_width: int = 4        # temporal conv1d preceding RG-LRU
+    local_attn_window: int = 2048
+
+    # --- ssm (xLSTM) ---
+    # pattern of ("slstm" | "mlstm") blocks repeated to fill num_layers
+    xlstm_pattern: Tuple[str, ...] = ()
+    mlstm_chunk: int = 64
+
+    # --- vlm ---
+    cross_attn_every: int = 0        # insert a cross-attn layer every K layers
+    vision_tokens: int = 1601        # patch embeddings per image (stub input)
+    vision_embed_dim: int = 0        # 0 -> d_model
+
+    # --- audio (encoder-decoder) ---
+    encoder_layers: int = 0          # >0 -> enc-dec model; decoder=num_layers
+    encoder_frame_ratio: int = 4     # source frames = seq // ratio (stub input)
+
+    # --- misc ---
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    remat: bool = True
+    remat_policy: str = "full"       # full | dots (dots_saveable policy)
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        assert self.num_heads % max(self.num_kv_heads, 1) == 0, self.name
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding/logits table padded to a multiple of 256 so the vocab
+        dim divides the 16-way model axis (and MXU lanes). ``vocab_size``
+        stays the card-exact value; padded ids are never valid targets."""
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def subquadratic(self) -> bool:
+        """True if the arch natively supports very long contexts."""
+        return self.family in ("hybrid", "ssm")
+
+    @property
+    def supports_decode(self) -> bool:
+        return True  # all assigned archs are (or contain) decoders
+
+    def with_overrides(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # -- reduced variant for CPU smoke tests ---------------------------------
+    def smoke(self) -> "ModelConfig":
+        """A tiny same-family variant (<=2 layers, d_model<=512, <=4 experts)."""
+        n_layers = 2
+        d_model = min(self.d_model, 256)
+        n_heads = min(self.num_heads, 4)
+        n_kv = max(1, min(self.num_kv_heads, n_heads))
+        while n_heads % n_kv:
+            n_kv -= 1
+        kw = dict(
+            name=self.name + "-smoke",
+            num_layers=n_layers,
+            d_model=d_model,
+            num_heads=n_heads,
+            num_kv_heads=n_kv,
+            head_dim=d_model // n_heads,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 1024),
+            dtype="float32",
+            remat=False,
+        )
+        if self.is_moe:
+            kw.update(num_experts=4, experts_per_token=min(2, self.experts_per_token))
+        if self.block_pattern:
+            kw.update(local_attn_window=64,
+                      block_pattern=("rglru", "local_attn"))
+        if self.xlstm_pattern:
+            kw.update(xlstm_pattern=("mlstm", "slstm"), mlstm_chunk=16)
+        if self.mla is not None:
+            kw.update(mla=MLAConfig(q_lora_rank=64, kv_lora_rank=32,
+                                    qk_nope_head_dim=16, qk_rope_head_dim=8,
+                                    v_head_dim=16))
+        if self.encoder_layers:
+            kw.update(encoder_layers=2)
+        if self.cross_attn_every:
+            kw.update(cross_attn_every=2, vision_tokens=16)
+        if self.sliding_window:
+            kw.update(sliding_window=32)
+        kw.update(long_context_window=64)
+        return self.with_overrides(**kw)
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+    requires_subquadratic: bool = False
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode",
+                            requires_subquadratic=True),
+}
+
+
+def smoke_shape(kind: str = "train") -> InputShape:
+    if kind == "train":
+        return InputShape("smoke_train", 64, 4, "train")
+    if kind == "prefill":
+        return InputShape("smoke_prefill", 64, 2, "prefill")
+    return InputShape("smoke_decode", 64, 2, "decode")

@@ -1,0 +1,18 @@
+"""Granite-34B-Code — llama-architecture dense decoder with MQA.
+
+[arXiv:2405.04324] 88 layers, d_model=6144, 48 heads (MQA kv=1),
+d_ff=24576, vocab=49152.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-34b",
+    family="dense",
+    num_layers=88,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=1,
+    d_ff=24_576,
+    vocab_size=49_152,
+    citation="arXiv:2405.04324",
+)

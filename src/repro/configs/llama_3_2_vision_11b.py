@@ -1,0 +1,22 @@
+"""Llama-3.2-11B-Vision — dense decoder with cross-attention image layers.
+
+[hf:meta-llama/Llama-3.2-11B-Vision] 40 layers, d_model=4096, 32 heads
+(GQA kv=8), d_ff=14336, vocab=128256. Cross-attention layers every 5 layers
+consume precomputed vision patch embeddings (ViT frontend is a STUB per the
+assignment carve-out; ``input_specs`` supplies patch embeddings directly).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    num_layers=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14_336,
+    vocab_size=128_256,
+    cross_attn_every=5,
+    vision_tokens=1601,
+    citation="hf:meta-llama/Llama-3.2-11B-Vision",
+)

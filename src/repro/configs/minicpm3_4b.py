@@ -1,0 +1,23 @@
+"""MiniCPM3-4B — dense decoder with Multi-head Latent Attention (MLA).
+
+[hf:openbmb/MiniCPM3-4B] 62 layers, d_model=2560, 40 heads, d_ff=6400,
+vocab=73448. MLA: q_lora_rank=768, kv_lora_rank=256, qk nope/rope head dims
+64/32, v_head_dim=64. The KV cache stores the compressed latent
+(kv_lora_rank + rope dim per token), which is MLA's memory advantage.
+"""
+from repro.configs.base import MLAConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm3-4b",
+    family="dense",
+    num_layers=62,
+    d_model=2560,
+    num_heads=40,
+    num_kv_heads=40,
+    d_ff=6400,
+    vocab_size=73_448,
+    attn_type="mla",
+    mla=MLAConfig(q_lora_rank=768, kv_lora_rank=256,
+                  qk_nope_head_dim=64, qk_rope_head_dim=32, v_head_dim=64),
+    citation="hf:openbmb/MiniCPM3-4B",
+)

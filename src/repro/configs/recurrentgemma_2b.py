@@ -1,0 +1,24 @@
+"""RecurrentGemma-2B — RG-LRU recurrent blocks + local attention, 1:2 pattern.
+
+[arXiv:2402.19427] Griffin/RecurrentGemma: 26 layers, d_model=2560, 10 heads
+(MQA kv=1), d_ff=7680, vocab=256000. Block pattern: two recurrent (RG-LRU)
+blocks followed by one local-attention block, repeating.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    num_layers=26,
+    d_model=2560,
+    num_heads=10,
+    num_kv_heads=1,
+    d_ff=7680,
+    vocab_size=256_000,
+    block_pattern=("rglru", "rglru", "local_attn"),
+    local_attn_window=2048,
+    rglru_conv_width=4,
+    act="gelu",
+    gated_ffn=True,
+    citation="arXiv:2402.19427",
+)

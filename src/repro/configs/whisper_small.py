@@ -1,0 +1,29 @@
+"""Whisper-small — encoder-decoder speech model (transformer backbone only).
+
+[arXiv:2212.04356] 12 encoder + 12 decoder layers, d_model=768, 12 heads
+(MHA kv=12), d_ff=3072, vocab=51865. The mel-spectrogram + conv feature
+extractor frontend is a STUB per the assignment carve-out; ``input_specs``
+supplies precomputed frame embeddings (seq // encoder_frame_ratio frames).
+
+Note: whisper caps source at 1500 frames / target at 448 tokens in its
+published form; the 32k shapes here exercise the backbone with interpolated
+positions as a dry-run stress config, and ``long_500k`` is SKIPPED
+(full-attention enc-dec; see DESIGN.md).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="audio",
+    num_layers=12,            # decoder layers
+    encoder_layers=12,
+    encoder_frame_ratio=4,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    d_ff=3072,
+    vocab_size=51_865,
+    act="gelu",
+    gated_ffn=False,
+    citation="arXiv:2212.04356",
+)

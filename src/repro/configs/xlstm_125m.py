@@ -1,0 +1,23 @@
+"""xLSTM-125M — sLSTM + mLSTM recurrent blocks (attention-free).
+
+[arXiv:2405.04517] 12 layers, d_model=768, 4 heads, vocab=50304.
+d_ff=0: xLSTM blocks carry their own up/down projections (pre-up-projection
+mLSTM blocks, post-up-projection sLSTM blocks per the paper). We use the
+paper's 1:1-ish placement with mLSTM at most positions and sLSTM interleaved.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-125m",
+    family="ssm",
+    num_layers=12,
+    d_model=768,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50_304,
+    xlstm_pattern=("mlstm", "mlstm", "slstm"),
+    mlstm_chunk=64,
+    act="gelu",
+    citation="arXiv:2405.04517",
+)

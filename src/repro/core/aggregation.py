@@ -1,0 +1,73 @@
+"""Server-side per-modality encoder aggregation (Eq. 21) and the
+communication accounting / transport-time models.
+
+Aggregation is sample-weighted FedAvg over the encoders actually received:
+
+    θ_m ← Σ_k (|D_m^k| / Σ_j |D_m^j|) θ_m^k        (Eq. 21)
+
+``aggregate_modality`` is a plain pytree convex combination; the sparse
+cross-pod formulation used on the production mesh lives in
+``repro.core.distributed``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.encoders import encoder_param_arrays
+
+
+def aggregate_modality(encoders: Sequence[Dict],
+                       sample_counts: Sequence[int]) -> Dict:
+    """Weighted average of encoder pytrees (weights ∝ sample counts)."""
+    assert encoders, "aggregate_modality needs at least one upload"
+    w = np.asarray(sample_counts, np.float64)
+    w = w / w.sum()
+    arrays = [encoder_param_arrays(e) for e in encoders]
+    return {k: jnp.asarray(sum(wi * a[k] for wi, a in zip(w, arrays)))
+            for k in arrays[0]}
+
+
+# ---------------------------------------------------------------------------
+# communication accounting (paper §4.11 time model + datacenter ICI model)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TransportModel:
+    """T_comm = bytes × protocol × fec / (bandwidth/8) — Table 7's model."""
+    bandwidth_bps: float = 10e6     # 10 Mbps IoT uplink
+    protocol_overhead: float = 1.2
+    fec_overhead: float = 1.5
+
+    def seconds(self, n_bytes: float) -> float:
+        return (n_bytes * self.protocol_overhead * self.fec_overhead
+                / (self.bandwidth_bps / 8.0))
+
+
+IOT_UPLINK = TransportModel()
+# datacenter cross-pod ICI: 50 GB/s/link, negligible protocol overhead
+ICI_LINK = TransportModel(bandwidth_bps=50e9 * 8, protocol_overhead=1.0,
+                          fec_overhead=1.0)
+
+
+@dataclass
+class CommLedger:
+    """Cumulative upload accounting for one federation run."""
+    uploaded_bytes: float = 0.0
+    uploads: int = 0
+    rounds: int = 0
+
+    def record(self, n_bytes: float, n_uploads: int = 1) -> None:
+        self.uploaded_bytes += n_bytes
+        self.uploads += n_uploads
+
+    @property
+    def megabytes(self) -> float:
+        return self.uploaded_bytes / 1e6
+
+    def seconds(self, transport: TransportModel = IOT_UPLINK) -> float:
+        return transport.seconds(self.uploaded_bytes)

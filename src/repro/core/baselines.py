@@ -1,0 +1,365 @@
+"""SOTA MFL baselines (§4.2): FL-FD, MMFed, FedMultimodal, FLASH, Harmony.
+
+Per the paper's protocol, all baselines share the base networks (LSTM
+trunks / CNN trunks, same hyperparameters) and differ only in the fusion
+level and upload policy — specialized add-ons (co-attention etc.) are
+deliberately omitted to isolate the algorithmic comparison:
+
+- **FL-FD**        data-level fusion: modalities resampled to a common time
+                   axis and concatenated on features; one holistic model;
+                   full-model upload every round.
+- **MMFed**        feature-level fusion: per-modality trunk → concat hidden
+                   states → shared head; full-model upload.
+- **FedMultimodal** feature-level fusion with mean-pooled trunk features;
+                   full-model upload.
+- **FLASH**        MMFed architecture, but each client uploads ONE uniformly
+                   random component (a modality trunk or the head) per round.
+- **Harmony**      disentangled two-stage: per-modality trunks are federated
+                   (all uploaded), the fusion head stays local.
+
+Missing modalities are zero-padded — exactly the degradation mode the
+decoupled MFedMC architecture avoids.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import CommLedger
+from repro.core.encoders import LSTM_HIDDEN, _glorot
+from repro.core.rounds import MFedMCConfig, RoundRecord, RunHistory
+from repro.data.registry import DatasetSpec, get_dataset_spec
+from repro.data.synthetic import ClientData
+
+
+# ---------------------------------------------------------------------------
+# shared trunks
+# ---------------------------------------------------------------------------
+
+def _init_lstm_trunk(rng, feat: int, hidden: int = LSTM_HIDDEN):
+    ks = jax.random.split(rng, 2)
+    return {"w_x": _glorot(ks[0], (feat, 4 * hidden)),
+            "w_h": _glorot(ks[1], (hidden, 4 * hidden)),
+            "b": jnp.zeros((4 * hidden,), jnp.float32)
+                 .at[hidden:2 * hidden].set(1.0)}
+
+
+def _lstm_trunk(params, x):
+    b, t, f = x.shape
+    hidden = params["w_h"].shape[0]
+
+    def cell(carry, x_t):
+        h, c = carry
+        z = x_t @ params["w_x"] + h @ params["w_h"] + params["b"]
+        i, fg, g, o = jnp.split(z, 4, axis=-1)
+        c = jax.nn.sigmoid(fg) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), None
+
+    h0 = jnp.zeros((b, hidden), x.dtype)
+    (h, _), _ = jax.lax.scan(cell, (h0, h0), jnp.moveaxis(x, 1, 0))
+    return h
+
+
+def _init_cnn_trunk(rng, in_shape, channels: int = 32):
+    h, w, c = in_shape
+    ph, pw = (h - 4) // 2, (w - 4) // 2
+    return {"conv_w": 0.1 * jax.random.normal(rng, (5, 5, c, channels)),
+            "conv_b": jnp.zeros((channels,), jnp.float32),
+            "_out": jnp.zeros((ph * pw * channels,), jnp.float32)}  # dim tag
+
+
+def _cnn_trunk(params, x):
+    y = jax.lax.conv_general_dilated(
+        x, params["conv_w"], (1, 1), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + params["conv_b"]
+    y = jax.nn.relu(y)
+    y = jax.lax.reduce_window(y, -jnp.inf, jax.lax.max,
+                              (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    return y.reshape(y.shape[0], -1)
+
+
+def _resample_time(x: np.ndarray, t_common: int) -> np.ndarray:
+    """Nearest-index resample of [N, T, F] to [N, t_common, F]."""
+    t = x.shape[1]
+    idx = np.linspace(0, t - 1, t_common).round().astype(int)
+    return x[:, idx, :]
+
+
+# ---------------------------------------------------------------------------
+# holistic model (data-level / feature-level)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class BaselineArch:
+    name: str            # flfd | mmfed | fedmultimodal | flash | harmony
+    fusion_level: str    # data | feature
+    upload: str          # full | random_component | trunks_only
+
+
+BASELINES: Dict[str, BaselineArch] = {
+    "flfd": BaselineArch("flfd", "data", "full"),
+    "mmfed": BaselineArch("mmfed", "feature", "full"),
+    "fedmultimodal": BaselineArch("fedmultimodal", "feature_mean", "full"),
+    "flash": BaselineArch("flash", "feature", "random_component"),
+    "harmony": BaselineArch("harmony", "feature", "trunks_only"),
+}
+
+
+def init_holistic(rng, spec: DatasetSpec, arch: BaselineArch,
+                  reduced: bool = True) -> Dict:
+    c = spec.num_classes
+    image = spec.modalities[0].kind == "image"
+    ks = jax.random.split(rng, len(spec.modalities) + 1)
+    if arch.fusion_level == "data":
+        if image:
+            ch = sum(m.shape[-1] for m in spec.modalities)
+            h, w, _ = spec.modalities[0].shape
+            trunk = _init_cnn_trunk(ks[0], (h, w, ch))
+            feat_dim = trunk["_out"].shape[0]
+        else:
+            f_total = sum(m.feature_shape(reduced)[-1]
+                          for m in spec.modalities)
+            trunk = _init_lstm_trunk(ks[0], f_total)
+            feat_dim = LSTM_HIDDEN
+        return {"trunk": trunk,
+                "head": {"w": _glorot(ks[-1], (feat_dim, c)),
+                         "b": jnp.zeros((c,), jnp.float32)}}
+    # feature-level
+    trunks, dims = {}, 0
+    for i, m in enumerate(spec.modalities):
+        if m.kind == "image":
+            trunks[m.name] = _init_cnn_trunk(ks[i], m.shape)
+            dims += trunks[m.name]["_out"].shape[0]
+        else:
+            trunks[m.name] = _init_lstm_trunk(
+                ks[i], m.feature_shape(reduced)[-1])
+            dims += LSTM_HIDDEN
+    if arch.name == "fedmultimodal":
+        dims = (trunks[spec.modalities[0].name]["_out"].shape[0]
+                if image else LSTM_HIDDEN)      # mean-pool over modalities
+    return {"trunks": trunks,
+            "head": {"w": _glorot(ks[-1], (dims, c)),
+                     "b": jnp.zeros((c,), jnp.float32)}}
+
+
+def holistic_forward(params, batch: Dict[str, jnp.ndarray],
+                     modality_names: Tuple[str, ...], fusion_level: str):
+    if fusion_level == "data":
+        x = batch["__concat__"]
+        feats = (_cnn_trunk(params["trunk"], x)
+                 if "conv_w" in params["trunk"]
+                 else _lstm_trunk(params["trunk"], x))
+    else:
+        cols = []
+        for m in modality_names:
+            x = batch[m]
+            tr = params["trunks"][m]
+            cols.append(_cnn_trunk(tr, x) if "conv_w" in tr
+                        else _lstm_trunk(tr, x))
+        feats = (sum(cols) / len(cols)) if fusion_level == "feature_mean" \
+            else jnp.concatenate(cols, axis=-1)
+    return feats @ params["head"]["w"] + params["head"]["b"]
+
+
+def _prep_batch(data: ClientData, spec: DatasetSpec, idx: np.ndarray,
+                fusion_level: str, reduced: bool = True):
+    """Zero-pads missing modalities; data-level concatenation on features."""
+    out: Dict[str, jnp.ndarray] = {}
+    n = len(idx)
+    if fusion_level == "data":
+        image = spec.modalities[0].kind == "image"
+        if image:
+            parts = []
+            for m in spec.modalities:
+                x = data.modalities.get(m.name)
+                parts.append(x[idx] if x is not None
+                             else np.zeros((n,) + m.shape, np.float32))
+            out["__concat__"] = jnp.asarray(np.concatenate(parts, axis=-1))
+        else:
+            t_common = max(m.feature_shape(reduced)[0]
+                           for m in spec.modalities)
+            parts = []
+            for m in spec.modalities:
+                shape = m.feature_shape(reduced)
+                x = data.modalities.get(m.name)
+                arr = x[idx] if x is not None \
+                    else np.zeros((n,) + shape, np.float32)
+                parts.append(_resample_time(arr, t_common))
+            out["__concat__"] = jnp.asarray(np.concatenate(parts, axis=-1))
+        return out
+    for m in spec.modalities:
+        shape = m.shape if m.kind == "image" else m.feature_shape(reduced)
+        x = data.modalities.get(m.name)
+        out[m.name] = jnp.asarray(
+            x[idx] if x is not None else np.zeros((n,) + shape, np.float32))
+    return out
+
+
+def _holistic_loss(params, batch, y, modality_names, fusion_level):
+    logits = holistic_forward(params, batch, modality_names, fusion_level)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def _tree_bytes(tree) -> int:
+    return sum(int(np.prod(x.shape)) * 4 for x in jax.tree.leaves(tree))
+
+
+def run_baseline(name: str, dataset: str, scenario: str = "natural",
+                 cfg: Optional[MFedMCConfig] = None, *,
+                 verbose: bool = False, reduced: bool = True,
+                 client_datasets: Optional[List[ClientData]] = None,
+                 allowed_full_upload: Optional[Sequence[int]] = None,
+                 **partition_kw) -> RunHistory:
+    """Run a SOTA baseline under the same protocol/ledger as MFedMC.
+
+    ``allowed_full_upload`` (Fig. 8): for end-to-end baselines (flfd/mmfed/
+    fedmultimodal) only these client ids can upload; FLASH/Harmony clients
+    upload components subject to the same cap implicitly (they always can).
+    """
+    arch = BASELINES[name]
+    cfg = cfg or MFedMCConfig()
+    spec = get_dataset_spec(dataset)
+    if client_datasets is None:
+        from repro.data.partition import make_federation
+        client_datasets = make_federation(dataset, scenario, seed=cfg.seed,
+                                          reduced=reduced, **partition_kw)
+    client_datasets = [d for d in client_datasets if d.num_samples > 1]
+    splits = [d.split(0.8, seed=cfg.seed) for d in client_datasets]
+    rng = np.random.default_rng(cfg.seed)
+    rngs = jax.random.split(jax.random.key(cfg.seed), 1)[0]
+
+    global_params = init_holistic(rngs, spec, arch, reduced)
+    local_params = [jax.tree.map(jnp.asarray, global_params)
+                    for _ in client_datasets]
+    loss_grad = jax.jit(jax.value_and_grad(_holistic_loss),
+                        static_argnames=("modality_names", "fusion_level"))
+
+    ledger = CommLedger()
+    history = RunHistory()
+    image = spec.modalities[0].kind == "image"
+    lr = 0.01 if image else cfg.lr_encoder
+
+    component_names = (["head"] + [f"trunks/{m}" for m in spec.modality_names]
+                       if arch.fusion_level == "feature" else ["head", "trunk"])
+
+    for t in range(1, cfg.rounds + 1):
+        if cfg.availability < 1.0:
+            active = [i for i in range(len(client_datasets))
+                      if rng.random() < cfg.availability] or [0]
+        else:
+            active = list(range(len(client_datasets)))
+        # ---- local training ----
+        for i in active:
+            train, _ = splits[i]
+            p = local_params[i]
+            n = train.num_samples
+            for _ in range(cfg.local_epochs):
+                order = rng.permutation(n)
+                for s in range(0, n, cfg.batch_size):
+                    idx = order[s:s + cfg.batch_size]
+                    if len(idx) == 0:
+                        continue
+                    batch = _prep_batch(train, spec, idx, arch.fusion_level,
+                                        reduced)
+                    y = jnp.asarray(train.labels[idx])
+                    _, grads = loss_grad(
+                        p, batch, y, modality_names=spec.modality_names,
+                        fusion_level=arch.fusion_level)
+                    p = jax.tree.map(lambda a, g: a - lr * g, p, grads)
+            local_params[i] = p
+
+        # ---- uploads ----
+        weights, contribs = [], []
+        if arch.upload == "random_component":            # FLASH
+            # per-component accumulation
+            comp_acc: Dict[str, List[Tuple]] = {}
+            for i in active:
+                comp = component_names[rng.integers(len(component_names))]
+                sub = _get_component(local_params[i], comp)
+                comp_acc.setdefault(comp, []).append(
+                    (sub, splits[i][0].num_samples))
+                ledger.record(_tree_bytes(sub))
+            for comp, items in comp_acc.items():
+                w = np.array([n for _, n in items], np.float64)
+                w /= w.sum()
+                avg = jax.tree.map(
+                    lambda *xs: sum(wi * x for wi, x in zip(w, xs)),
+                    *[s for s, _ in items])
+                _set_component(global_params, comp, avg)
+        else:
+            upl = active
+            if allowed_full_upload is not None and arch.upload == "full":
+                upl = [i for i in active
+                       if client_datasets[i].client_id in allowed_full_upload]
+            for i in upl:
+                if arch.upload == "trunks_only":          # Harmony
+                    sub = {"trunks": local_params[i]["trunks"]}
+                else:
+                    sub = {k: v for k, v in local_params[i].items()
+                           if k in ("trunk", "trunks", "head")}
+                contribs.append(sub)
+                weights.append(splits[i][0].num_samples)
+                ledger.record(_tree_bytes(sub))
+            if contribs:
+                w = np.array(weights, np.float64)
+                w /= w.sum()
+                avg = jax.tree.map(
+                    lambda *xs: sum(wi * x for wi, x in zip(w, xs)), *contribs)
+                for k, v in avg.items():
+                    global_params[k] = v
+
+        # ---- broadcast ----
+        for i in active:
+            for k in ("trunk", "trunks", "head"):
+                if k in global_params and \
+                        not (arch.upload == "trunks_only" and k == "head"):
+                    local_params[i][k] = global_params[k]
+
+        # ---- evaluate ----
+        tot, acc_sum, loss_sum = 0, 0.0, 0.0
+        for i, (train, test) in enumerate(splits):
+            batch = _prep_batch(test, spec, np.arange(test.num_samples),
+                                arch.fusion_level, reduced)
+            y = jnp.asarray(test.labels)
+            logits = holistic_forward(local_params[i], batch,
+                                      spec.modality_names,
+                                      arch.fusion_level)
+            acc = float(jnp.mean((jnp.argmax(logits, -1) == y)))
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+            loss = float(-jnp.mean(jnp.take_along_axis(logp, y[:, None], 1)))
+            n = test.num_samples
+            tot += n
+            acc_sum += acc * n
+            loss_sum += loss * n
+        acc, loss = acc_sum / tot, loss_sum / tot
+        history.records.append(RoundRecord(t, acc, loss, ledger.megabytes,
+                                           [], {}))
+        if verbose:
+            print(f"[{name} round {t:3d}] acc={acc:.4f} "
+                  f"comm={ledger.megabytes:.2f}MB")
+        if cfg.comm_budget_mb is not None and \
+                ledger.megabytes >= cfg.comm_budget_mb:
+            break
+    return history
+
+
+def _get_component(params, comp: str):
+    if "/" in comp:
+        a, b = comp.split("/")
+        return params[a][b]
+    return params[comp]
+
+
+def _set_component(params, comp: str, value):
+    if "/" in comp:
+        a, b = comp.split("/")
+        params[a][b] = value
+    else:
+        params[comp] = value

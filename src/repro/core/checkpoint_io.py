@@ -1,0 +1,49 @@
+"""Federation checkpointing: persist/restore the server's global encoder
+bank + per-client recency state so a run can resume mid-federation.
+
+The fusion modules are strictly local (never uploaded) and therefore NOT in
+the server checkpoint — exactly the paper's privacy/personalization
+boundary; resuming on a new client population re-personalizes from the
+restored global encoders.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.core.client import Client
+
+
+def save_federation(path: str, server_encoders: Dict[str, Dict],
+                    clients: Optional[List[Client]] = None,
+                    round_idx: int = 0) -> None:
+    meta = {"round": round_idx,
+            "modalities": sorted(server_encoders)}
+    if clients is not None:
+        meta["recency"] = {str(c.client_id): c.recency.last_upload
+                           for c in clients}
+    save_pytree(path, {"server": server_encoders}, meta=meta)
+
+
+def load_federation(path: str, clients: Optional[List[Client]] = None
+                    ) -> Tuple[Dict[str, Dict], int]:
+    """Returns (server_encoders, round_idx); restores client recency and
+    deploys the global encoders when ``clients`` is given."""
+    flat, meta = load_pytree(path)
+    server: Dict[str, Dict] = {}
+    for key, arr in flat.items():
+        parts = key.split("/")
+        if parts[0] != "server":
+            continue
+        server.setdefault(parts[1], {})[parts[2]] = arr
+    if clients is not None:
+        rec = (meta or {}).get("recency", {})
+        for c in clients:
+            saved = rec.get(str(c.client_id))
+            if saved:
+                c.recency.last_upload.update(
+                    {m: int(t) for m, t in saved.items()
+                     if m in c.recency.last_upload})
+            for m, enc in server.items():
+                c.install_global(m, enc)
+    return server, int((meta or {}).get("round", 0))

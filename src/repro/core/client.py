@@ -1,0 +1,189 @@
+"""Client-side state and local training (Algorithm 1: Local Learning,
+Stage-1/Stage-2 fusion training, Shapley evaluation inputs).
+
+A :class:`Client` owns: its local train/test split, one encoder per available
+modality, the strictly-local fusion module, a recency tracker, and the cached
+per-modality losses the server uses for client selection.
+
+Encoders for every modality are trained in parallel conceptually; on the CPU
+simulator they run sequentially but each step is jit-compiled. The fusion
+module consumes *definitive predicted categories* (one-hot, §4.2) by default.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import encoders as enc
+from repro.core import fusion as fus
+from repro.core.selection import RecencyTracker
+from repro.core.shapley import exact_shapley
+from repro.data.registry import DatasetSpec
+from repro.data.synthetic import ClientData
+
+
+@dataclass
+class Client:
+    client_id: int
+    spec: DatasetSpec
+    train: ClientData
+    test: ClientData
+    encoders: Dict[str, Dict]            # modality -> encoder params
+    fusion: Dict                          # fusion MLP params (local only)
+    recency: RecencyTracker
+    losses: Dict[str, float] = field(default_factory=dict)
+    fusion_input: str = "onehot"          # onehot | probs
+
+    # ------------------------------------------------------------------
+    @property
+    def modality_names(self) -> Tuple[str, ...]:
+        return tuple(sorted(self.encoders))
+
+    @property
+    def all_modalities(self) -> Tuple[str, ...]:
+        return self.spec.modality_names
+
+    def avail_mask(self) -> np.ndarray:
+        return np.array([1.0 if m in self.encoders else 0.0
+                         for m in self.all_modalities], np.float32)
+
+    def num_samples(self, modality: str) -> int:
+        return self.train.num_samples if modality in self.encoders else 0
+
+    # ------------------------------------------------------------------
+    def _batches(self, data: ClientData, modality: str, batch_size: int,
+                 rng: np.random.Generator):
+        x = data.modalities[modality]
+        y = data.labels
+        n = len(y)
+        idx = rng.permutation(n)
+        for i in range(0, n, batch_size):
+            sel = idx[i:i + batch_size]
+            if len(sel) == 0:
+                continue
+            yield jnp.asarray(x[sel]), jnp.asarray(y[sel])
+
+    def train_encoders(self, epochs: int, lr: float, batch_size: int,
+                       rng: np.random.Generator) -> Dict[str, float]:
+        """E epochs of SGD per modality encoder (Eq. 6). Returns and caches
+        the final-epoch mean loss ℓ_m^k per modality."""
+        out: Dict[str, float] = {}
+        for m in self.modality_names:
+            params = self.encoders[m]
+            last = 0.0
+            for _ in range(epochs):
+                losses = []
+                for xb, yb in self._batches(self.train, m, batch_size, rng):
+                    params, loss = enc.encoder_sgd_step(params, xb, yb, lr=lr)
+                    losses.append(float(loss))
+                last = float(np.mean(losses)) if losses else 0.0
+            self.encoders[m] = params
+            out[m] = last
+        self.losses = out
+        return out
+
+    # ------------------------------------------------------------------
+    def predictions(self, data: ClientData) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Stacked per-modality predictions for the fusion module.
+
+        Returns (preds [B, M, C] with zeros at absent modalities,
+        labels [B])."""
+        c = self.spec.num_classes
+        b = data.num_samples
+        cols = []
+        for m in self.all_modalities:
+            if m in self.encoders and m in data.modalities:
+                x = jnp.asarray(data.modalities[m])
+                if self.fusion_input == "probs":
+                    cols.append(enc.encoder_predict_probs(self.encoders[m], x))
+                else:
+                    cols.append(enc.encoder_predict(self.encoders[m], x))
+            else:
+                cols.append(jnp.zeros((b, c), jnp.float32))
+        return jnp.stack(cols, axis=1), jnp.asarray(data.labels)
+
+    def train_fusion(self, epochs: int, lr: float, batch_size: int,
+                     rng: np.random.Generator) -> float:
+        """Train ω^k with frozen encoders (Stage #1 / Stage #2)."""
+        preds, y = self.predictions(self.train)
+        mask = jnp.asarray(self.avail_mask())
+        n = preds.shape[0]
+        last = 0.0
+        for _ in range(epochs):
+            idx = rng.permutation(n)
+            losses = []
+            for i in range(0, n, batch_size):
+                sel = jnp.asarray(idx[i:i + batch_size])
+                self.fusion, loss = fus.fusion_sgd_step(
+                    self.fusion, preds[sel], mask, y[sel], lr=lr)
+                losses.append(float(loss))
+            last = float(np.mean(losses)) if losses else 0.0
+        return last
+
+    # ------------------------------------------------------------------
+    def shapley_values(self, background_size: int = 50,
+                       eval_size: int = 32,
+                       rng: Optional[np.random.Generator] = None
+                       ) -> np.ndarray:
+        """Exact interventional Shapley φ per modality (absent → 0)."""
+        rng = rng or np.random.default_rng(self.client_id)
+        preds, y = self.predictions(self.train)
+        n = preds.shape[0]
+        bg_idx = jnp.asarray(rng.choice(n, size=min(background_size, n),
+                                        replace=False))
+        ev_idx = jnp.asarray(rng.choice(n, size=min(eval_size, n),
+                                        replace=False))
+        phi = exact_shapley(
+            self.fusion, preds[ev_idx], preds[bg_idx],
+            jnp.asarray(self.avail_mask()), y[ev_idx],
+            num_modalities=len(self.all_modalities))
+        full = np.asarray(phi)
+        # report only over available modalities, in name order
+        return np.array([full[self.all_modalities.index(m)]
+                         for m in self.modality_names])
+
+    def encoder_sizes(self, bits: int = 32) -> np.ndarray:
+        return np.array([enc.encoder_bytes(self.encoders[m], bits)
+                         for m in self.modality_names], np.float64)
+
+    # ------------------------------------------------------------------
+    def evaluate(self) -> Tuple[float, float, int]:
+        """(fusion test loss, fusion test accuracy, n_test)."""
+        preds, y = self.predictions(self.test)
+        loss, acc = fus.fusion_eval(self.fusion, preds,
+                                    jnp.asarray(self.avail_mask()), y)
+        return float(loss), float(acc), int(y.shape[0])
+
+    def evaluate_encoder(self, modality: str) -> Tuple[float, float]:
+        x = jnp.asarray(self.test.modalities[modality])
+        y = jnp.asarray(self.test.labels)
+        loss, acc = enc.encoder_eval(self.encoders[modality], x, y)
+        return float(loss), float(acc)
+
+    def install_global(self, modality: str, params: Dict) -> None:
+        """Download + deploy a global encoder (Local Deploying)."""
+        if modality in self.encoders:
+            self.encoders[modality] = jax.tree.map(jnp.asarray, params)
+
+
+def make_client(client_id: int, spec: DatasetSpec, data: ClientData,
+                *, seed: int = 0, split: float = 0.8,
+                fusion_input: str = "onehot") -> Client:
+    train, test = data.split(split, seed=seed)
+    rng = jax.random.key(seed * 100003 + client_id)
+    ks = jax.random.split(rng, len(data.modality_names) + 1)
+    encs = {}
+    for i, m in enumerate(data.modality_names):
+        shape = spec.modality(m).feature_shape(True)
+        # actual array shape wins (reduced/full agnostic)
+        shape = data.modalities[m].shape[1:]
+        encs[m] = enc.init_encoder(ks[i], shape, spec.num_classes)
+    fusion = fus.init_fusion(ks[-1], len(spec.modality_names),
+                             spec.num_classes)
+    return Client(client_id, spec, train, test, encs, fusion,
+                  RecencyTracker(tuple(sorted(data.modality_names))),
+                  fusion_input=fusion_input)

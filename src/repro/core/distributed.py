@@ -1,0 +1,150 @@
+"""MFedMC on the production mesh — the datacenter adaptation (DESIGN.md §3).
+
+The paper's federation is IoT-scale (10 Mbps uplinks). On a TPU pod the same
+algorithm becomes a *sparse, masked cross-device reduction*:
+
+- the K-client population is stacked on a leading axis and sharded over the
+  mesh's data-parallel axes (``('pod', 'data')`` multi-pod);
+- each client's E local epochs run as a ``lax.scan`` of vmapped SGD steps —
+  no cross-client communication;
+- Eq. 21's weighted FedAvg is ``psum(select·weight·θ) / psum(select·weight)``
+  over the client axes — the 0/1 ``select`` mask is the joint
+  modality+client selection, so *unselected clients contribute zero bytes of
+  gradient-carrying payload*: the collective's useful traffic shrinks by
+  exactly the paper's γ/M̄·δ factor (the roofline benchmark measures this);
+- deployment (encoder download) is the broadcast half of the same collective:
+  clients that own the modality overwrite their slot with the aggregate.
+
+``make_federated_round`` returns a jit-able function suitable for
+``.lower().compile()`` on the production mesh (see launch/dryrun.py
+--mode=federated and benchmarks/roofline_federated.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.encoders import encoder_forward, encoder_loss
+
+
+def _client_axes(mesh) -> Tuple[str, ...]:
+    """Mesh axes the client population is sharded over."""
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def make_federated_round(mesh, *, local_steps: int, lr: float = 0.1,
+                         loss_fn: Callable = encoder_loss,
+                         hierarchical: bool = False,
+                         uplink_dtype=None):
+    """Build the jit-able one-round function for one modality's encoders.
+
+    Signature of the returned fn:
+        (stacked_params,            # pytree with leading K axis
+         batches,                   # {x: [K, S, B, ...], y: [K, S, B]}
+         select,                    # [K] float 0/1 — joint selection mask
+         weight)                    # [K] float — |D_m^k| sample counts
+        -> (new_stacked_params, aggregated_params, per_client_loss [K])
+
+    ``hierarchical=True`` (beyond-paper): a within-pod FedAvg runs after
+    every local step over the cheap intra-pod ICI, and the selective
+    (masked) aggregation runs once over the expensive cross-pod axis.
+    """
+    caxes = _client_axes(mesh)
+    has_pod = "pod" in mesh.shape
+
+    def sgd_epoch(params, batch_x, batch_y):
+        def step(p, xy):
+            x, y = xy
+            loss, g = jax.value_and_grad(loss_fn)(p, x, y)
+            return jax.tree.map(lambda a, b: a - lr * b, p, g), loss
+
+        return jax.lax.scan(step, params, (batch_x, batch_y))
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(caxes), P(caxes), P(caxes), P(caxes)),
+        out_specs=(P(caxes), P(), P(caxes)),
+        check_rep=False)
+    def round_fn(params, batches, select, weight):
+        # ---- local learning: scan(E·steps) of vmapped per-client SGD ----
+        def one_client(p, bx, by):
+            if hierarchical and has_pod:
+                def step(pp, xy):
+                    x, y = xy
+                    loss, g = jax.value_and_grad(loss_fn)(pp, x, y)
+                    pp = jax.tree.map(lambda a, b: a - lr * b, pp, g)
+                    # within-pod sync every step (cheap ICI axis)
+                    pp = jax.tree.map(
+                        lambda a: jax.lax.pmean(a, "data"), pp)
+                    return pp, loss
+                return jax.lax.scan(step, p, (bx, by))
+            return sgd_epoch(p, bx, by)
+
+        new_params, losses = jax.vmap(one_client)(
+            params, batches["x"], batches["y"])
+        per_client_loss = jnp.mean(losses, axis=-1)
+
+        # ---- Eq. 21 as a masked sparse all-reduce over client axes ----
+        w = (select * weight)[:, None]                      # [K/shard, 1]
+        axes = caxes if not (hierarchical and has_pod) else ("pod",)
+
+        def allreduce(x):
+            num = jnp.sum(w.reshape(w.shape[:1] + (1,) * (x.ndim - 1)) * x,
+                          axis=0, keepdims=False)
+            if uplink_dtype is not None:
+                # §4.10 composition: quantize the uplink payload (the paper's
+                # 4/8-bit upload becomes a reduced-precision all-reduce)
+                num = num.astype(uplink_dtype)
+            for a in axes:
+                num = jax.lax.psum(num, a)
+            return num.astype(jnp.float32)
+
+        denom = jnp.sum(w[:, 0])
+        for a in axes:
+            denom = jax.lax.psum(denom, a)
+        agg = jax.tree.map(lambda x: allreduce(x) / jnp.maximum(denom, 1e-8),
+                           new_params)
+
+        # ---- deployment: selected aggregate broadcast into every slot ----
+        deployed = jax.tree.map(
+            lambda cur, g: jnp.where(
+                jnp.reshape(denom > 0, (1,) * cur.ndim),
+                jnp.broadcast_to(g[None], cur.shape), cur),
+            new_params, agg)
+        return deployed, agg, per_client_loss
+
+    return round_fn
+
+
+def federated_input_specs(num_clients: int, steps: int, batch: int,
+                          feature_shape: Tuple[int, ...],
+                          param_spec) -> Dict:
+    """ShapeDtypeStruct stand-ins for the dry-run (no allocation)."""
+    S = jax.ShapeDtypeStruct
+    stacked = jax.tree.map(
+        lambda s: S((num_clients,) + s.shape, s.dtype), param_spec)
+    return {
+        "params": stacked,
+        "batches": {
+            "x": S((num_clients, steps, batch) + tuple(feature_shape),
+                   jnp.float32),
+            "y": S((num_clients, steps, batch), jnp.int32),
+        },
+        "select": S((num_clients,), jnp.float32),
+        "weight": S((num_clients,), jnp.float32),
+    }
+
+
+def federated_shardings(mesh, specs):
+    caxes = _client_axes(mesh)
+
+    def shard(leaf):
+        return NamedSharding(mesh, P(caxes))
+
+    return jax.tree.map(shard, specs)

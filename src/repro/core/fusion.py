@@ -1,0 +1,82 @@
+"""Local fusion module ω^k (Eq. 5) — strictly client-local, never uploaded.
+
+The fusion module consumes the per-modality predictions Ŷ^k = {ŷ_m} (one-hot
+categories by default, §4.2) concatenated with a presence mask, and emits the
+final class logits. The paper uses a 10-tree Random Forest to make TreeSHAP
+cheap; decision forests are neither differentiable nor TPU-idiomatic, so we
+use a small 2-layer MLP and compute *exact interventional Shapley values* by
+enumerating modality subsets (see ``repro.core.shapley`` and DESIGN.md §3).
+
+Masking convention (interventional feature perturbation): when modality m is
+excluded from a coalition, its slot is replaced by a background value (a
+sample from the client's background dataset), NOT zeroed — this is the
+"interventional" expectation that TreeSHAP-with-background computes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+FUSION_HIDDEN = 64
+
+
+def _glorot(rng, shape):
+    scale = jnp.sqrt(2.0 / (shape[-2] + shape[-1]))
+    return scale * jax.random.normal(rng, shape, jnp.float32)
+
+
+def init_fusion(rng, num_modalities: int, num_classes: int,
+                hidden: int = FUSION_HIDDEN) -> Dict:
+    """Fusion MLP over flattened [M, C] prediction block + [M] presence mask."""
+    in_dim = num_modalities * num_classes + num_modalities
+    ks = jax.random.split(rng, 2)
+    return {
+        "w1": _glorot(ks[0], (in_dim, hidden)),
+        "b1": jnp.zeros((hidden,), jnp.float32),
+        "w2": _glorot(ks[1], (hidden, num_classes)),
+        "b2": jnp.zeros((num_classes,), jnp.float32),
+    }
+
+
+def fusion_forward(params, preds, mask):
+    """preds: [B, M, C] per-modality predictions; mask: [M] or [B, M] float
+    presence (1 = modality available). Returns logits [B, C]."""
+    b, m, c = preds.shape
+    if mask.ndim == 1:
+        mask = jnp.broadcast_to(mask[None], (b, m))
+    x = jnp.concatenate([(preds * mask[..., None]).reshape(b, m * c),
+                         mask.astype(jnp.float32)], axis=-1)
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def fusion_loss(params, preds, mask, y):
+    logits = fusion_forward(params, preds, mask)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+@functools.partial(jax.jit, static_argnames=("lr",))
+def fusion_sgd_step(params, preds, mask, y, lr: float = 0.1):
+    loss, grads = jax.value_and_grad(fusion_loss)(params, preds, mask, y)
+    return jax.tree.map(lambda p, g: p - lr * g, params, grads), loss
+
+
+@jax.jit
+def fusion_eval(params, preds, mask, y):
+    logits = fusion_forward(params, preds, mask)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+    acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+    return loss, acc
+
+
+def fusion_value(params, preds, mask, y):
+    """Coalition value v(S) used by Shapley: mean predicted probability of
+    the true class under presence-mask S (interventional masking happens in
+    the caller by substituting background predictions)."""
+    p = jax.nn.softmax(fusion_forward(params, preds, mask).astype(jnp.float32))
+    return jnp.mean(jnp.take_along_axis(p, y[:, None], axis=1))

@@ -1,0 +1,49 @@
+"""Uplink quantization (§4.10): uniform affine per-tensor quantization of
+encoder parameters to 4 or 8 bits, applied on upload and dequantized at the
+server before aggregation. Composes with modality/client selection — the
+ledger then counts ``bits/8`` bytes per parameter.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.encoders import encoder_param_arrays
+
+
+def quantize_tensor(x: jnp.ndarray, bits: int) -> Tuple[jnp.ndarray, float, float]:
+    """Symmetric-range affine quantization. Returns (codes, scale, zero)."""
+    levels = 2 ** bits - 1
+    lo = jnp.min(x)
+    hi = jnp.max(x)
+    scale = jnp.maximum((hi - lo) / levels, 1e-12)
+    codes = jnp.clip(jnp.round((x - lo) / scale), 0, levels)
+    return codes.astype(jnp.uint8 if bits <= 8 else jnp.int32), \
+        float(scale), float(lo)
+
+
+def dequantize_tensor(codes: jnp.ndarray, scale: float, zero: float):
+    return codes.astype(jnp.float32) * scale + zero
+
+
+def quantize_encoder(params: Dict, bits: int) -> Dict:
+    """Quantize every numeric leaf."""
+    out: Dict = {"bits": bits}
+    for k, v in encoder_param_arrays(params).items():
+        codes, scale, zero = quantize_tensor(v, bits)
+        out[k] = {"codes": codes, "scale": scale, "zero": zero}
+    return out
+
+
+def dequantize_encoder(q: Dict) -> Dict:
+    return {k: dequantize_tensor(v["codes"], v["scale"], v["zero"])
+            for k, v in q.items() if k != "bits"}
+
+
+def quantized_roundtrip(params: Dict, bits: int) -> Dict:
+    """What the server receives after a ``bits``-bit uplink."""
+    if bits >= 32:
+        return params
+    return dequantize_encoder(quantize_encoder(params, bits))

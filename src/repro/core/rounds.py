@@ -1,0 +1,254 @@
+"""MFedMC federation loop — Algorithm 1, with every ablation knob from §4.
+
+``run_federation`` executes T communication rounds:
+
+  1. Local learning: each (available) client trains its modality encoders for
+     E epochs, then Stage-#1 trains its fusion module (frozen encoders).
+  2. Modality selection (§3.2): Shapley impact + encoder size + recency →
+     composite priority → top-γ per client. Strategies: 'priority' (paper),
+     'random', 'all' (upload every encoder — the no-modality-selection
+     ablation), 'fixed:<name>' (heterogeneous-network tiers).
+  3. Client selection (§3.3): server keeps ⌈δK⌉ clients by
+     'low_loss' (paper) | 'high_loss' | 'random' | 'all' | 'loss_recency'.
+  4. Server aggregation (Eq. 21) per modality; ledger records uplink bytes
+     (optionally 4/8-bit quantized, §4.10).
+  5. Local deploying: global encoders installed, Stage-#2 fusion fine-tune.
+
+Returns a :class:`RunHistory` with per-round accuracy, cumulative MB, and
+mean Shapley per modality (Fig. 5's data).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core import encoders as enc
+from repro.core.aggregation import CommLedger, aggregate_modality
+from repro.core.client import Client, make_client
+from repro.core.quantize import quantized_roundtrip
+from repro.core.selection import (RecencyTracker, joint_select,
+                                  modality_priority, select_clients,
+                                  select_top_gamma)
+from repro.data.registry import DatasetSpec, get_dataset_spec
+from repro.data.synthetic import ClientData
+
+
+@dataclass
+class MFedMCConfig:
+    rounds: int = 20
+    local_epochs: int = 5                  # E
+    lr_encoder: float = 0.1                # LSTM lr (CNN uses 0.01, §4.2)
+    lr_fusion: float = 0.1
+    batch_size: int = 32
+    gamma: int = 1                         # modality uploads per client
+    delta: float = 0.2                     # client participation ratio
+    alpha_s: float = 1 / 3
+    alpha_c: float = 1 / 3
+    alpha_r: float = 1 / 3
+    modality_strategy: str = "priority"    # priority | random | all
+    client_strategy: str = "low_loss"      # low_loss | high_loss | random |
+                                           # all | loss_recency
+    loss_weight: float = 1.0               # loss_recency blend (§4.8)
+    background_size: int = 50              # |D'| for Shapley
+    eval_size: int = 32
+    quantize_bits: int = 32                # 32 = no quantization
+    availability: float = 1.0              # client availability rate (§4.9)
+    # per-client uplink restriction: client id -> allowed modality names
+    allowed_modalities: Optional[Dict[int, Set[str]]] = None
+    comm_budget_mb: Optional[float] = None # stop once exceeded
+    fusion_input: str = "onehot"
+    seed: int = 0
+
+
+@dataclass
+class RoundRecord:
+    round: int
+    accuracy: float
+    mean_loss: float
+    comm_mb: float
+    uploads: List[Tuple[int, str]]
+    shapley: Dict[str, float]              # mean |φ| per modality this round
+
+
+@dataclass
+class RunHistory:
+    records: List[RoundRecord] = field(default_factory=list)
+
+    @property
+    def accuracies(self) -> np.ndarray:
+        return np.array([r.accuracy for r in self.records])
+
+    @property
+    def comm_mb(self) -> np.ndarray:
+        return np.array([r.comm_mb for r in self.records])
+
+    def accuracy_under_budget(self, budget_mb: float) -> float:
+        """Best accuracy reached with cumulative uplink ≤ budget (Table 2i)."""
+        ok = [r.accuracy for r in self.records if r.comm_mb <= budget_mb]
+        return max(ok) if ok else float("nan")
+
+    def overhead_to_target(self, target_acc: float) -> float:
+        """MB spent when accuracy first reaches target (Table 2ii); NaN=never."""
+        for r in self.records:
+            if r.accuracy >= target_acc:
+                return r.comm_mb
+        return float("nan")
+
+    def final_accuracy(self) -> float:
+        return self.records[-1].accuracy if self.records else float("nan")
+
+
+def _weighted_accuracy(clients: Sequence[Client]) -> Tuple[float, float]:
+    tot, acc_sum, loss_sum = 0, 0.0, 0.0
+    for c in clients:
+        loss, acc, n = c.evaluate()
+        tot += n
+        acc_sum += acc * n
+        loss_sum += loss * n
+    return acc_sum / max(tot, 1), loss_sum / max(tot, 1)
+
+
+def build_federation(dataset: str, scenario: str = "natural", *,
+                     cfg: Optional[MFedMCConfig] = None, seed: int = 0,
+                     reduced: bool = True,
+                     client_datasets: Optional[List[ClientData]] = None,
+                     **partition_kw) -> Tuple[List[Client], DatasetSpec]:
+    from repro.data.partition import make_federation
+    spec = get_dataset_spec(dataset)
+    if client_datasets is None:
+        client_datasets = make_federation(dataset, scenario, seed=seed,
+                                          reduced=reduced, **partition_kw)
+    fusion_input = cfg.fusion_input if cfg else "onehot"
+    clients = [make_client(d.client_id, spec, d, seed=seed,
+                           fusion_input=fusion_input)
+               for d in client_datasets if d.num_samples > 1]
+    return clients, spec
+
+
+def run_federation(clients: List[Client], spec: DatasetSpec,
+                   cfg: MFedMCConfig, *, verbose: bool = False,
+                   server_encoders: Optional[Dict[str, Dict]] = None
+                   ) -> RunHistory:
+    rng = np.random.default_rng(cfg.seed)
+    ledger = CommLedger()
+    history = RunHistory()
+    # global encoder store (initialized lazily from the first upload)
+    server_encoders = server_encoders if server_encoders is not None else {}
+
+    for t in range(1, cfg.rounds + 1):
+        # -- client availability (§4.9) --------------------------------
+        if cfg.availability < 1.0:
+            avail = [c for c in clients if rng.random() < cfg.availability]
+            if not avail:
+                avail = [clients[rng.integers(len(clients))]]
+        else:
+            avail = clients
+
+        # -- local learning --------------------------------------------
+        for c in avail:
+            lr = cfg.lr_encoder
+            c.train_encoders(cfg.local_epochs, lr, cfg.batch_size, rng)
+            c.train_fusion(cfg.local_epochs, cfg.lr_fusion,
+                           cfg.batch_size, rng)      # Stage #1
+
+        # -- modality selection (§3.2) ----------------------------------
+        round_shapley: Dict[str, List[float]] = {}
+        choices: Dict[int, List[str]] = {}
+        for c in avail:
+            names = list(c.modality_names)
+            allowed = None
+            if cfg.allowed_modalities is not None:
+                allowed = cfg.allowed_modalities.get(c.client_id)
+                names = [m for m in names if allowed is None or m in allowed]
+            if not names:
+                continue
+            if cfg.modality_strategy == "all":
+                choices[c.client_id] = names
+            elif cfg.modality_strategy == "random":
+                g = min(cfg.gamma, len(names))
+                choices[c.client_id] = sorted(
+                    rng.choice(names, size=g, replace=False).tolist())
+            else:  # priority (paper)
+                phi = c.shapley_values(cfg.background_size, cfg.eval_size, rng)
+                phi_named = dict(zip(c.modality_names, phi))
+                for m, p in phi_named.items():
+                    round_shapley.setdefault(m, []).append(abs(float(p)))
+                sizes = c.encoder_sizes()
+                idx = [list(c.modality_names).index(m) for m in names]
+                rec = c.recency.recency_vector(names, t)
+                prio = modality_priority(
+                    np.array([phi[i] for i in idx]), sizes[idx], rec, t,
+                    cfg.alpha_s, cfg.alpha_c, cfg.alpha_r)
+                choices[c.client_id] = select_top_gamma(prio, names, cfg.gamma)
+
+        # -- client selection (§3.3) ------------------------------------
+        cands = [c for c in avail if c.client_id in choices]
+        if cfg.client_strategy == "all":
+            selected = [c.client_id for c in cands]
+        else:
+            # representative loss = min over the client's selected modalities
+            losses = {c.client_id: min(c.losses[m]
+                                       for m in choices[c.client_id])
+                      for c in cands}
+            crit = cfg.client_strategy
+            client_rec: Dict[int, int] = {}
+            if crit == "loss_recency":
+                for c in cands:
+                    client_rec[c.client_id] = t - 1 - max(
+                        c.recency.last_upload.values(), default=-1)
+            selected = select_clients(
+                losses, cfg.delta, criterion=crit, recency=client_rec,
+                loss_weight=cfg.loss_weight, rng=rng)
+
+        # -- upload + server aggregation (Eq. 21) ------------------------
+        by_id = {c.client_id: c for c in clients}
+        uploads: List[Tuple[int, str]] = []
+        per_modality: Dict[str, List[Tuple[Dict, int]]] = {}
+        for cid in selected:
+            c = by_id[cid]
+            for m in choices[cid]:
+                payload = quantized_roundtrip(c.encoders[m], cfg.quantize_bits)
+                per_modality.setdefault(m, []).append(
+                    (payload, c.train.num_samples))
+                ledger.record(enc.encoder_bytes(c.encoders[m],
+                                                cfg.quantize_bits))
+                uploads.append((cid, m))
+            c.recency.mark_uploaded(choices[cid], t)
+        for m, items in per_modality.items():
+            server_encoders[m] = aggregate_modality(
+                [p for p, _ in items], [n for _, n in items])
+
+        # -- local deploying + Stage #2 ----------------------------------
+        for c in avail:
+            for m in c.modality_names:
+                if m in server_encoders:
+                    c.install_global(m, server_encoders[m])
+            c.train_fusion(cfg.local_epochs, cfg.lr_fusion,
+                           cfg.batch_size, rng)      # Stage #2
+
+        # -- evaluate -----------------------------------------------------
+        acc, loss = _weighted_accuracy(clients)
+        ledger.rounds = t
+        history.records.append(RoundRecord(
+            t, acc, loss, ledger.megabytes, uploads,
+            {m: float(np.mean(v)) for m, v in round_shapley.items()}))
+        if verbose:
+            print(f"[round {t:3d}] acc={acc:.4f} loss={loss:.4f} "
+                  f"comm={ledger.megabytes:.3f}MB uploads={len(uploads)}")
+        if cfg.comm_budget_mb is not None and \
+                ledger.megabytes >= cfg.comm_budget_mb:
+            break
+    return history
+
+
+def run_mfedmc(dataset: str, scenario: str = "natural",
+               cfg: Optional[MFedMCConfig] = None, *, verbose: bool = False,
+               **partition_kw) -> RunHistory:
+    """One-call paper pipeline: build federation + run Algorithm 1."""
+    cfg = cfg or MFedMCConfig()
+    clients, spec = build_federation(dataset, scenario, cfg=cfg,
+                                     seed=cfg.seed, **partition_kw)
+    return run_federation(clients, spec, cfg, verbose=verbose)

@@ -1,0 +1,152 @@
+"""Joint modality and client selection (§3.2, §3.3) — Eqs. (9)–(20).
+
+Pure-numpy decision logic (runs on the simulation host; the tensors involved
+are M- and K-length vectors). The composite priority is
+
+    P_m = α_s · φ̃_m + α_c · (1 − |θ̃_m|) + α_r · T̃_m            (Eq. 13)
+
+with per-criterion min-max normalization (Eq. 12), top-γ modality selection
+(Eqs. 14–16), and server-side top-⌈δK⌉ lowest-loss client selection
+(Eqs. 17–19). ``joint_select`` composes the two (Eq. 20).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def minmax_normalize(x: np.ndarray) -> np.ndarray:
+    """Eq. 12 normalization; a constant vector maps to all-zeros."""
+    x = np.asarray(x, np.float64)
+    lo, hi = np.min(x), np.max(x)
+    if hi - lo < 1e-12:
+        return np.zeros_like(x)
+    return (x - lo) / (hi - lo)
+
+
+@dataclass
+class RecencyTracker:
+    """T_m^k = t − t_m^k − 1 (Eq. 11), per client.
+
+    ``last_upload[m]`` is the round at which modality m was last uploaded
+    (−1 = never, so T = t at round t: maximal staleness)."""
+    modality_names: Tuple[str, ...]
+    last_upload: Dict[str, int] = field(default_factory=dict)
+
+    def __post_init__(self):
+        for m in self.modality_names:
+            self.last_upload.setdefault(m, -1)
+
+    def recency(self, m: str, t: int) -> int:
+        return t - self.last_upload[m] - 1
+
+    def recency_vector(self, names: Sequence[str], t: int) -> np.ndarray:
+        return np.array([self.recency(m, t) for m in names], np.float64)
+
+    def mark_uploaded(self, names: Sequence[str], t: int) -> None:
+        for m in names:
+            self.last_upload[m] = t
+
+
+def modality_priority(shapley: np.ndarray, sizes: np.ndarray,
+                      recency: np.ndarray, t: int,
+                      alpha_s: float, alpha_c: float, alpha_r: float
+                      ) -> np.ndarray:
+    """Composite priority P_m (Eq. 13) from raw criteria.
+
+    shapley — φ_m (absolute values are taken here, Eq. 9)
+    sizes   — |θ_m| in bytes (Eq. 10)
+    recency — T_m (Eq. 11); normalized by the current round t (Eq. 12)
+    """
+    phi_n = minmax_normalize(np.abs(shapley))
+    size_n = minmax_normalize(sizes)
+    rec_n = np.asarray(recency, np.float64) / max(t, 1)
+    return alpha_s * phi_n + alpha_c * (1.0 - size_n) + alpha_r * rec_n
+
+
+def select_top_gamma(priority: np.ndarray, names: Sequence[str],
+                     gamma: int) -> List[str]:
+    """Top-γ priority modalities (Eqs. 14–15). Deterministic tie-break by
+    descending priority then name order."""
+    gamma = min(gamma, len(names))
+    order = np.argsort(-priority, kind="stable")
+    return [names[i] for i in order[:gamma]]
+
+
+def select_clients(losses: Dict[int, float], delta: float,
+                   *, criterion: str = "low_loss",
+                   recency: Optional[Dict[int, int]] = None,
+                   loss_weight: float = 1.0,
+                   rng: Optional[np.random.Generator] = None) -> List[int]:
+    """Server-side client selection (Eqs. 17–19).
+
+    losses   — client id -> scalar loss summarizing its selected encoders
+    delta    — participation ratio; selects ⌈δK⌉ clients
+    criterion — 'low_loss' (paper's choice) | 'high_loss' | 'random'
+                | 'loss_recency' (§4.8 hybrid; needs ``recency`` and
+                ``loss_weight`` w: score = w·loss_rank + (1−w)·recency_rank)
+    """
+    ids = sorted(losses)
+    k = len(ids)
+    n_sel = max(1, math.ceil(delta * k))
+    if criterion == "random":
+        rng = rng or np.random.default_rng(0)
+        return sorted(rng.choice(ids, size=n_sel, replace=False).tolist())
+    vals = np.array([losses[i] for i in ids], np.float64)
+    if criterion == "low_loss":
+        order = np.argsort(vals, kind="stable")
+    elif criterion == "high_loss":
+        order = np.argsort(-vals, kind="stable")
+    elif criterion == "loss_recency":
+        rec = np.array([(recency or {}).get(i, 0) for i in ids], np.float64)
+        loss_rank = minmax_normalize(vals)          # lower better
+        rec_rank = 1.0 - minmax_normalize(rec)      # staler better
+        score = loss_weight * loss_rank + (1.0 - loss_weight) * rec_rank
+        order = np.argsort(score, kind="stable")
+    else:
+        raise ValueError(criterion)
+    return sorted(int(ids[i]) for i in order[:n_sel])
+
+
+@dataclass
+class SelectionResult:
+    """Outcome of one round's joint selection (Eq. 20)."""
+    # client id -> modality names that client would upload (top-γ, Eq. 16)
+    modality_choices: Dict[int, List[str]]
+    # server-selected client ids (Eq. 19)
+    selected_clients: List[int]
+
+    @property
+    def uploads(self) -> List[Tuple[int, str]]:
+        """(client, modality) pairs actually communicated (Θ_γ^δ, Eq. 20)."""
+        return [(k, m) for k in self.selected_clients
+                for m in self.modality_choices[k]]
+
+
+def joint_select(per_client_priorities: Dict[int, Tuple[Sequence[str], np.ndarray]],
+                 per_client_losses: Dict[int, float],
+                 *, gamma: int, delta: float,
+                 client_criterion: str = "low_loss",
+                 modality_random: bool = False,
+                 client_recency: Optional[Dict[int, int]] = None,
+                 loss_weight: float = 1.0,
+                 rng: Optional[np.random.Generator] = None) -> SelectionResult:
+    """Sequential joint selection (§3.3): modalities first, then clients."""
+    rng = rng or np.random.default_rng(0)
+    choices: Dict[int, List[str]] = {}
+    for cid, (names, prio) in per_client_priorities.items():
+        if modality_random:
+            g = min(gamma, len(names))
+            choices[cid] = sorted(rng.choice(list(names), size=g,
+                                             replace=False).tolist())
+        else:
+            choices[cid] = select_top_gamma(np.asarray(prio), list(names), gamma)
+    selected = select_clients(per_client_losses, delta,
+                              criterion=client_criterion,
+                              recency=client_recency,
+                              loss_weight=loss_weight, rng=rng)
+    return SelectionResult(choices, selected)

@@ -1,0 +1,15 @@
+from repro.data.partition import (PARTITIONERS, make_federation,
+                                  partition_class_noniid, partition_iid,
+                                  partition_longtail,
+                                  partition_modality_noniid, partition_natural)
+from repro.data.registry import (DATASETS, DatasetSpec, ModalitySpec,
+                                 get_dataset_spec, list_datasets)
+from repro.data.synthetic import ClientData, SyntheticDataset, make_dataset
+
+__all__ = [
+    "DATASETS", "DatasetSpec", "ModalitySpec", "get_dataset_spec",
+    "list_datasets", "ClientData", "SyntheticDataset", "make_dataset",
+    "PARTITIONERS", "make_federation", "partition_iid", "partition_natural",
+    "partition_class_noniid", "partition_modality_noniid",
+    "partition_longtail",
+]

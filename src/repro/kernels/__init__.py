@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the model-zoo compute hot spots.
+
+Each kernel: <name>.py (pl.pallas_call + explicit BlockSpec VMEM tiling),
+ops.py (jit wrappers, interpret=True on CPU), ref.py (pure-jnp oracles).
+
+The paper itself (MFedMC) has no GPU-kernel contribution — its hot spot is
+Shapley estimation on CPU-class clients, which is a fully-vectorized jnp
+batched fusion forward (see DESIGN.md §6). These kernels serve the assigned
+architectures' hot paths: attention, RG-LRU scan, mLSTM scan.
+"""
+from repro.kernels.ops import (flash_attention, mlstm_scan, rglru_scan,
+                               use_pallas)
+
+__all__ = ["flash_attention", "mlstm_scan", "rglru_scan", "use_pallas"]

@@ -1,0 +1,51 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode — the
+kernel body runs in Python per grid step, validating the tiling and math.
+On a real TPU backend they compile through Mosaic. ``use_pallas()`` gates
+model-integration call sites (models default to the XLA path on CPU; tests
+exercise the kernels explicitly).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.mlstm_scan import mlstm_scan_pallas
+from repro.kernels.rglru_scan import rglru_scan_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def use_pallas() -> bool:
+    """Whether model code should route hot spots through the kernels."""
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 256):
+    """q: [B,H,S,d]; k, v: [B,KV,T,d] (GQA via index maps). -> [B,H,S,d]."""
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_w"))
+def rglru_scan(x, w_a, w_x, lam, *, block_t: int = 128, block_w: int = 256):
+    """Fused RG-LRU gates + time scan. x: [B,S,W] -> (h, h_last)."""
+    return rglru_scan_pallas(x, w_a, w_x, lam, block_t=block_t,
+                             block_w=block_w, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def mlstm_scan(q, k, v, i_pre, f_pre, *, chunk: int = 64):
+    """Chunkwise-parallel mLSTM. Returns (h, (C, n, m))."""
+    return mlstm_scan_pallas(q, k, v, i_pre, f_pre, chunk=chunk,
+                             interpret=_interpret())

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose targets in tests).
+
+Each oracle is the straightforward / already-validated XLA implementation of
+the same math:
+- flash attention   → unblocked softmax attention (GQA-aware)
+- RG-LRU scan       → gate projections + ``jax.lax.associative_scan``
+- mLSTM chunk scan  → ``repro.models.ssm.mlstm_chunked`` (chunkwise jnp)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import mlstm_chunked
+
+NEG_INF = -1e30
+RGLRU_C = 8.0
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: [B, H, S, d]; k, v: [B, KV, T, d]. Returns [B, H, S, d]."""
+    b, h, s, d = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    scale = d ** -0.5
+    qg = q.reshape(b, kv, g, s, d)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qg * scale, k
+                        ).astype(jnp.float32)
+    t = k.shape[2]
+    rel = jnp.arange(s)[:, None] - jnp.arange(t)[None, :]
+    if causal:
+        scores = jnp.where(rel >= 0, scores, NEG_INF)
+    if window > 0:
+        scores = jnp.where(rel < window, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", p.astype(v.dtype), v)
+    return out.reshape(b, h, s, d)
+
+
+def rglru_scan_ref(x, w_a, w_x, lam):
+    """x: [B, S, W]. Returns (h [B, S, W], h_last [B, W] f32)."""
+    r = jax.nn.sigmoid((x @ w_a).astype(jnp.float32))
+    i = jax.nn.sigmoid((x @ w_x).astype(jnp.float32))
+    log_a = -RGLRU_C * jax.nn.softplus(lam.astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gx = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * i * x.astype(jnp.float32)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gx), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def mlstm_scan_ref(q, k, v, i_pre, f_pre, *, chunk: int = 64):
+    """Same layout as the kernel: q,k [B,H,S,dk]; v [B,H,S,dv]; gates [B,H,S].
+
+    Returns (h [B,H,S,dv], (C, n, m))."""
+    h, state = mlstm_chunked(q, k, v, i_pre, f_pre, chunk)
+    return h, state

@@ -1,0 +1,311 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("DRYRUN_EXTRA_XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: ``lower().compile()`` every (arch × input shape) on the
+single-pod (16, 16) and multi-pod (2, 16, 16) production meshes.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch phi3-medium-14b \
+        --shape train_4k [--multi-pod] [--all] [--json out.json]
+
+This is the ONLY entry point that forces 512 host-platform devices; smoke
+tests and benchmarks see the single real CPU device.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import (INPUT_SHAPES, get_config, get_shape, list_archs,
+                           shape_applicable)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (make_prefill_step, make_serve_step,
+                                make_train_step, shape_window)
+from repro.models.model import cache_specs, input_specs, param_specs
+from repro.optim import adamw
+from repro.roofline import (analytic_hbm_bytes, collective_bytes,
+                            count_step_flops)
+from repro.sharding.partition import (batch_pspec, cache_pspecs,
+                                      opt_state_pspecs, param_pspecs,
+                                      register_mesh, set_activation_spec)
+
+# TPU v5e hardware model (per chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s/link
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D with N = active params (MoE counts routed-active experts)."""
+    from repro.models.layers import count_params
+    specs = param_specs(cfg)
+    total = sum(int(x.size) for x in jax.tree.leaves(specs))
+    if cfg.is_moe:
+        # subtract inactive expert params
+        e, k = cfg.num_experts, cfg.experts_per_token
+        expert = 3 * cfg.d_model * cfg.d_ff * cfg.num_layers
+        total = total - expert * e + expert * k
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * total * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * total * tokens
+    return 2.0 * total * shape.global_batch        # decode: one token
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool,
+               mode: str = "baseline", verbose: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if not shape_applicable(cfg, shape):
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped (see DESIGN.md)"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    # §Perf: logical remap of the same 256 chips, e.g. --mode mesh32x8
+    for m in mode.split("+"):
+        if m.startswith("mesh") and "x" in m:
+            d, mm = m[4:].split("x")
+            mesh = jax.make_mesh((int(d), int(mm)), ("data", "model"))
+    register_mesh(mesh)
+    n_chips = mesh.size
+    t0 = time.time()
+
+    def shardings(tree, spec_tree):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree)
+
+    p_specs = param_specs(cfg)
+    p_pspecs = param_pspecs(p_specs)
+    if "params_replicated" in mode:
+        # small-model decode: drop tensor parallelism, replicate params —
+        # trades per-layer activation collectives for redundant compute
+        p_pspecs = jax.tree.map(lambda s: P(*(None,) * len(s)), p_pspecs)
+    p_sharding = shardings(p_specs, p_pspecs)
+    in_specs = input_specs(cfg, shape)
+    b_sharding = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                              batch_pspec(shape, cfg, multi_pod))
+
+    # ---- §Perf modes (combinable with '+') --------------------------------
+    # train: seq_sharded_acts | microbatch<N> | remat_dots | no_remat
+    # decode: cache_seq_sharded | params_replicated
+    modes = set(mode.split("+"))
+    act_token = None
+    microbatch = 1
+    if "seq_sharded_acts" in modes and shape.kind == "train":
+        dp = ("pod", "data") if multi_pod else ("data",)
+        act_token = set_activation_spec(P(dp, "model", None))
+    for m in modes:
+        if m.startswith("microbatch"):
+            microbatch = int(m[len("microbatch"):] or 2)
+    if "remat_dots" in modes:
+        cfg = cfg.with_overrides(remat_policy="dots")
+    if "no_remat" in modes:
+        cfg = cfg.with_overrides(remat=False)
+    moe_token = None
+    if "moe_sharded_dispatch" in modes:
+        from repro.sharding.partition import set_moe_buffer_spec
+        dp = ("pod", "data") if multi_pod else ("data",)
+        moe_token = set_moe_buffer_spec(P("model", dp, None))
+
+    prev_mesh = jax.sharding.get_mesh()
+    jax.sharding.set_mesh(mesh)
+    try:
+        if True:
+            if shape.kind == "train":
+                opt = adamw(1e-4, moment_dtype=(
+                    jnp.bfloat16 if "bf16_moments" in modes
+                    else jnp.float32))
+                o_specs = jax.eval_shape(opt.init, p_specs)
+                o_sharding = _opt_shardings(p_specs, o_specs, mesh)
+                step = make_train_step(cfg, opt, shape,
+                                       microbatch=microbatch)
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(p_sharding, o_sharding, b_sharding),
+                    out_shardings=(p_sharding, o_sharding, None),
+                    donate_argnums=(0, 1))
+                lowered = jitted.lower(p_specs, o_specs, in_specs)
+            elif shape.kind == "prefill":
+                step = make_prefill_step(cfg, shape)
+                jitted = jax.jit(step, in_shardings=(p_sharding, b_sharding),
+                                 out_shardings=None)
+                lowered = jitted.lower(p_specs, in_specs)
+            else:
+                step = make_serve_step(cfg, shape)
+                mem_len = cfg.vision_tokens if cfg.family == "vlm" else \
+                    (shape.seq_len // cfg.encoder_frame_ratio
+                     if cfg.family == "audio" else 0)
+                c_specs = cache_specs(cfg, shape.global_batch, shape.seq_len,
+                                      memory_len=mem_len)
+                c_sharding = jax.tree.map(
+                    lambda s: NamedSharding(mesh, s),
+                    cache_pspecs(cfg, c_specs, shape, multi_pod,
+                                 seq_shard=("cache_replicated" not in modes)))
+                jitted = jax.jit(step,
+                                 in_shardings=(p_sharding, c_sharding,
+                                               b_sharding),
+                                 out_shardings=(None, c_sharding),
+                                 donate_argnums=(1,))
+                lowered = jitted.lower(p_specs, c_specs, in_specs)
+
+            compiled = lowered.compile()
+    finally:
+        jax.sharding.set_mesh(prev_mesh)
+        if act_token is not None:
+            set_activation_spec(None)
+        if moe_token is not None:
+            from repro.sharding.partition import set_moe_buffer_spec
+            set_moe_buffer_spec(None)
+
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    # while-aware (trip-count-weighted) collective bytes — whole module
+    coll = collective_bytes(hlo)
+    coll_total = sum(coll.values())
+
+    # exact FLOPs from the jaxpr (scan trip counts multiplied in); the raw
+    # cost_analysis figure is kept for reference — it undercounts scanned
+    # layer stacks by ~L× (EXPERIMENTS.md §Roofline)
+    if shape.kind == "train":
+        flops_total = count_step_flops(step, p_specs, o_specs, in_specs)
+    elif shape.kind == "prefill":
+        flops_total = count_step_flops(step, p_specs, in_specs)
+    else:
+        flops_total = count_step_flops(step, p_specs, c_specs, in_specs)
+    flops = flops_total / n_chips
+
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    mem_model = analytic_hbm_bytes(cfg, shape, n_chips, dp)
+    bytes_accessed = mem_model["total"]
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = (coll_total / n_chips) / ICI_BW
+    mf = model_flops(cfg, shape)
+
+    result = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "mode": mode, "status": "ok", "chips": n_chips,
+        "compile_s": round(time.time() - t0, 1),
+        "flops_per_chip": flops,
+        "hbm_bytes_per_chip": bytes_accessed,
+        "hbm_breakdown": {k: v for k, v in mem_model.items() if k != "total"},
+        "raw_cost_flops_per_chip": float(cost.get("flops", 0.0)),
+        "raw_cost_bytes_per_chip": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes_total": coll_total,
+        "collective_breakdown": coll,
+        "per_device_memory": _mem_summary(mem),
+        "peak_gib_per_chip": _peak_gib(mem),
+        "fits_hbm_16g": (_peak_gib(mem) or 1e9) < 16.0,
+        "compute_s_term": compute_s,
+        "memory_s_term": memory_s,
+        "collective_s_term": collective_s,
+        "dominant": max([("compute", compute_s), ("memory", memory_s),
+                         ("collective", collective_s)], key=lambda kv: kv[1])[0],
+        "model_flops_total": mf,
+        "useful_flops_ratio": (mf / flops_total) if flops_total else 0.0,
+    }
+    if verbose:
+        print(f"[dryrun] {arch} × {shape_name} × "
+              f"{'multi-pod(512)' if multi_pod else 'single-pod(256)'} "
+              f"({mode}): OK in {result['compile_s']}s")
+        print(f"  memory: {result['per_device_memory']} "
+              f"fits16G={result['fits_hbm_16g']}")
+        print(f"  flops/chip={flops:.3e} hbm_bytes/chip={bytes_accessed:.3e} "
+              f"collective={coll_total:.3e}B")
+        print(f"  roofline terms (s): compute={compute_s:.4e} "
+              f"memory={memory_s:.4e} collective={collective_s:.4e} "
+              f"-> {result['dominant']}-bound; "
+              f"useful-FLOPs ratio={result['useful_flops_ratio']:.3f}")
+    return result
+
+
+def _peak_gib(mem) -> float:
+    try:
+        gb = 1024 ** 3
+        return round((mem.argument_size_in_bytes
+                      + mem.temp_size_in_bytes) / gb, 2)
+    except Exception:
+        return None
+
+
+def _opt_shardings(p_specs, o_specs, mesh):
+    """Optimizer-state shardings: moments get ZeRO-1 specs, counters P()."""
+    moment_spec = opt_state_pspecs(p_specs, mesh)
+
+    def build(o_leaf_path, o_leaf):
+        return None
+
+    # structure: {"m": tree, "v": tree, "step": scalar}
+    out = {}
+    for k, sub in o_specs.items():
+        if k == "step":
+            out[k] = NamedSharding(mesh, P())
+        else:
+            out[k] = jax.tree.map(lambda s: NamedSharding(mesh, s), moment_spec)
+    return out
+
+
+def _mem_summary(mem) -> str:
+    try:
+        gb = 1024 ** 3
+        return (f"args={mem.argument_size_in_bytes/gb:.2f}GiB "
+                f"out={mem.output_size_in_bytes/gb:.2f}GiB "
+                f"temp={mem.temp_size_in_bytes/gb:.2f}GiB "
+                f"peak~{(mem.argument_size_in_bytes+mem.temp_size_in_bytes)/gb:.2f}GiB")
+    except Exception:
+        return str(mem)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list_archs() + [None])
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch × shape) combination")
+    ap.add_argument("--mode", default="baseline")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+
+    results = []
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    results.append(dryrun_one(arch, shape, multi_pod=mp,
+                                              mode=args.mode))
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    failures += 1
+                    print(f"[dryrun] {arch} × {shape} × multi_pod={mp}: "
+                          f"FAILED: {type(e).__name__}: {e}")
+                    results.append({"arch": arch, "shape": shape,
+                                    "multi_pod": mp, "status": f"FAILED: {e}"})
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+    ok = sum(1 for r in results if r.get("status") == "ok")
+    skipped = sum(1 for r in results if "skipped" in str(r.get("status")))
+    print(f"\n[dryrun] done: {ok} ok, {skipped} skipped, {failures} failed "
+          f"of {len(results)}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

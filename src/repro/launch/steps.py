@@ -1,0 +1,121 @@
+"""jit-able train / prefill / serve step factories for the model zoo.
+
+``make_train_step`` returns ``(params, opt_state, batch) -> (params,
+opt_state, metrics)``; ``make_serve_step`` returns ``(params, cache, batch)
+-> (logits, cache)``. Both are pure functions of pytrees, suitable for
+``jax.jit`` with explicit in/out shardings (see ``launch/dryrun.py``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.model import (decode_step, forward, forward_hidden,
+                                logits_from_hidden)
+from repro.optim import Optimizer, apply_updates
+
+
+def cross_entropy(logits, targets):
+    """Memory-lean CE: logsumexp + take_along_axis, f32 accumulation."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - tgt)
+
+
+def chunked_cross_entropy(h, w, targets, chunk: int = 512):
+    """CE computed per sequence chunk so full [B,S,V] logits never
+    materialize; the checkpointed body recomputes chunk logits in backward.
+
+    h: [B,S,D] final hidden states; w: [D,V]; targets: [B,S].
+    """
+    b, s, d = h.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        return cross_entropy((h @ w), targets)
+    nc = s // chunk
+    hs = jnp.moveaxis(h.reshape(b, nc, chunk, d), 1, 0)
+    ts = jnp.moveaxis(targets.reshape(b, nc, chunk), 1, 0)
+
+    @jax.checkpoint
+    def body(acc, xs):
+        hc, tc = xs
+        logits = (hc @ w).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - tgt), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ts))
+    return total / (b * s)
+
+
+def shape_window(cfg: ModelConfig, shape: InputShape) -> int:
+    """Sliding window used for this (arch, shape): 0 = full attention."""
+    if shape.requires_subquadratic and not cfg.subquadratic:
+        return cfg.long_context_window
+    return cfg.sliding_window
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer,
+                    shape: Optional[InputShape] = None,
+                    microbatch: int = 1):
+    """``microbatch > 1`` enables gradient accumulation: the global batch is
+    split on the batch axis and scanned, trading a smaller activation
+    working set (peak HBM) for `microbatch`× more, smaller steps (§Perf)."""
+    window = shape_window(cfg, shape) if shape is not None else cfg.sliding_window
+
+    def loss_fn(params, batch):
+        h, aux = forward_hidden(params, cfg, batch, window=window)
+        w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        return chunked_cross_entropy(h, w, batch["targets"]) + aux
+
+    def train_step(params, opt_state, batch):
+        if microbatch > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatch, b // microbatch, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def accum(carry, mb):
+                loss_acc, grad_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                return (loss_acc + loss,
+                        jax.tree.map(jnp.add, grad_acc, grads)), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                accum, (jnp.zeros((), jnp.float32), zeros), micro)
+            loss = loss / microbatch
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, {"loss": loss}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, shape: Optional[InputShape] = None):
+    window = shape_window(cfg, shape) if shape is not None else cfg.sliding_window
+
+    def prefill_step(params, batch):
+        h, _ = forward_hidden(params, cfg, batch, window=window)
+        return logits_from_hidden(params, cfg, h[:, -1:])[:, 0]
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, shape: Optional[InputShape] = None):
+    window = shape_window(cfg, shape) if shape is not None else cfg.sliding_window
+
+    def serve_step(params, cache, batch):
+        return decode_step(params, cfg, cache, batch, window=window)
+
+    return serve_step

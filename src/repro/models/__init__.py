@@ -1,0 +1,7 @@
+from repro.models.model import (cache_specs, decode_step, forward, init_cache,
+                                init_params, input_specs, param_specs)
+from repro.models.layers import count_params, param_bytes
+
+__all__ = ["cache_specs", "decode_step", "forward", "init_cache",
+           "init_params", "input_specs", "param_specs", "count_params",
+           "param_bytes"]

@@ -1,0 +1,277 @@
+"""Attention variants: GQA (full/causal/sliding-window), MLA, cross-attn,
+and cache-based single-token decode (with an optional context-parallel
+flash-decode path used for ``long_500k``; see ``repro.models.decode_attention``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.blocked_attention import flash_attention
+from repro.models.layers import apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# core softmax attention (einsum formulation, GQA-aware)
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q, k):
+    """q: [B,S,H,hd], k: [B,T,KV,hd] -> scores [B,KV,H/KV,S,T]."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    q = q.reshape(b, s, kv, h // kv, hd)
+    return jnp.einsum("bskgd,btkd->bkgst", q, k)
+
+
+def _gqa_out(p, v):
+    """p: [B,KV,G,S,T], v: [B,T,KV,hd] -> [B,S,H,hd]."""
+    b, kv, g, s, t = p.shape
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v)
+    return out.reshape(b, s, kv * g, v.shape[-1])
+
+
+def sdpa(q, k, v, *, causal: bool, window: int = 0,
+         q_positions=None, kv_positions=None, mask=None):
+    """Scaled dot-product attention with GQA head grouping.
+
+    q: [B,S,H,hd]; k,v: [B,T,KV,hd]. ``window`` > 0 enables sliding-window
+    (positions within [pos-window+1, pos]). ``mask`` is an optional additive
+    [B,1,1,S,T]-broadcastable mask.
+    """
+    scale = q.shape[-1] ** -0.5
+    scores = _gqa_scores(q * scale, k).astype(jnp.float32)
+    s, t = scores.shape[-2], scores.shape[-1]
+    if q_positions is None:
+        q_positions = jnp.arange(s)
+    if kv_positions is None:
+        kv_positions = jnp.arange(t)
+    rel = q_positions[:, None] - kv_positions[None, :]           # [S, T]
+    if causal:
+        scores = jnp.where(rel >= 0, scores, NEG_INF)
+    if window > 0:
+        scores = jnp.where(rel < window, scores, NEG_INF)
+    if mask is not None:
+        scores = scores + mask
+    p = jax.nn.softmax(scores, axis=-1)
+    return _gqa_out(p.astype(v.dtype), v)
+
+
+# ---------------------------------------------------------------------------
+# GQA self-attention module
+# ---------------------------------------------------------------------------
+
+def init_gqa(rng, cfg: ModelConfig, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(rng, 4)
+    return {
+        "wq": dense_init(ks[0], d, h * hd, dtype),
+        "wk": dense_init(ks[1], d, kv * hd, dtype),
+        "wv": dense_init(ks[2], d, kv * hd, dtype),
+        "wo": dense_init(ks[3], h * hd, d, dtype),
+    }
+
+
+def gqa_project_qkv(params, x, cfg: ModelConfig, positions):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(b, s, h, hd)
+    k = (x @ params["wk"]).reshape(b, s, kv, hd)
+    v = (x @ params["wv"]).reshape(b, s, kv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_self_attention(params, x, cfg: ModelConfig, *, window: int = 0,
+                       positions=None, causal: bool = True):
+    """Full-sequence (train/prefill) self attention.
+
+    Routes through the Pallas flash kernel on TPU; the pure-jnp blocked
+    flash (same tiling/math — the kernel's oracle family) on other
+    backends."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    q, k, v = gqa_project_qkv(params, x, cfg, positions)
+    kv, g = cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads
+    from repro.kernels.ops import use_pallas
+    if use_pallas() and causal:
+        from repro.kernels.ops import flash_attention as pallas_flash
+        out = pallas_flash(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                           v.transpose(0, 2, 1, 3), causal=True,
+                           window=window)
+        out = out.transpose(0, 2, 1, 3).reshape(b, s, -1)
+        return out @ params["wo"]
+    q5 = q.reshape(b, s, kv, g, cfg.head_dim).transpose(0, 2, 3, 1, 4)
+    kk = k.transpose(0, 2, 1, 3)                     # [B,KV,T,hd]
+    vv = v.transpose(0, 2, 1, 3)
+    out = flash_attention(q5, kk, vv, causal=causal, window=window)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, s, -1)
+    return out @ params["wo"]
+
+
+def gqa_decode_attention(params, x, cfg: ModelConfig, cache, *, window: int = 0):
+    """One-token decode against a KV cache.
+
+    cache: {"k": [B,T,KV,hd], "v": [B,T,KV,hd], "pos": scalar int32}
+    x: [B,1,D]. Returns (out [B,1,D], new_cache).
+    """
+    b, s, _ = x.shape
+    assert s == 1
+    pos = cache["pos"]
+    positions = pos[None] if pos.ndim == 0 else pos
+    q, k_new, v_new = gqa_project_qkv(params, x, cfg, positions)
+    # absolute-slot cache: new K/V written at position ``pos``
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, pos, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, pos, 0, 0))
+    t = k.shape[1]
+    kv_positions = jnp.arange(t)
+    valid = kv_positions <= pos
+    mask = jnp.where(valid, 0.0, NEG_INF)[None, None, None, None, :]
+    out = sdpa(q, k, v, causal=False, window=window,
+               q_positions=positions, kv_positions=kv_positions, mask=mask)
+    new_cache = {"k": k, "v": v, "pos": pos + 1}
+    return out.reshape(b, 1, -1) @ params["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (Multi-head Latent Attention) — MiniCPM3 / DeepSeek-V2 style
+# ---------------------------------------------------------------------------
+
+def init_mla(rng, cfg: ModelConfig, dtype):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    ks = jax.random.split(rng, 7)
+    return {
+        "w_dq": dense_init(ks[0], d, m.q_lora_rank, dtype),
+        "w_uq": dense_init(ks[1], m.q_lora_rank,
+                           h * (m.qk_nope_head_dim + m.qk_rope_head_dim), dtype),
+        "w_dkv": dense_init(ks[2], d, m.kv_lora_rank, dtype),
+        "w_uk": dense_init(ks[3], m.kv_lora_rank, h * m.qk_nope_head_dim, dtype),
+        "w_uv": dense_init(ks[4], m.kv_lora_rank, h * m.v_head_dim, dtype),
+        "w_kr": dense_init(ks[5], d, m.qk_rope_head_dim, dtype),
+        "wo": dense_init(ks[6], h * m.v_head_dim, d, dtype),
+    }
+
+
+def _mla_q(params, x, cfg, positions):
+    m, h = cfg.mla, cfg.num_heads
+    b, s, _ = x.shape
+    q = (x @ params["w_dq"]) @ params["w_uq"]
+    q = q.reshape(b, s, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_self_attention(params, x, cfg: ModelConfig, *, window: int = 0,
+                       positions=None):
+    """Naive (materialized-KV) MLA for train/prefill."""
+    m, h = cfg.mla, cfg.num_heads
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    q_nope, q_rope = _mla_q(params, x, cfg, positions)
+    c_kv = x @ params["w_dkv"]                                    # [B,S,r]
+    k_nope = (c_kv @ params["w_uk"]).reshape(b, s, h, m.qk_nope_head_dim)
+    v = (c_kv @ params["w_uv"]).reshape(b, s, h, m.v_head_dim)
+    k_rope = apply_rope((x @ params["w_kr"])[:, :, None, :], positions,
+                        cfg.rope_theta)                           # [B,S,1,rd]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope, (b, s, h, m.qk_rope_head_dim))], axis=-1)
+    # MLA materializes per-head K/V for train/prefill (MHA: KV=H, G=1)
+    q5 = q.transpose(0, 2, 1, 3)[:, :, None]          # [B,H,1,S,hd]
+    out = flash_attention(q5, k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+                          causal=True, window=window)
+    out = out[:, :, 0].transpose(0, 2, 1, 3).reshape(b, s, -1)
+    return out @ params["wo"]
+
+
+def mla_decode_attention(params, x, cfg: ModelConfig, cache, *, window: int = 0):
+    """Absorbed-weight MLA decode: the cache stores only the compressed
+    latent ``c_kv`` [B,T,r] and the shared rope key [B,T,rd] — MLA's memory
+    advantage. W_uk is absorbed into the query and W_uv into the output.
+    """
+    m, h = cfg.mla, cfg.num_heads
+    b, s, _ = x.shape
+    assert s == 1
+    pos = cache["pos"]
+    positions = pos[None]
+    q_nope, q_rope = _mla_q(params, x, cfg, positions)            # [B,1,h,*]
+    c_new = x @ params["w_dkv"]                                   # [B,1,r]
+    kr_new = apply_rope((x @ params["w_kr"])[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]               # [B,1,rd]
+    c_kv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, pos, 0))
+    # absorb W_uk: q_lat[b,h,r] = sum_d q_nope[b,h,d] * W_uk[r, h*d]
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    scores = (jnp.einsum("bhr,btr->bht", q_lat, c_kv.astype(q_lat.dtype))
+              + jnp.einsum("bhd,btd->bht", q_rope[:, 0],
+                           k_rope.astype(q_rope.dtype))) * scale
+    t = c_kv.shape[1]
+    kv_positions = jnp.arange(t)
+    valid = kv_positions <= pos
+    if window > 0:
+        valid &= (pos - kv_positions) < window
+    scores = jnp.where(valid[None, None, :], scores.astype(jnp.float32), NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(c_kv.dtype)
+    ctx = jnp.einsum("bht,btr->bhr", p, c_kv)                     # latent ctx
+    # absorb W_uv: out[b,h,vd] = sum_r ctx[b,h,r] * W_uv[r, h*vd]
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    out = jnp.einsum("bhr,rhd->bhd", ctx.astype(x.dtype), w_uv)
+    out = out.reshape(b, 1, h * m.v_head_dim) @ params["wo"]
+    return out, {"c_kv": c_kv, "k_rope": k_rope, "pos": pos + 1}
+
+
+# ---------------------------------------------------------------------------
+# cross attention (VLM image layers, whisper decoder)
+# ---------------------------------------------------------------------------
+
+def init_cross_attention(rng, cfg: ModelConfig, kv_dim: Optional[int], dtype):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    kv_dim = kv_dim or d
+    ks = jax.random.split(rng, 4)
+    return {
+        "wq": dense_init(ks[0], d, h * hd, dtype),
+        "wk": dense_init(ks[1], kv_dim, kv * hd, dtype),
+        "wv": dense_init(ks[2], kv_dim, kv * hd, dtype),
+        "wo": dense_init(ks[3], h * hd, d, dtype),
+    }
+
+
+def cross_attention(params, x, memory, cfg: ModelConfig, *, kv_override=None):
+    """x: [B,S,D] attends over memory [B,T,Dm] (non-causal).
+
+    ``kv_override`` lets decode reuse precomputed (k, v) for the memory.
+    """
+    b, s, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(b, s, h, hd)
+    if kv_override is None:
+        t = memory.shape[1]
+        k = (memory @ params["wk"]).reshape(b, t, kv, hd)
+        v = (memory @ params["wv"]).reshape(b, t, kv, hd)
+    else:
+        k, v = kv_override
+    out = sdpa(q, k, v, causal=False)
+    return out.reshape(b, s, -1) @ params["wo"]
+
+
+def cross_attention_kv(params, memory, cfg: ModelConfig):
+    b, t, _ = memory.shape
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    k = (memory @ params["wk"]).reshape(b, t, kv, hd)
+    v = (memory @ params["wv"]).reshape(b, t, kv, hd)
+    return k, v

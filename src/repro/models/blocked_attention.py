@@ -1,0 +1,109 @@
+"""Blocked (flash-style) attention in pure JAX — the XLA-path memory fix.
+
+The naive softmax attention materializes [S, T] f32 scores; at
+train_4k / phi3 scale that is ~43 GiB per layer per chip, which can never fit
+HBM. This module computes attention with an online-softmax scan over KV
+blocks nested in a scan over Q blocks, so the live score tile is
+[block_q, block_k]. The inner body is ``jax.checkpoint``-ed so autodiff
+recomputes tiles instead of saving them.
+
+This is also the pure-jnp oracle family for the Pallas flash kernel
+(``repro/kernels/flash_attention``) — same tiling, same math.
+
+Layout: q [B, KV, G, S, hd]; k, v [B, KV, T, hd] (GQA grouped heads).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _block_mask(q_pos, k_pos, causal: bool, window: int):
+    rel = q_pos[:, None] - k_pos[None, :]
+    m = jnp.zeros(rel.shape, jnp.float32)
+    if causal:
+        m = jnp.where(rel >= 0, m, NEG_INF)
+    if window > 0:
+        m = jnp.where(rel < window, m, NEG_INF)
+    return m
+
+
+def flash_attention(q, k, v, *, causal: bool, window: int = 0,
+                    q_offset=0, block_q: int = 256, block_k: int = 1024,
+                    extra_mask=None):
+    """Online-softmax blocked attention.
+
+    q: [B, KV, G, S, hd]; k, v: [B, KV, T, hd]. ``q_offset`` shifts query
+    positions (prefill continuation). ``extra_mask``: additive [T] mask.
+    Returns [B, KV, G, S, hd].
+    """
+    b, kv, g, s, hd = q.shape
+    hd_v = v.shape[-1]              # MLA: qk head dim != v head dim
+    t = k.shape[2]
+    block_q = min(block_q, s)
+    block_k = min(block_k, t)
+    if s % block_q or t % block_k:
+        return _plain_attention(q, k, v, causal=causal, window=window,
+                                q_offset=q_offset, extra_mask=extra_mask)
+    nq, nk = s // block_q, t // block_k
+    scale = hd ** -0.5
+    qf = (q * scale).reshape(b, kv, g, nq, block_q, hd)
+    qf = jnp.moveaxis(qf, 3, 0)                       # [nq, B,KV,G,bq,hd]
+    kb = jnp.moveaxis(k.reshape(b, kv, nk, block_k, hd), 2, 0)
+    vb = jnp.moveaxis(v.reshape(b, kv, nk, block_k, hd_v), 2, 0)
+
+    def q_block(iq, q_blk):
+        q_pos = q_offset + iq * block_q + jnp.arange(block_q)
+
+        @jax.checkpoint
+        def kv_block(carry, xs):
+            ik, k_blk, v_blk = xs
+            o, m, l = carry
+            k_pos = ik * block_k + jnp.arange(block_k)
+            sblk = jnp.einsum("bkgqd,bktd->bkgqt", q_blk, k_blk,
+                              preferred_element_type=jnp.float32)
+            sblk = sblk + _block_mask(q_pos, k_pos, causal, window)
+            if extra_mask is not None:
+                em = jax.lax.dynamic_slice(extra_mask, (ik * block_k,),
+                                           (block_k,))
+                sblk = sblk + em
+            m_new = jnp.maximum(m, jnp.max(sblk, axis=-1))
+            p = jnp.exp(sblk - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            o = o * corr[..., None] + jnp.einsum(
+                "bkgqt,bktd->bkgqd", p.astype(v_blk.dtype), v_blk
+            ).astype(jnp.float32)
+            return (o, m_new, l), None
+
+        o0 = jnp.zeros((b, kv, g, block_q, hd_v), jnp.float32)
+        m0 = jnp.full((b, kv, g, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, block_q), jnp.float32)
+        (o, m, l), _ = jax.lax.scan(
+            kv_block, (o0, m0, l0), (jnp.arange(nk), kb, vb))
+        # cast per block: the stacked full-sequence output stays in v.dtype
+        return (o / jnp.maximum(l, 1e-30)[..., None]).astype(v.dtype)
+
+    out = jax.lax.map(lambda xs: q_block(*xs), (jnp.arange(nq), qf))
+    out = jnp.moveaxis(out, 0, 3).reshape(b, kv, g, s, hd_v)
+    return out.astype(v.dtype)
+
+
+def _plain_attention(q, k, v, *, causal, window, q_offset=0, extra_mask=None):
+    """Unblocked fallback for tiny/ragged shapes."""
+    scale = q.shape[-1] ** -0.5
+    s, t = q.shape[3], k.shape[2]
+    scores = jnp.einsum("bkgsd,bktd->bkgst", q * scale, k,
+                        preferred_element_type=jnp.float32)
+    q_pos = q_offset + jnp.arange(s)
+    k_pos = jnp.arange(t)
+    scores = scores + _block_mask(q_pos, k_pos, causal, window)
+    if extra_mask is not None:
+        scores = scores + extra_mask
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bkgst,bktd->bkgsd", p.astype(v.dtype), v)

@@ -1,0 +1,151 @@
+"""RecurrentGemma / Griffin blocks: RG-LRU recurrent block + local attention.
+
+RG-LRU (Real-Gated Linear Recurrent Unit, arXiv:2402.19427):
+
+    r_t = sigmoid(W_a x_t)                 (recurrence gate)
+    i_t = sigmoid(W_x x_t)                 (input gate)
+    log a_t = -c * softplus(Lambda) * r_t  (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The diagonal recurrence is associative, so training/prefill uses
+``jax.lax.associative_scan`` over time (log-depth on TPU); decode carries the
+state. The Pallas kernel in ``repro.kernels.rglru_scan`` implements the fused
+time-blocked version; this module is the XLA path used by the dry-run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import gqa_decode_attention, gqa_self_attention, init_gqa
+from repro.models.layers import (causal_conv1d, dense_init, ffn, init_conv1d,
+                                 init_ffn, init_rmsnorm, rmsnorm)
+
+RGLRU_C = 8.0
+
+
+def init_rglru(rng, width: int, dtype):
+    ks = jax.random.split(rng, 3)
+    return {
+        "w_a": dense_init(ks[0], width, width, dtype),
+        "w_x": dense_init(ks[1], width, width, dtype),
+        # Lambda parameterized so that a ~ U(0.9, 0.999) at init (paper)
+        "lam": jnp.log(jnp.expm1(
+            -jnp.log(jax.random.uniform(ks[2], (width,), jnp.float32,
+                                        0.9, 0.999)) / RGLRU_C)),
+    }
+
+
+def rglru_gates(params, x):
+    r = jax.nn.sigmoid((x @ params["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((x @ params["w_x"]).astype(jnp.float32))
+    log_a = -RGLRU_C * jax.nn.softplus(params["lam"]) * r        # [B,S,W]
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * i * x.astype(jnp.float32)
+    return a, gated_x
+
+
+def rglru_scan(params, x, state=None):
+    """x: [B,S,W] -> (h [B,S,W], last_state [B,W]) via associative scan.
+
+    On TPU with no carried state the fused Pallas kernel
+    (repro.kernels.rglru_scan) takes this path instead."""
+    if state is None:
+        from repro.kernels.ops import use_pallas
+        if use_pallas():
+            from repro.kernels.ops import rglru_scan as pallas_rglru
+            return pallas_rglru(x, params["w_a"], params["w_x"],
+                                params["lam"])
+    a, gx = rglru_gates(params, x)
+    if state is not None:
+        # fold carried state into the first step: h_0' uses a_0 * state
+        gx = gx.at[:, 0].add(a[:, 0] * state.astype(jnp.float32))
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gx), axis=1)
+    return h.astype(x.dtype), h[:, -1].astype(jnp.float32)
+
+
+def rglru_step(params, x_t, state):
+    """Single-token decode. x_t: [B,W], state: [B,W]."""
+    a, gx = rglru_gates(params, x_t[:, None, :])
+    h = a[:, 0] * state + gx[:, 0]
+    return h.astype(x_t.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# recurrent block (Griffin): gated RG-LRU branch + GeLU gate branch
+# ---------------------------------------------------------------------------
+
+def init_recurrent_block(rng, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(rng, 6)
+    return {
+        "norm": init_rmsnorm(d),
+        "w_rec": dense_init(ks[0], d, d, dtype),
+        "w_gate": dense_init(ks[1], d, d, dtype),
+        "conv": init_conv1d(ks[2], d, cfg.rglru_conv_width, dtype),
+        "rglru": init_rglru(ks[3], d, dtype),
+        "w_out": dense_init(ks[4], d, d, dtype),
+        "mlp_norm": init_rmsnorm(d),
+        "mlp": init_ffn(ks[5], d, cfg.d_ff, cfg.gated_ffn, dtype),
+    }
+
+
+def recurrent_block(params, x, cfg: ModelConfig, state=None):
+    """state: (conv_state, rglru_state) or None. x: [B,S,D]."""
+    xn = rmsnorm(params["norm"], x, cfg.norm_eps)
+    u = xn @ params["w_rec"]
+    g = jax.nn.gelu(xn @ params["w_gate"])
+    conv_state = None if state is None else state[0]
+    u, conv_state = causal_conv1d(params["conv"], u, conv_state)
+    if x.shape[1] == 1 and state is not None:
+        h, rg_state = rglru_step(params["rglru"], u[:, 0], state[1])
+        h = h[:, None, :]
+    else:
+        h, rg_state = rglru_scan(params["rglru"], u,
+                                 None if state is None else state[1])
+    y = (h * g) @ params["w_out"]
+    x = x + y
+    xm = rmsnorm(params["mlp_norm"], x, cfg.norm_eps)
+    return x + ffn(params["mlp"], xm, cfg.act), (conv_state, rg_state)
+
+
+def recurrent_state_init(cfg: ModelConfig, batch: int, dtype):
+    d = cfg.d_model
+    return (jnp.zeros((batch, cfg.rglru_conv_width - 1, d), dtype),
+            jnp.zeros((batch, d), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# local attention block (sliding window)
+# ---------------------------------------------------------------------------
+
+def init_local_attn_block(rng, cfg: ModelConfig, dtype):
+    ks = jax.random.split(rng, 2)
+    return {
+        "norm": init_rmsnorm(cfg.d_model),
+        "attn": init_gqa(ks[0], cfg, dtype),
+        "mlp_norm": init_rmsnorm(cfg.d_model),
+        "mlp": init_ffn(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_ffn, dtype),
+    }
+
+
+def local_attn_block(params, x, cfg: ModelConfig, cache=None, positions=None):
+    xn = rmsnorm(params["norm"], x, cfg.norm_eps)
+    if cache is not None and x.shape[1] == 1:
+        y, cache = gqa_decode_attention(params["attn"], xn, cfg, cache,
+                                        window=cfg.local_attn_window)
+    else:
+        y = gqa_self_attention(params["attn"], xn, cfg,
+                               window=cfg.local_attn_window,
+                               positions=positions)
+    x = x + y
+    xm = rmsnorm(params["mlp_norm"], x, cfg.norm_eps)
+    return x + ffn(params["mlp"], xm, cfg.act), cache

@@ -1,0 +1,138 @@
+"""Shared building blocks: norms, RoPE, FFNs, initializers.
+
+Parameters are plain nested dicts of jnp arrays. Every module exposes
+``init_<mod>(rng, cfg, ...) -> params`` and ``<mod>(params, x, ...) -> y``.
+Layer stacks are stored stacked on a leading axis and iterated with
+``jax.lax.scan`` so the compiled HLO contains one layer body.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(rng, in_dim: int, out_dim: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / (in_dim ** 0.5)
+    return (jax.random.normal(rng, (in_dim, out_dim)) * scale).astype(dtype)
+
+
+def embed_init(rng, vocab: int, dim: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(rng, (vocab, dim)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def init_layernorm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)                     # [head_dim // 2]
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: [..., seq, heads, head_dim]; positions: broadcastable to [..., seq]."""
+    freqs = rope_frequencies(x.shape[-1], theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., None, :]                          # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FFN (SwiGLU / gated-GELU / plain MLP)
+# ---------------------------------------------------------------------------
+
+def init_ffn(rng, d_model: int, d_ff: int, gated: bool, dtype):
+    ks = jax.random.split(rng, 3)
+    p = {"w_in": dense_init(ks[0], d_model, d_ff, dtype),
+         "w_out": dense_init(ks[1], d_ff, d_model, dtype)}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def ffn(params, x, act: str = "silu"):
+    h = x @ params["w_in"]
+    a = jax.nn.silu if act == "silu" else jax.nn.gelu
+    if "w_gate" in params:
+        h = a(x @ params["w_gate"]) * h
+    else:
+        h = a(h)
+    return h @ params["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# temporal conv1d (causal, depthwise) — RG-LRU / xLSTM frontends
+# ---------------------------------------------------------------------------
+
+def init_conv1d(rng, dim: int, width: int, dtype):
+    scale = 1.0 / (width ** 0.5)
+    return {"w": (jax.random.normal(rng, (width, dim)) * scale).astype(dtype),
+            "b": jnp.zeros((dim,), dtype)}
+
+
+def causal_conv1d(params, x, state=None):
+    """Depthwise causal conv. x: [B, S, D]. state: [B, width-1, D] or None.
+
+    Returns (y, new_state) where new_state holds the trailing window.
+    """
+    w = params["w"]
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros(x.shape[:1] + (width - 1,) + x.shape[2:], x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)                     # [B, S+w-1, D]
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    new_state = xp[:, -(width - 1):] if width > 1 else state
+    return (y + params["b"]).astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+def stack_layer_params(per_layer):
+    """List of identical-structure pytrees -> single pytree stacked on axis 0."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *per_layer)
+
+
+def count_params(tree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(tree))
+
+
+def param_bytes(tree) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(tree))

@@ -1,0 +1,651 @@
+"""Model zoo assembly: init / forward / decode for all six families.
+
+Layer stacks are stored stacked on a leading axis and executed with
+``jax.lax.scan`` so the compiled HLO contains a single layer body per stack
+(critical for dry-run compile times on 88-layer configs). ``jax.checkpoint``
+wraps the scanned body when ``cfg.remat``.
+
+Public API:
+    init_params(rng, cfg)                     -> params pytree
+    param_specs(cfg)                          -> ShapeDtypeStruct pytree
+    forward(params, cfg, batch, window=0)     -> logits [B,S,V], aux
+    init_cache(cfg, batch, seq_len, dtype)    -> cache pytree
+    decode_step(params, cfg, cache, batch)    -> logits [B,V], cache
+    input_specs(cfg, shape)                   -> dict of ShapeDtypeStructs
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import attention as attn
+from repro.models import hybrid as hyb
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (dense_init, embed_init, ffn, init_ffn,
+                                 init_rmsnorm, rmsnorm, stack_layer_params)
+from repro.sharding.partition import constrain
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if not cfg.remat:
+        return fn
+    if cfg.remat_policy == "dots":
+        # save matmul outputs (no recompute of the MXU work in bwd); only
+        # elementwise/softmax intermediates are recomputed — trades HBM for
+        # a ~25% cut of backward FLOPs (§Perf)
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+# ===========================================================================
+# per-family layer init
+# ===========================================================================
+
+def _init_dense_layer(rng, cfg: ModelConfig, dtype):
+    ks = jax.random.split(rng, 2)
+    if cfg.attn_type == "mla":
+        a = attn.init_mla(ks[0], cfg, dtype)
+    else:
+        a = attn.init_gqa(ks[0], cfg, dtype)
+    return {
+        "attn_norm": init_rmsnorm(cfg.d_model),
+        "attn": a,
+        "mlp_norm": init_rmsnorm(cfg.d_model),
+        "mlp": init_ffn(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_ffn, dtype),
+    }
+
+
+def _init_moe_layer(rng, cfg: ModelConfig, dtype):
+    ks = jax.random.split(rng, 2)
+    return {
+        "attn_norm": init_rmsnorm(cfg.d_model),
+        "attn": attn.init_gqa(ks[0], cfg, dtype),
+        "moe_norm": init_rmsnorm(cfg.d_model),
+        "moe": moe_mod.init_moe(ks[1], cfg, dtype),
+    }
+
+
+def _init_cross_layer(rng, cfg: ModelConfig, dtype):
+    ks = jax.random.split(rng, 2)
+    return {
+        "norm": init_rmsnorm(cfg.d_model),
+        "xattn": attn.init_cross_attention(ks[0], cfg, cfg.vision_embed_dim or None, dtype),
+        "gate": jnp.zeros((), jnp.float32),   # zero-init gated cross-attn
+        "mlp_norm": init_rmsnorm(cfg.d_model),
+        "mlp": init_ffn(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_ffn, dtype),
+    }
+
+
+def _init_enc_layer(rng, cfg: ModelConfig, dtype):
+    ks = jax.random.split(rng, 2)
+    return {
+        "attn_norm": init_rmsnorm(cfg.d_model),
+        "attn": attn.init_gqa(ks[0], cfg, dtype),
+        "mlp_norm": init_rmsnorm(cfg.d_model),
+        "mlp": init_ffn(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_ffn, dtype),
+    }
+
+
+def _init_dec_layer(rng, cfg: ModelConfig, dtype):
+    """Whisper decoder layer: self-attn + cross-attn + FFN."""
+    ks = jax.random.split(rng, 3)
+    return {
+        "attn_norm": init_rmsnorm(cfg.d_model),
+        "attn": attn.init_gqa(ks[0], cfg, dtype),
+        "x_norm": init_rmsnorm(cfg.d_model),
+        "xattn": attn.init_cross_attention(ks[1], cfg, None, dtype),
+        "mlp_norm": init_rmsnorm(cfg.d_model),
+        "mlp": init_ffn(ks[2], cfg.d_model, cfg.d_ff, cfg.gated_ffn, dtype),
+    }
+
+
+def _stacked(rng, n, init_one):
+    keys = jax.random.split(rng, n)
+    return jax.vmap(init_one)(keys)
+
+
+# ===========================================================================
+# init_params
+# ===========================================================================
+
+def hybrid_period_layout(cfg: ModelConfig) -> Tuple[int, Tuple[str, ...]]:
+    pat = cfg.block_pattern or cfg.xlstm_pattern
+    n_periods = cfg.num_layers // len(pat)
+    remainder = tuple(pat[: cfg.num_layers - n_periods * len(pat)])
+    return n_periods, remainder
+
+
+def init_params(rng, cfg: ModelConfig):
+    dtype = _dtype(cfg)
+    ks = jax.random.split(rng, 8)
+    params: Dict[str, Any] = {
+        "embed": embed_init(ks[0], cfg.padded_vocab, cfg.d_model, dtype),
+        "final_norm": init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[1], cfg.d_model, cfg.padded_vocab, dtype)
+
+    fam = cfg.family
+    if fam == "dense":
+        params["layers"] = _stacked(ks[2], cfg.num_layers,
+                                    lambda r: _init_dense_layer(r, cfg, dtype))
+    elif fam == "moe":
+        params["layers"] = _stacked(ks[2], cfg.num_layers,
+                                    lambda r: _init_moe_layer(r, cfg, dtype))
+    elif fam == "hybrid":
+        n_p, rem = hybrid_period_layout(cfg)
+        pat = cfg.block_pattern
+
+        def init_period(r):
+            keys = jax.random.split(r, len(pat))
+            return {f"b{i}_{kind}": (hyb.init_recurrent_block(keys[i], cfg, dtype)
+                                     if kind == "rglru"
+                                     else hyb.init_local_attn_block(keys[i], cfg, dtype))
+                    for i, kind in enumerate(pat)}
+
+        params["periods"] = _stacked(ks[2], n_p, init_period)
+        rem_keys = jax.random.split(ks[3], max(len(rem), 1))
+        params["rem"] = [
+            (hyb.init_recurrent_block(rem_keys[i], cfg, dtype) if kind == "rglru"
+             else hyb.init_local_attn_block(rem_keys[i], cfg, dtype))
+            for i, kind in enumerate(rem)]
+    elif fam == "ssm":
+        n_p, rem = hybrid_period_layout(cfg)
+        pat = cfg.xlstm_pattern
+
+        def init_period(r):
+            keys = jax.random.split(r, len(pat))
+            return {f"b{i}_{kind}": (ssm_mod.init_mlstm_block(keys[i], cfg, dtype)
+                                     if kind == "mlstm"
+                                     else ssm_mod.init_slstm_block(keys[i], cfg, dtype))
+                    for i, kind in enumerate(pat)}
+
+        params["periods"] = _stacked(ks[2], n_p, init_period)
+        assert not rem, "xlstm pattern must tile num_layers"
+    elif fam == "vlm":
+        period = cfg.cross_attn_every
+        n_p = cfg.num_layers // period
+        n_self = period - 1
+        params["periods"] = _stacked(
+            ks[2], n_p,
+            lambda r: {
+                "self": _stacked(r, n_self,
+                                 lambda r2: _init_dense_layer(r2, cfg, dtype)),
+                "cross": _init_cross_layer(jax.random.fold_in(r, 7), cfg, dtype),
+            })
+    elif fam == "audio":
+        params["enc_layers"] = _stacked(ks[2], cfg.encoder_layers,
+                                        lambda r: _init_enc_layer(r, cfg, dtype))
+        params["dec_layers"] = _stacked(ks[3], cfg.num_layers,
+                                        lambda r: _init_dec_layer(r, cfg, dtype))
+        params["enc_norm"] = init_rmsnorm(cfg.d_model)
+        params["frame_proj"] = dense_init(ks[4], cfg.d_model, cfg.d_model, dtype)
+    else:
+        raise ValueError(fam)
+    return params
+
+
+def param_specs(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+
+
+# ===========================================================================
+# forward (train / prefill)
+# ===========================================================================
+
+def _dense_layer_fwd(lp, h, cfg: ModelConfig, window: int):
+    xn = rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
+    if cfg.attn_type == "mla":
+        h = h + attn.mla_self_attention(lp["attn"], xn, cfg, window=window)
+    else:
+        h = h + attn.gqa_self_attention(lp["attn"], xn, cfg, window=window)
+    xm = rmsnorm(lp["mlp_norm"], h, cfg.norm_eps)
+    return h + ffn(lp["mlp"], xm, cfg.act)
+
+
+def _moe_layer_fwd(lp, h, cfg: ModelConfig, window: int):
+    xn = rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
+    h = h + attn.gqa_self_attention(lp["attn"], xn, cfg, window=window)
+    xm = rmsnorm(lp["moe_norm"], h, cfg.norm_eps)
+    y, aux = moe_mod.moe_ffn(lp["moe"], xm, cfg)
+    return h + y, aux
+
+
+def _cross_layer_fwd(lp, h, memory, cfg: ModelConfig, kv_override=None):
+    xn = rmsnorm(lp["norm"], h, cfg.norm_eps)
+    y = attn.cross_attention(lp["xattn"], xn, memory, cfg,
+                             kv_override=kv_override)
+    h = h + jnp.tanh(lp["gate"]).astype(h.dtype) * y
+    xm = rmsnorm(lp["mlp_norm"], h, cfg.norm_eps)
+    return h + ffn(lp["mlp"], xm, cfg.act)
+
+
+def _sinusoidal(seq: int, dim: int, dtype):
+    pos = np.arange(seq)[:, None]
+    i = np.arange(dim // 2)[None, :]
+    angles = pos / (10000 ** (2 * i / dim))
+    emb = np.concatenate([np.sin(angles), np.cos(angles)], axis=-1)
+    return jnp.asarray(emb, dtype)
+
+
+def forward_hidden(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+                   *, window: int = 0):
+    """Full-sequence forward up to the final norm. Returns (h [B,S,D], aux)."""
+    tokens = batch["tokens"]
+    h = params["embed"][tokens]                    # gather: [B,S,D]
+    aux = jnp.zeros((), jnp.float32)
+    fam = cfg.family
+
+    if fam == "dense":
+        body = _maybe_remat(
+            lambda hh, lp: (constrain(_dense_layer_fwd(lp, hh, cfg, window)), None), cfg)
+        h, _ = jax.lax.scan(body, h, params["layers"])
+    elif fam == "moe":
+        def body(hh, lp):
+            hh, a = _moe_layer_fwd(lp, hh, cfg, window)
+            return constrain(hh), a
+        h, auxs = jax.lax.scan(_maybe_remat(body, cfg), h, params["layers"])
+        aux = aux + cfg.router_aux_loss_coef * jnp.sum(auxs)
+    elif fam == "hybrid":
+        pat = cfg.block_pattern
+
+        def period_fwd(hh, pp):
+            for i, kind in enumerate(pat):
+                lp = pp[f"b{i}_{kind}"]
+                if kind == "rglru":
+                    hh, _ = hyb.recurrent_block(lp, hh, cfg)
+                else:
+                    hh, _ = hyb.local_attn_block(lp, hh, cfg)
+            return hh, None
+
+        h, _ = jax.lax.scan(_maybe_remat(period_fwd, cfg), h, params["periods"])
+        _, rem = hybrid_period_layout(cfg)
+        for lp, kind in zip(params["rem"], rem):
+            if kind == "rglru":
+                h, _ = hyb.recurrent_block(lp, h, cfg)
+            else:
+                h, _ = hyb.local_attn_block(lp, h, cfg)
+    elif fam == "ssm":
+        pat = cfg.xlstm_pattern
+
+        def period_fwd(hh, pp):
+            for i, kind in enumerate(pat):
+                lp = pp[f"b{i}_{kind}"]
+                if kind == "mlstm":
+                    hh, _ = ssm_mod.mlstm_block(lp, hh, cfg)
+                else:
+                    hh, _ = ssm_mod.slstm_block(lp, hh, cfg)
+            return hh, None
+
+        h, _ = jax.lax.scan(_maybe_remat(period_fwd, cfg), h, params["periods"])
+    elif fam == "vlm":
+        memory = batch["vision_embeddings"].astype(h.dtype)
+
+        def period_fwd(hh, pp):
+            def self_body(hh2, lp):
+                return _dense_layer_fwd(lp, hh2, cfg, window), None
+            hh, _ = jax.lax.scan(self_body, hh, pp["self"])
+            hh = _cross_layer_fwd(pp["cross"], hh, memory, cfg)
+            return hh, None
+
+        h, _ = jax.lax.scan(_maybe_remat(period_fwd, cfg), h, params["periods"])
+    elif fam == "audio":
+        frames = batch["frames"].astype(h.dtype)
+        e = frames @ params["frame_proj"]
+        e = e + _sinusoidal(e.shape[1], cfg.d_model, e.dtype)[None]
+
+        def enc_body(hh, lp):
+            xn = rmsnorm(lp["attn_norm"], hh, cfg.norm_eps)
+            hh = hh + attn.gqa_self_attention(lp["attn"], xn, cfg, causal=False)
+            xm = rmsnorm(lp["mlp_norm"], hh, cfg.norm_eps)
+            return hh + ffn(lp["mlp"], xm, cfg.act), None
+
+        e, _ = jax.lax.scan(_maybe_remat(enc_body, cfg), e, params["enc_layers"])
+        memory = rmsnorm(params["enc_norm"], e, cfg.norm_eps)
+
+        def dec_body(hh, lp):
+            xn = rmsnorm(lp["attn_norm"], hh, cfg.norm_eps)
+            hh = hh + attn.gqa_self_attention(lp["attn"], xn, cfg, window=window)
+            xq = rmsnorm(lp["x_norm"], hh, cfg.norm_eps)
+            hh = hh + attn.cross_attention(lp["xattn"], xq, memory, cfg)
+            xm = rmsnorm(lp["mlp_norm"], hh, cfg.norm_eps)
+            return hh + ffn(lp["mlp"], xm, cfg.act), None
+
+        h, _ = jax.lax.scan(_maybe_remat(dec_body, cfg), h, params["dec_layers"])
+    else:
+        raise ValueError(fam)
+
+    return rmsnorm(params["final_norm"], h, cfg.norm_eps), aux
+
+
+def logits_from_hidden(params, cfg: ModelConfig, h):
+    if cfg.tie_embeddings:
+        return h @ params["embed"].T
+    return h @ params["lm_head"]
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            *, window: int = 0):
+    """Full-sequence forward. Returns (logits [B,S,V], aux scalar)."""
+    h, aux = forward_hidden(params, cfg, batch, window=window)
+    return logits_from_hidden(params, cfg, h), aux
+
+
+# ===========================================================================
+# KV / recurrent cache
+# ===========================================================================
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               dtype=None, memory_len: int = 0):
+    """Decode cache pytree for ``decode_step``.
+
+    ``seq_len`` is the maximum context (cache capacity) for attention archs;
+    SSM/hybrid archs carry O(1) recurrent state (plus a window ring buffer for
+    local attention). ``memory_len`` sizes cross-attention memory (vlm/audio).
+    """
+    dtype = dtype or _dtype(cfg)
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    fam = cfg.family
+    pos = jnp.zeros((), jnp.int32)
+
+    def kv_stack(n, t):
+        return {"k": jnp.zeros((n, batch, t, kv, hd), dtype),
+                "v": jnp.zeros((n, batch, t, kv, hd), dtype)}
+
+    if fam == "dense" and cfg.attn_type == "mla":
+        m = cfg.mla
+        return {"layers": {
+            "c_kv": jnp.zeros((cfg.num_layers, batch, seq_len, m.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((cfg.num_layers, batch, seq_len, m.qk_rope_head_dim), dtype),
+        }, "pos": pos}
+    if fam in ("dense", "moe"):
+        return {"layers": kv_stack(cfg.num_layers, seq_len), "pos": pos}
+    if fam == "hybrid":
+        n_p, rem = hybrid_period_layout(cfg)
+        pat = cfg.block_pattern
+        w = min(cfg.local_attn_window, seq_len)
+
+        def period_state(kind_idx):
+            st = {}
+            for i, kind in enumerate(pat):
+                if kind == "rglru":
+                    conv, rg = hyb.recurrent_state_init(cfg, batch, dtype)
+                    st[f"b{i}_rglru"] = {
+                        "conv": jnp.broadcast_to(conv, (n_p,) + conv.shape),
+                        "rg": jnp.broadcast_to(rg, (n_p,) + rg.shape)}
+                else:
+                    st[f"b{i}_local_attn"] = {
+                        "k": jnp.zeros((n_p, batch, w, kv, hd), dtype),
+                        "v": jnp.zeros((n_p, batch, w, kv, hd), dtype)}
+            return st
+
+        cache = {"periods": period_state(pat), "kv_pos": jnp.full((w,), -1, jnp.int32),
+                 "pos": pos, "rem": []}
+        for kind in rem:
+            if kind == "rglru":
+                conv, rg = hyb.recurrent_state_init(cfg, batch, dtype)
+                cache["rem"].append({"conv": conv, "rg": rg})
+            else:
+                cache["rem"].append({"k": jnp.zeros((batch, w, kv, hd), dtype),
+                                     "v": jnp.zeros((batch, w, kv, hd), dtype)})
+        return cache
+    if fam == "ssm":
+        n_p, _ = hybrid_period_layout(cfg)
+        pat = cfg.xlstm_pattern
+        st = {}
+        for i, kind in enumerate(pat):
+            if kind == "mlstm":
+                conv, (C, n, m) = ssm_mod.mlstm_state_init(cfg, batch, dtype)
+                st[f"b{i}_mlstm"] = jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, (n_p,) + x.shape),
+                    {"conv": conv, "C": C, "n": n, "m": m})
+            else:
+                c, n, h, m = ssm_mod.slstm_state_init(cfg, batch, dtype)
+                st[f"b{i}_slstm"] = jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, (n_p,) + x.shape),
+                    {"c": c, "n": n, "h": h, "m": m})
+        return {"periods": st, "pos": pos}
+    if fam == "vlm":
+        period = cfg.cross_attn_every
+        n_p = cfg.num_layers // period
+        n_self = period - 1
+        mem = memory_len or cfg.vision_tokens
+        return {"self": {"k": jnp.zeros((n_p, n_self, batch, seq_len, kv, hd), dtype),
+                         "v": jnp.zeros((n_p, n_self, batch, seq_len, kv, hd), dtype)},
+                "cross": kv_stack(n_p, mem),
+                "pos": pos}
+    if fam == "audio":
+        mem = memory_len or max(seq_len // cfg.encoder_frame_ratio, 1)
+        return {"self": kv_stack(cfg.num_layers, seq_len),
+                "cross": kv_stack(cfg.num_layers, mem),
+                "pos": pos}
+    raise ValueError(fam)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int, memory_len: int = 0):
+    return jax.eval_shape(
+        lambda: init_cache(cfg, batch, seq_len, memory_len=memory_len))
+
+
+# ===========================================================================
+# decode_step — one new token against the cache
+# ===========================================================================
+
+def _ring_attn_decode(lp, xn, cfg: ModelConfig, kcache, vcache, kv_pos, pos):
+    """Sliding-window decode against a ring buffer cache (hybrid archs)."""
+    b = xn.shape[0]
+    w = kcache.shape[1]
+    slot = jnp.mod(pos, w)
+    q, k_new, v_new = attn.gqa_project_qkv(lp, xn, cfg, pos[None] if pos.ndim == 0 else pos)
+    k = jax.lax.dynamic_update_slice(kcache, k_new.astype(kcache.dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(vcache, v_new.astype(vcache.dtype),
+                                     (0, slot, 0, 0))
+    rel = pos - kv_pos
+    valid = (kv_pos >= 0) & (rel >= 0) & (rel < cfg.local_attn_window)
+    valid = valid | (jnp.arange(w) == slot)
+    mask = jnp.where(valid, 0.0, attn.NEG_INF)[None, None, None, None, :]
+    kvp = jnp.where(jnp.arange(w) == slot, pos, kv_pos)
+    out = attn.sdpa(q, k, v, causal=False,
+                    q_positions=pos[None], kv_positions=kvp, mask=mask)
+    return out.reshape(b, 1, -1) @ lp["wo"], k, v
+
+
+def decode_step(params, cfg: ModelConfig, cache, batch: Dict[str, jnp.ndarray],
+                *, window: int = 0):
+    """tokens: [B,1] -> (logits [B,V], new_cache)."""
+    tokens = batch["tokens"]
+    h = params["embed"][tokens]
+    pos = cache["pos"]
+    fam = cfg.family
+
+    if fam in ("dense", "moe") and cfg.attn_type != "mla":
+        def body(hh, xs):
+            lp, lc = xs
+            xn = rmsnorm(lp["attn_norm"], hh, cfg.norm_eps)
+            y, new_c = attn.gqa_decode_attention(
+                lp["attn"], xn, cfg, {"k": lc["k"], "v": lc["v"], "pos": pos},
+                window=window)
+            hh = hh + y
+            if fam == "moe":
+                xm = rmsnorm(lp["moe_norm"], hh, cfg.norm_eps)
+                y2, _ = moe_mod.moe_ffn(lp["moe"], xm, cfg)
+            else:
+                xm = rmsnorm(lp["mlp_norm"], hh, cfg.norm_eps)
+                y2 = ffn(lp["mlp"], xm, cfg.act)
+            return hh + y2, {"k": new_c["k"], "v": new_c["v"]}
+
+        h, new_layers = jax.lax.scan(body, h, (params["layers"], cache["layers"]))
+        new_cache = {"layers": new_layers, "pos": pos + 1}
+    elif fam == "dense":  # MLA
+        def body(hh, xs):
+            lp, lc = xs
+            xn = rmsnorm(lp["attn_norm"], hh, cfg.norm_eps)
+            y, new_c = attn.mla_decode_attention(
+                lp["attn"], xn, cfg,
+                {"c_kv": lc["c_kv"], "k_rope": lc["k_rope"], "pos": pos},
+                window=window)
+            hh = hh + y
+            xm = rmsnorm(lp["mlp_norm"], hh, cfg.norm_eps)
+            return hh + ffn(lp["mlp"], xm, cfg.act), \
+                {"c_kv": new_c["c_kv"], "k_rope": new_c["k_rope"]}
+
+        h, new_layers = jax.lax.scan(body, h, (params["layers"], cache["layers"]))
+        new_cache = {"layers": new_layers, "pos": pos + 1}
+    elif fam == "hybrid":
+        pat = cfg.block_pattern
+        kv_pos = cache["kv_pos"]
+
+        def period_body(hh, xs):
+            pp, pc = xs
+            new_pc = {}
+            for i, kind in enumerate(pat):
+                lp = pp[f"b{i}_{kind}"]
+                if kind == "rglru":
+                    st = pc[f"b{i}_rglru"]
+                    hh, (conv, rg) = hyb.recurrent_block(
+                        lp, hh, cfg, state=(st["conv"], st["rg"]))
+                    new_pc[f"b{i}_rglru"] = {"conv": conv, "rg": rg}
+                else:
+                    st = pc[f"b{i}_local_attn"]
+                    xn = rmsnorm(lp["norm"], hh, cfg.norm_eps)
+                    y, k, v = _ring_attn_decode(lp["attn"], xn, cfg,
+                                                st["k"], st["v"], kv_pos, pos)
+                    hh = hh + y
+                    xm = rmsnorm(lp["mlp_norm"], hh, cfg.norm_eps)
+                    hh = hh + ffn(lp["mlp"], xm, cfg.act)
+                    new_pc[f"b{i}_local_attn"] = {"k": k, "v": v}
+            return hh, new_pc
+
+        h, new_periods = jax.lax.scan(period_body, h,
+                                      (params["periods"], cache["periods"]))
+        new_rem = []
+        _, rem = hybrid_period_layout(cfg)
+        for lp, st, kind in zip(params["rem"], cache["rem"], rem):
+            if kind == "rglru":
+                h, (conv, rg) = hyb.recurrent_block(
+                    lp, h, cfg, state=(st["conv"], st["rg"]))
+                new_rem.append({"conv": conv, "rg": rg})
+            else:
+                xn = rmsnorm(lp["norm"], h, cfg.norm_eps)
+                y, k, v = _ring_attn_decode(lp["attn"], xn, cfg,
+                                            st["k"], st["v"], kv_pos, pos)
+                h = h + y
+                xm = rmsnorm(lp["mlp_norm"], h, cfg.norm_eps)
+                h = h + ffn(lp["mlp"], xm, cfg.act)
+                new_rem.append({"k": k, "v": v})
+        w = kv_pos.shape[0]
+        slot = jnp.mod(pos, w)
+        new_kv_pos = jnp.where(jnp.arange(w) == slot, pos, kv_pos)
+        new_cache = {"periods": new_periods, "rem": new_rem,
+                     "kv_pos": new_kv_pos, "pos": pos + 1}
+    elif fam == "ssm":
+        pat = cfg.xlstm_pattern
+
+        def period_body(hh, xs):
+            pp, pc = xs
+            new_pc = {}
+            for i, kind in enumerate(pat):
+                lp = pp[f"b{i}_{kind}"]
+                if kind == "mlstm":
+                    st = pc[f"b{i}_mlstm"]
+                    hh, (conv, (C, n, m)) = ssm_mod.mlstm_block(
+                        lp, hh, cfg, state=(st["conv"], (st["C"], st["n"], st["m"])))
+                    new_pc[f"b{i}_mlstm"] = {"conv": conv, "C": C, "n": n, "m": m}
+                else:
+                    st = pc[f"b{i}_slstm"]
+                    hh, (c, n, hs, m) = ssm_mod.slstm_block(
+                        lp, hh, cfg, state=(st["c"], st["n"], st["h"], st["m"]))
+                    new_pc[f"b{i}_slstm"] = {"c": c, "n": n, "h": hs, "m": m}
+            return hh, new_pc
+
+        h, new_periods = jax.lax.scan(period_body, h,
+                                      (params["periods"], cache["periods"]))
+        new_cache = {"periods": new_periods, "pos": pos + 1}
+    elif fam == "vlm":
+        def period_body(hh, xs):
+            pp, sc, cc = xs
+
+            def self_body(hh2, xs2):
+                lp, lc = xs2
+                xn = rmsnorm(lp["attn_norm"], hh2, cfg.norm_eps)
+                y, new_c = attn.gqa_decode_attention(
+                    lp["attn"], xn, cfg,
+                    {"k": lc["k"], "v": lc["v"], "pos": pos}, window=window)
+                hh2 = hh2 + y
+                xm = rmsnorm(lp["mlp_norm"], hh2, cfg.norm_eps)
+                return hh2 + ffn(lp["mlp"], xm, cfg.act), \
+                    {"k": new_c["k"], "v": new_c["v"]}
+
+            hh, new_sc = jax.lax.scan(self_body, hh, (pp["self"], sc))
+            xn = rmsnorm(pp["cross"]["norm"], hh, cfg.norm_eps)
+            y = attn.cross_attention(pp["cross"]["xattn"], xn, None, cfg,
+                                     kv_override=(cc["k"], cc["v"]))
+            hh = hh + jnp.tanh(pp["cross"]["gate"]).astype(hh.dtype) * y
+            xm = rmsnorm(pp["cross"]["mlp_norm"], hh, cfg.norm_eps)
+            hh = hh + ffn(pp["cross"]["mlp"], xm, cfg.act)
+            return hh, new_sc
+
+        h, new_self = jax.lax.scan(period_body, h,
+                                   (params["periods"], cache["self"],
+                                    cache["cross"]))
+        new_cache = {"self": new_self, "cross": cache["cross"], "pos": pos + 1}
+    elif fam == "audio":
+        def body(hh, xs):
+            lp, sc, cc = xs
+            xn = rmsnorm(lp["attn_norm"], hh, cfg.norm_eps)
+            y, new_c = attn.gqa_decode_attention(
+                lp["attn"], xn, cfg, {"k": sc["k"], "v": sc["v"], "pos": pos},
+                window=window)
+            hh = hh + y
+            xq = rmsnorm(lp["x_norm"], hh, cfg.norm_eps)
+            hh = hh + attn.cross_attention(lp["xattn"], xq, None, cfg,
+                                           kv_override=(cc["k"], cc["v"]))
+            xm = rmsnorm(lp["mlp_norm"], hh, cfg.norm_eps)
+            return hh + ffn(lp["mlp"], xm, cfg.act), \
+                {"k": new_c["k"], "v": new_c["v"]}
+
+        h, new_self = jax.lax.scan(body, h, (params["dec_layers"],
+                                             cache["self"], cache["cross"]))
+        new_cache = {"self": new_self, "cross": cache["cross"], "pos": pos + 1}
+    else:
+        raise ValueError(fam)
+
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = (h @ params["embed"].T) if cfg.tie_embeddings else (h @ params["lm_head"])
+    return logits[:, 0], new_cache
+
+
+# ===========================================================================
+# input specs (ShapeDtypeStruct stand-ins — no allocation)
+# ===========================================================================
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = _dtype(cfg)
+    S = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        specs = {"tokens": S((b, s), i32), "targets": S((b, s), i32)}
+    elif shape.kind == "prefill":
+        specs = {"tokens": S((b, s), i32)}
+    else:  # decode
+        specs = {"tokens": S((b, 1), i32)}
+    if cfg.family == "vlm" and shape.kind != "decode":
+        specs["vision_embeddings"] = S((b, cfg.vision_tokens,
+                                        cfg.vision_embed_dim or cfg.d_model), dt)
+    if cfg.family == "audio" and shape.kind != "decode":
+        specs["frames"] = S((b, max(s // cfg.encoder_frame_ratio, 1),
+                             cfg.d_model), dt)
+    return specs

@@ -1,0 +1,119 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-based dispatch.
+
+TPU-idiomatic formulation: tokens are scattered into a dense per-expert
+buffer ``[E, C, D]`` (C = capacity) so the expert computation is a single
+``[E, C, D] x [E, D, F]`` batched matmul that shards cleanly over the
+``model`` mesh axis (expert parallelism). The scatter/gather between the
+token-sharded and expert-sharded layouts is where XLA inserts the
+all-to-all-like collectives that dominate MoE roofline terms.
+
+Positions within each expert are computed with a cumulative-sum over the
+one-hot assignment matrix (Switch-Transformer style), avoiding the huge
+``[T, E, C]`` dispatch one-hot. Tokens beyond capacity are dropped (their
+combine weight is zero), matching standard capacity-factor semantics.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+
+def init_moe(rng, cfg: ModelConfig, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(rng, 5)
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        "w_in": (jax.random.normal(ks[1], (e, d, f)) / (d ** 0.5)).astype(dtype),
+        "w_gate": (jax.random.normal(ks[2], (e, d, f)) / (d ** 0.5)).astype(dtype),
+        "w_out": (jax.random.normal(ks[3], (e, f, d)) / (f ** 0.5)).astype(dtype),
+    }
+    if cfg.moe_dense_residual:
+        from repro.models.layers import init_ffn
+        p["dense_residual"] = init_ffn(ks[4], d, f, True, dtype)
+    return p
+
+
+def router_probs(params, x):
+    """x: [T, D] -> probs [T, E] (f32 router as is standard practice)."""
+    logits = x.astype(jnp.float32) @ params["router"]
+    return jax.nn.softmax(logits, axis=-1), logits
+
+
+def load_balance_loss(probs, expert_idx, num_experts: int):
+    """Switch-style auxiliary loss: E * sum_e f_e * p_e."""
+    one_hot = jax.nn.one_hot(expert_idx, num_experts, dtype=jnp.float32)
+    f = one_hot.mean(axis=(0, 1))          # fraction of assignments per expert
+    p = probs.mean(axis=0)                 # mean router prob per expert
+    return num_experts * jnp.sum(f * p)
+
+
+def moe_ffn(params, x, cfg: ModelConfig, *, capacity_factor: float = 1.25
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, D] -> (y [B, S, D], aux_loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    xt = x.reshape(b * s, d)
+    t = b * s
+
+    probs, _ = router_probs(params, xt)                       # [T, E]
+    weights, expert_idx = jax.lax.top_k(probs, k)             # [T, K]
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    aux = load_balance_loss(probs, expert_idx, e)
+
+    capacity = max(1, int(capacity_factor * t * k / e))
+
+    # flatten assignments; row-major order keeps earlier tokens prioritized
+    flat_expert = expert_idx.reshape(-1)                      # [T*K]
+    one_hot = jax.nn.one_hot(flat_expert, e, dtype=jnp.int32) # [T*K, E]
+    pos_in_expert = jnp.cumsum(one_hot, axis=0) - one_hot     # [T*K, E]
+    flat_pos = jnp.sum(pos_in_expert * one_hot, axis=-1)      # [T*K]
+    keep = flat_pos < capacity
+    flat_pos = jnp.where(keep, flat_pos, capacity - 1)
+
+    token_idx = jnp.repeat(jnp.arange(t), k)
+    buf = jnp.zeros((e, capacity, d), x.dtype)
+    contrib = jnp.where(keep[:, None], xt[token_idx], 0).astype(x.dtype)
+    buf = buf.at[flat_expert, flat_pos].add(contrib, mode="drop")
+    from repro.sharding.partition import constrain_moe_buffer
+    buf = constrain_moe_buffer(buf)
+
+    # expert computation: batched SwiGLU over [E, C, D]
+    h = jnp.einsum("ecd,edf->ecf", buf, params["w_in"])
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"]))
+    out_buf = jnp.einsum("ecf,efd->ecd", h * g, params["w_out"])
+
+    # gather back and combine with routing weights
+    gathered = out_buf[flat_expert, flat_pos]                 # [T*K, D]
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    w = weights.reshape(-1)[:, None].astype(gathered.dtype)   # [T*K, 1]
+    y = jnp.zeros((t, d), gathered.dtype).at[token_idx].add(gathered * w)
+
+    if cfg.moe_dense_residual:
+        from repro.models.layers import ffn
+        y = y + ffn(params["dense_residual"], xt, cfg.act)
+    return y.reshape(b, s, d), aux
+
+
+def moe_ffn_dense_fallback(params, x, cfg: ModelConfig):
+    """Oracle: evaluate every expert on every token (tests only)."""
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    probs, _ = router_probs(params, xt)
+    weights, expert_idx = jax.lax.top_k(probs, cfg.experts_per_token)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    h = jnp.einsum("td,edf->etf", xt, params["w_in"])
+    g = jax.nn.silu(jnp.einsum("td,edf->etf", xt, params["w_gate"]))
+    per_expert = jnp.einsum("etf,efd->etd", h * g, params["w_out"])  # [E,T,D]
+    mask = jnp.zeros((b * s, cfg.num_experts), per_expert.dtype)
+    mask = mask.at[jnp.arange(b * s)[:, None], expert_idx].set(
+        weights.astype(per_expert.dtype))
+    y = jnp.einsum("etd,te->td", per_expert, mask)
+    if cfg.moe_dense_residual:
+        from repro.models.layers import ffn
+        y = y + ffn(params["dense_residual"], xt, cfg.act)
+    return y.reshape(b, s, d)

@@ -1,0 +1,289 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunkwise-parallel)
+and sLSTM (scalar memory, sequential scan).
+
+TPU adaptation (see DESIGN.md): the xLSTM paper ships fused CUDA step kernels;
+on TPU the mLSTM is computed in *chunkwise-parallel* form — within a chunk the
+recurrence unrolls into an attention-like masked matmul (MXU-friendly), across
+chunks a small ``lax.scan`` carries the (C, n, m) state. The sLSTM recurrence
+is inherently sequential (recurrent R matrices break associativity), so it is
+a ``lax.scan`` over time — its per-step work is a small block-diagonal matmul.
+
+All recurrences are numerically stabilized in log space with a running max
+``m`` (exponential gating as in the paper, Appendix A).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (causal_conv1d, dense_init, init_conv1d,
+                                 init_layernorm, init_rmsnorm, layernorm,
+                                 rmsnorm)
+
+NEG_INF = -1e30
+
+
+# ===========================================================================
+# mLSTM — matrix memory with exponential gating, chunkwise parallel
+# ===========================================================================
+
+def mlstm_chunk_step(carry, inputs, *, eps: float = 1e-6):
+    """One chunk of the stabilized mLSTM recurrence.
+
+    carry: C [B,H,dk,dv], n [B,H,dk], m [B,H]
+    inputs: q,k,v [B,H,L,d*], i_pre,f_pre [B,H,L]
+    """
+    C, n, m = carry
+    q, k, v, i_pre, f_pre = inputs
+    L = q.shape[2]
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))          # [B,H,L]
+    b = jnp.cumsum(logf, axis=-1)                                  # decay to t
+    a = i_pre.astype(jnp.float32) - b                              # source logit
+    bL = b[..., -1]
+
+    # stabilizers
+    a_run_max = jax.lax.cummax(a, axis=a.ndim - 1)                 # [B,H,L]
+    m_loc = jnp.maximum(b + a_run_max, b + m[..., None])           # [B,H,L]
+
+    # intra-chunk: D[t,s] = exp(b_t + a_s - m_loc_t) for s <= t
+    expo = b[..., :, None] + a[..., None, :] - m_loc[..., :, None]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    D = jnp.where(mask, jnp.exp(expo), 0.0)                        # [B,H,L,L]
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k).astype(jnp.float32) * scale
+    w = scores * D                                                 # [B,H,L,L]
+    h_intra = jnp.einsum("bhts,bhsd->bhtd", w, v.astype(jnp.float32))
+
+    # inter-chunk: contribution of carried state
+    inter_w = jnp.exp(b + m[..., None] - m_loc)                    # [B,H,L]
+    qf = q.astype(jnp.float32) * scale
+    qC = jnp.einsum("bhtd,bhde->bhte", qf, C)                      # [B,H,L,dv]
+    qn = jnp.einsum("bhtd,bhd->bht", qf, n)
+    h_num = h_intra + inter_w[..., None] * qC
+    # normalizer n_t . q_t = sum_s w[t,s] + inter_w * (q . n_prev),
+    # floored at the stabilized unit exp(-m_loc) (paper's max(|n.q|, 1))
+    denom = jnp.maximum(
+        jnp.abs(jnp.sum(w, axis=-1) + inter_w * qn), jnp.exp(-m_loc)) + eps
+    h = h_num / denom[..., None]
+
+    # state update to end of chunk
+    m_new = bL + jnp.maximum(m, jnp.max(a, axis=-1))
+    state_w = jnp.exp(bL[..., None] + a - m_new[..., None])        # [B,H,L]
+    C_new = (jnp.exp(bL + m - m_new)[..., None, None] * C
+             + jnp.einsum("bhs,bhsd,bhse->bhde", state_w,
+                          k.astype(jnp.float32), v.astype(jnp.float32)))
+    n_new = (jnp.exp(bL + m - m_new)[..., None] * n
+             + jnp.einsum("bhs,bhsd->bhd", state_w, k.astype(jnp.float32)))
+    return (C_new, n_new, m_new), h
+
+
+def mlstm_chunked(q, k, v, i_pre, f_pre, chunk: int, state=None):
+    """q,k,v: [B,H,S,d]; gates [B,H,S]. Returns (h [B,H,S,dv], state).
+
+    On TPU with no carried state the Pallas chunk-scan kernel
+    (repro.kernels.mlstm_scan) takes this path instead."""
+    if state is None:
+        from repro.kernels.ops import use_pallas
+        if use_pallas():
+            from repro.kernels.ops import mlstm_scan as pallas_mlstm
+            return pallas_mlstm(q, k, v, i_pre, f_pre, chunk=chunk)
+    b, h, s, dk = q.shape
+    dv = v.shape[-1]
+    assert s % chunk == 0 or s < chunk, (s, chunk)
+    L = min(chunk, s)
+    nc = max(1, s // L)
+    if state is None:
+        state = (jnp.zeros((b, h, dk, dv), jnp.float32),
+                 jnp.zeros((b, h, dk), jnp.float32),
+                 jnp.full((b, h), 0.0, jnp.float32))
+
+    def reshape_c(x, d=None):
+        if d is None:
+            return x.reshape(b, h, nc, L).transpose(2, 0, 1, 3)
+        return x.reshape(b, h, nc, L, d).transpose(2, 0, 1, 3, 4)
+
+    qs, ks_, vs = reshape_c(q, dk), reshape_c(k, dk), reshape_c(v, dv)
+    is_, fs = reshape_c(i_pre), reshape_c(f_pre)
+
+    def step(carry, xs):
+        return mlstm_chunk_step(carry, xs)
+
+    state, hs = jax.lax.scan(step, state, (qs, ks_, vs, is_, fs))
+    h_out = hs.transpose(1, 2, 0, 3, 4).reshape(b, h, s, dv)
+    return h_out.astype(v.dtype), state
+
+
+def mlstm_recurrent_step(state, q, k, v, i_pre, f_pre, eps: float = 1e-6):
+    """Single-token decode step. q,k,v: [B,H,d]; gates [B,H]."""
+    C, n, m = state
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    i_log = i_pre.astype(jnp.float32)
+    m_new = jnp.maximum(logf + m, i_log)
+    f_eff = jnp.exp(logf + m - m_new)
+    i_eff = jnp.exp(i_log - m_new)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    C_new = f_eff[..., None, None] * C + i_eff[..., None, None] * (
+        kf[..., :, None] * vf[..., None, :])
+    n_new = f_eff[..., None] * n + i_eff[..., None] * kf
+    scale = q.shape[-1] ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    num = jnp.einsum("bhd,bhde->bhe", qf, C_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n_new)),
+                      jnp.exp(-m_new)) + eps
+    return (C_new, n_new, m_new), (num / den[..., None]).astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (pre-up-projection)
+# ---------------------------------------------------------------------------
+
+def init_mlstm_block(rng, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    d_up = 2 * d
+    h = cfg.num_heads
+    dk = d_up // h
+    ks = jax.random.split(rng, 9)
+    return {
+        "norm": init_rmsnorm(d),
+        "w_up": dense_init(ks[0], d, 2 * d_up, dtype),      # [u | z]
+        "conv": init_conv1d(ks[1], d_up, 4, dtype),
+        "wq": dense_init(ks[2], d_up, d_up, dtype),
+        "wk": dense_init(ks[3], d_up, d_up, dtype),
+        "wv": dense_init(ks[4], d_up, d_up, dtype),
+        "w_i": dense_init(ks[5], d_up, h, dtype),
+        "w_f": dense_init(ks[6], d_up, h, dtype),
+        "out_norm": init_rmsnorm(d_up),
+        "w_down": dense_init(ks[7], d_up, d, dtype),
+        "b_f": jnp.full((h,), 3.0, jnp.float32),             # forget bias init
+    }
+
+
+def _mlstm_qkvif(params, u_conv, cfg):
+    b, s, d_up = u_conv.shape
+    h = cfg.num_heads
+    dk = d_up // h
+    def heads(y):
+        return y.reshape(b, s, h, dk).transpose(0, 2, 1, 3)
+    q = heads(u_conv @ params["wq"])
+    k = heads(u_conv @ params["wk"])
+    v = heads(u_conv @ params["wv"])
+    i_pre = (u_conv @ params["w_i"]).transpose(0, 2, 1)      # [B,H,S]
+    f_pre = (u_conv @ params["w_f"]).transpose(0, 2, 1) + params["b_f"][None, :, None]
+    return q, k, v, i_pre, f_pre
+
+
+def mlstm_block(params, x, cfg: ModelConfig, state=None):
+    """x: [B,S,D] -> (y, new_state). state: (conv_state, (C, n, m)) or None."""
+    b, s, d = x.shape
+    h = cfg.num_heads
+    xn = rmsnorm(params["norm"], x, cfg.norm_eps)
+    uz = xn @ params["w_up"]
+    u, z = jnp.split(uz, 2, axis=-1)                          # [B,S,d_up]
+    conv_state = None if state is None else state[0]
+    u_conv, conv_state = causal_conv1d(params["conv"], u, conv_state)
+    u_conv = jax.nn.silu(u_conv)
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(params, u_conv, cfg)
+    rec_state = None if state is None else state[1]
+    if s == 1 and rec_state is not None:
+        rec_state, hh = mlstm_recurrent_step(
+            rec_state, q[:, :, 0], k[:, :, 0], v[:, :, 0],
+            i_pre[:, :, 0], f_pre[:, :, 0])
+        hh = hh[:, :, None, :]
+    else:
+        hh, rec_state = mlstm_chunked(q, k, v, i_pre, f_pre,
+                                      cfg.mlstm_chunk, rec_state)
+    hh = hh.transpose(0, 2, 1, 3).reshape(b, s, -1)           # [B,S,d_up]
+    hh = rmsnorm(params["out_norm"], hh, cfg.norm_eps)
+    y = (hh * jax.nn.silu(z)) @ params["w_down"]
+    return x + y, (conv_state, rec_state)
+
+
+def mlstm_state_init(cfg: ModelConfig, batch: int, dtype):
+    d_up = 2 * cfg.d_model
+    h = cfg.num_heads
+    dk = d_up // h
+    conv = jnp.zeros((batch, 3, d_up), dtype)
+    rec = (jnp.zeros((batch, h, dk, dk), jnp.float32),
+           jnp.zeros((batch, h, dk), jnp.float32),
+           jnp.zeros((batch, h), jnp.float32))
+    return (conv, rec)
+
+
+# ===========================================================================
+# sLSTM — scalar memory, sequential scan with recurrent block-diagonal R
+# ===========================================================================
+
+def init_slstm_block(rng, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    h = cfg.num_heads
+    hd = d // h
+    ks = jax.random.split(rng, 8)
+    def rmat(key):
+        return (jax.random.normal(key, (h, hd, hd)) / (hd ** 0.5)).astype(dtype)
+    pf = int(d * 4 / 3)
+    return {
+        "norm": init_rmsnorm(d),
+        "w_zifo": dense_init(ks[0], d, 4 * d, dtype),
+        "r_z": rmat(ks[1]), "r_i": rmat(ks[2]),
+        "r_f": rmat(ks[3]), "r_o": rmat(ks[4]),
+        "b_zifo": jnp.zeros((4 * d,), jnp.float32),
+        "out_norm": init_rmsnorm(d),
+        "w_up": dense_init(ks[5], d, 2 * pf, dtype),          # gated FFN
+        "w_down": dense_init(ks[6], pf, d, dtype),
+        "b_f": jnp.full((d,), 3.0, jnp.float32),
+    }
+
+
+def _slstm_cell(params, carry, x_t, cfg: ModelConfig):
+    """carry: (c, n, h, m) each [B, D]. x_t: [B, 4D] preactivations (input part)."""
+    c, n, h_prev, m = carry
+    b = x_t.shape[0]
+    H, hd = cfg.num_heads, cfg.d_model // cfg.num_heads
+    hp = h_prev.reshape(b, H, hd)
+    def rec(r):
+        return jnp.einsum("bhd,hde->bhe", hp, r).reshape(b, -1)
+    z_in, i_in, f_in, o_in = jnp.split(x_t + params["b_zifo"], 4, axis=-1)
+    z = jnp.tanh(z_in + rec(params["r_z"]))
+    i_log = (i_in + rec(params["r_i"])).astype(jnp.float32)
+    f_log = jax.nn.log_sigmoid(
+        (f_in + rec(params["r_f"])).astype(jnp.float32) + params["b_f"])
+    o = jax.nn.sigmoid(o_in + rec(params["r_o"]))
+    m_new = jnp.maximum(f_log + m, i_log)
+    f_eff = jnp.exp(f_log + m - m_new)
+    i_eff = jnp.exp(i_log - m_new)
+    c_new = f_eff * c + i_eff * z.astype(jnp.float32)
+    n_new = f_eff * n + i_eff
+    h_new = (o.astype(jnp.float32) * c_new /
+             jnp.maximum(n_new, 1e-6)).astype(x_t.dtype)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_block(params, x, cfg: ModelConfig, state=None):
+    """x: [B,S,D] -> (y, new_state)."""
+    b, s, d = x.shape
+    xn = rmsnorm(params["norm"], x, cfg.norm_eps)
+    pre = xn @ params["w_zifo"]                               # [B,S,4D]
+    if state is None:
+        state = slstm_state_init(cfg, b, x.dtype)
+
+    def step(carry, x_t):
+        return _slstm_cell(params, carry, x_t, cfg)
+
+    state, hs = jax.lax.scan(step, state, pre.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2)                                # [B,S,D]
+    hs = rmsnorm(params["out_norm"], hs, cfg.norm_eps)
+    u, g = jnp.split(hs @ params["w_up"], 2, axis=-1)
+    y = (u * jax.nn.gelu(g)) @ params["w_down"]
+    return x + y, state
+
+
+def slstm_state_init(cfg: ModelConfig, batch: int, dtype):
+    d = cfg.d_model
+    return (jnp.zeros((batch, d), jnp.float32),
+            jnp.zeros((batch, d), jnp.float32),
+            jnp.zeros((batch, d), dtype),
+            jnp.zeros((batch, d), jnp.float32))

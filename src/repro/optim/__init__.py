@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (Optimizer, adamw, apply_updates, sgd,
+                                    sgd_momentum)
+from repro.optim.schedules import constant, cosine_decay, warmup_cosine
+
+__all__ = ["Optimizer", "adamw", "apply_updates", "sgd", "sgd_momentum",
+           "constant", "cosine_decay", "warmup_cosine"]

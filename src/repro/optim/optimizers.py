@@ -1,0 +1,100 @@
+"""Pure-pytree optimizers (no external deps): SGD(+momentum), AdamW.
+
+An ``Optimizer`` is a pair of pure functions over pytrees; moments are kept
+in f32 regardless of param dtype (mixed-precision safe) and get their own
+ZeRO-1 sharding via ``repro.sharding.opt_state_pspecs``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]   # (grads, state, params)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype),
+        params, updates)
+
+
+def _f32_like(tree):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), tree)
+
+
+def sgd(lr) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"]
+        eta = lr_fn(step)
+        updates = jax.tree.map(lambda g: -eta * g.astype(jnp.float32), grads)
+        return updates, {"step": step + 1}
+
+    return Optimizer(init, update)
+
+
+def sgd_momentum(lr, momentum: float = 0.9) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"mu": _f32_like(params), "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"]
+        eta = lr_fn(step)
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                          state["mu"], grads)
+        updates = jax.tree.map(lambda m: -eta * m, mu)
+        return updates, {"mu": mu, "step": step + 1}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, moment_dtype=jnp.float32) -> Optimizer:
+    """``moment_dtype=bf16`` halves optimizer-state HBM (§Perf: arctic's
+    Adam state is 15 GiB/chip in f32 — the largest args contribution);
+    update math still runs in f32."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def moments_like(tree):
+        return jax.tree.map(
+            lambda p: jnp.zeros(p.shape, moment_dtype), tree)
+
+    def init(params):
+        return {"m": moments_like(params), "v": moments_like(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        eta = lr_fn(step)
+        m = jax.tree.map(
+            lambda m_, g: b1 * m_.astype(jnp.float32)
+            + (1 - b1) * g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(
+            lambda v_, g: b2 * v_.astype(jnp.float32)
+            + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m_, v_, p):
+            return -eta * (m_ / c1 / (jnp.sqrt(v_ / c2) + eps)
+                           + weight_decay * p.astype(jnp.float32))
+
+        updates = jax.tree.map(upd, m, v, params)
+        store = jax.tree.map(lambda x: x.astype(moment_dtype), (m, v))
+        return updates, {"m": store[0], "v": store[1], "step": step}
+
+    return Optimizer(init, update)

@@ -1,0 +1,123 @@
+"""While-aware collective-bytes metering from compiled HLO text.
+
+Collectives inside a ``lax.scan``'s lowered while body appear ONCE in the
+HLO text but execute ``trip_count`` times. This parser splits the module
+into computations, finds every ``while`` op, extracts the trip count from
+its condition computation (the loop bound is the comparison constant), and
+scales collective bytes by the product of enclosing trip counts.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    m = re.match(r"(\w+)\[([\d,]*)\]", shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def split_computations(hlo: str) -> Dict[str, List[str]]:
+    """computation name -> its instruction lines.
+
+    Header lines look like ``%name (params…) -> type {`` (params may contain
+    nested tuple parens, so we key off the trailing '{' + '->')."""
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if stripped.endswith("{") and "->" in stripped:
+            toks = stripped.split()
+            name = toks[1] if toks[0] == "ENTRY" else toks[0]
+            cur = name.lstrip("%")
+            comps[cur] = []
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _find_whiles(comps: Dict[str, List[str]]) -> List[Tuple[str, str, str]]:
+    """Returns (enclosing_comp, body_name, cond_name) per while op."""
+    out = []
+    for cname, lines in comps.items():
+        for line in lines:
+            if " while(" not in line:
+                continue
+            mb = re.search(r"body=%?([\w\.\-]+)", line)
+            mc = re.search(r"condition=%?([\w\.\-]+)", line)
+            if mb and mc:
+                out.append((cname, mb.group(1), mc.group(1)))
+    return out
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Loop bound = the integer constant compared against in the condition."""
+    consts = []
+    for line in cond_lines:
+        for m in re.finditer(r"constant\((\d+)\)", line):
+            consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+def computation_multipliers(hlo: str) -> Tuple[Dict[str, List[str]],
+                                               Dict[str, float]]:
+    comps = split_computations(hlo)
+    whiles = _find_whiles(comps)
+    mult: Dict[str, float] = {c: 1.0 for c in comps}
+
+    # fixpoint: body multiplier = trips × multiplier(enclosing computation)
+    for _ in range(8):                       # nesting depth bound
+        changed = False
+        for encl, body, cond in whiles:
+            trips = _trip_count(comps.get(cond, []))
+            new = trips * mult.get(encl, 1.0)
+            if body in mult and abs(mult[body] - new) > 0.5:
+                mult[body] = new
+                changed = True
+        if not changed:
+            break
+    return comps, mult
+
+
+def collective_bytes(hlo: str) -> Dict[str, float]:
+    """Trip-count-weighted collective bytes by kind (executed, not textual)."""
+    comps, mult = computation_multipliers(hlo)
+    out: Dict[str, float] = {}
+    for cname, lines in comps.items():
+        scale = mult.get(cname, 1.0)
+        for line in lines:
+            line = line.strip()
+            m = re.match(
+                r"(?:ROOT\s+)?\S+ = ((?:\([^)]*\))|(?:\S+\[[\d,]*\]\S*)) "
+                r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                r"collective-permute)", line)
+            if not m:
+                continue
+            tys, kind = m.groups()
+            if tys.startswith("("):
+                # tuple type: extract each dtype[dims] (comma-splitting would
+                # break inside multi-dim shapes like f32[128,20])
+                total = sum(_shape_bytes(t)
+                            for t in re.findall(r"\w+\[[\d,]*\]", tys))
+            else:
+                total = _shape_bytes(tys)
+            out[kind] = out.get(kind, 0.0) + scale * total
+    return out

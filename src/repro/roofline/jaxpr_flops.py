@@ -1,0 +1,109 @@
+"""Exact-ish FLOP metering by walking the step function's jaxpr.
+
+Why not ``compiled.cost_analysis()``: XLA's HLO cost analysis counts a
+``while`` body ONCE, so an L-layer ``lax.scan`` stack under-reports by ~L×
+(validated in a controlled experiment — see EXPERIMENTS.md §Roofline,
+"cost-analysis undercount"). The jaxpr, in contrast, still knows every
+scan's trip count, so walking it and multiplying body costs by ``length``
+meters the true executed FLOPs — including the remat recompute and the
+autodiff transpose, since ``value_and_grad`` traces them into the jaxpr.
+
+Counted: dot_general (2·B·M·N·K), conv_general_dilated, and a 1-flop/output
+charge for elementwise ops (captures the RG-LRU / xLSTM gate math). Gather /
+dynamic-slice / layout ops are free (they're memory, not compute).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+_ELEMENTWISE = {
+    "add", "sub", "mul", "div", "max", "min", "exp", "log", "tanh",
+    "logistic", "rsqrt", "sqrt", "pow", "integer_pow", "neg", "abs",
+    "erf", "sign", "cos", "sin", "log1p", "expm1", "cumsum", "cumlogsumexp",
+    "cummax", "select_n", "clamp", "and", "or", "not", "xor", "rem",
+    "nextafter", "atan2",
+}
+_REDUCE = {"reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+           "reduce_and", "reduce_or", "argmax", "argmin", "reduce_precision",
+           "logsumexp"}
+
+
+def _dot_flops(eqn) -> float:
+    ((lc, rc), (lb, rb)) = eqn.params["dimension_numbers"]
+    lhs = eqn.invars[0].aval.shape
+    rhs = eqn.invars[1].aval.shape
+    batch = math.prod(lhs[i] for i in lb) if lb else 1
+    k = math.prod(lhs[i] for i in lc) if lc else 1
+    m = math.prod(lhs[i] for i in range(len(lhs))
+                  if i not in set(lb) | set(lc))
+    n = math.prod(rhs[i] for i in range(len(rhs))
+                  if i not in set(rb) | set(rc))
+    return 2.0 * batch * m * n * k
+
+
+def _conv_flops(eqn) -> float:
+    out = eqn.outvars[0].aval.shape
+    rhs = eqn.invars[1].aval.shape          # kernel [*spatial, Cin, Cout]
+    return 2.0 * math.prod(out) * math.prod(rhs[:-1])
+
+
+def _sub_jaxprs(eqn):
+    for name in ("jaxpr", "call_jaxpr", "fun_jaxpr", "cond_jaxpr"):
+        if name in eqn.params:
+            j = eqn.params[name]
+            yield 1.0, j
+    if "branches" in eqn.params:             # cond: charge the max branch
+        branches = eqn.params["branches"]
+        if branches:
+            yield 1.0, max(branches, key=lambda b: _jaxpr_flops(_closed(b)))
+    if "body_jaxpr" in eqn.params:            # raw while: trips unknown -> 1
+        yield 1.0, eqn.params["body_jaxpr"]
+
+
+def _closed(j):
+    return j.jaxpr if hasattr(j, "jaxpr") else j
+
+
+_CACHE: Dict[int, float] = {}
+
+
+def _jaxpr_flops(jaxpr) -> float:
+    key = id(jaxpr)
+    if key in _CACHE:
+        return _CACHE[key]
+    total = 0.0
+    for eqn in jaxpr.eqns:
+        p = eqn.primitive.name
+        if p == "dot_general":
+            total += _dot_flops(eqn)
+        elif p == "conv_general_dilated":
+            total += _conv_flops(eqn)
+        elif p == "scan":
+            body = _closed(eqn.params["jaxpr"])
+            total += eqn.params["length"] * _jaxpr_flops(body)
+        elif p in _ELEMENTWISE:
+            total += math.prod(eqn.outvars[0].aval.shape)
+        elif p in _REDUCE:
+            total += math.prod(eqn.invars[0].aval.shape)
+        elif p == "custom_vjp_call" or p.startswith("custom_"):
+            for scale, sub in _sub_jaxprs(eqn):
+                total += scale * _jaxpr_flops(_closed(sub))
+        else:
+            for scale, sub in _sub_jaxprs(eqn):
+                total += scale * _jaxpr_flops(_closed(sub))
+    _CACHE[key] = total
+    return total
+
+
+def count_step_flops(fn, *example_args, **example_kwargs) -> float:
+    """Total FLOPs of one call of ``fn`` at the given abstract shapes.
+
+    ``example_args`` may be ShapeDtypeStructs — nothing is materialized.
+    """
+    _CACHE.clear()
+    jaxpr = jax.make_jaxpr(fn)(*example_args, **example_kwargs)
+    return _jaxpr_flops(jaxpr.jaxpr)

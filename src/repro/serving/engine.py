@@ -1,0 +1,154 @@
+"""Batched serving engine for the model zoo.
+
+Scheduling model: requests are grouped into *waves* by prompt-length bucket
+(the decode cache keeps one global position per batch, so a wave advances in
+lockstep — per-slot positions/continuous batching are recorded as future
+work in DESIGN.md). Within a wave:
+
+  1. admitted requests fill the batch slots (padded to the bucket length);
+  2. the prompt is consumed token-by-token through ``decode_step`` (cache
+     prefill — identical math to a chunked prefill, one token per step);
+  3. greedy decoding runs until every request hits EOS or max_new_tokens;
+     finished slots are masked out of the returned text but keep stepping
+     (their tokens are discarded), so the wave never re-shapes.
+
+The engine reports per-wave throughput; ``examples/serve_requests.py`` runs
+it end to end.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.launch.steps import make_serve_step
+from repro.models.model import init_cache
+
+
+@dataclass
+class Request:
+    request_id: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    output: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class WaveStats:
+    wave: int
+    batch: int
+    prompt_len: int
+    decoded: int
+    seconds: float
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.batch * self.decoded / max(self.seconds, 1e-9)
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, *, max_batch: int = 4,
+                 cache_len: int = 256, bucket: int = 16):
+        self.params = params
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.cache_len = cache_len
+        self.bucket = bucket
+        shape = InputShape("serve", cache_len, max_batch, "decode")
+        self._step = jax.jit(make_serve_step(cfg, shape))
+        self.queue: List[Request] = []
+        self.stats: List[WaveStats] = []
+
+    def submit(self, prompt: Sequence[int], max_new_tokens: int = 16,
+               eos_id: Optional[int] = None) -> Request:
+        req = Request(len(self.queue), list(prompt), max_new_tokens, eos_id)
+        self.queue.append(req)
+        return req
+
+    # ------------------------------------------------------------------
+    def _bucketed(self) -> Dict[int, List[Request]]:
+        buckets: Dict[int, List[Request]] = {}
+        for r in self.queue:
+            if r.done:
+                continue
+            b = -(-len(r.prompt) // self.bucket) * self.bucket
+            buckets.setdefault(b, []).append(r)
+        return buckets
+
+    def _fresh_cache(self):
+        cfg = self.cfg
+        mem_len = cfg.vision_tokens if cfg.family == "vlm" else \
+            (max(self.cache_len // cfg.encoder_frame_ratio, 1)
+             if cfg.family == "audio" else 0)
+        return init_cache(cfg, self.max_batch, self.cache_len,
+                          memory_len=mem_len)
+
+    def run(self) -> List[Request]:
+        """Process the whole queue; returns the completed requests."""
+        wave_no = 0
+        for blen, reqs in sorted(self._bucketed().items()):
+            for i in range(0, len(reqs), self.max_batch):
+                wave = reqs[i:i + self.max_batch]
+                self._run_wave(wave_no, wave, blen)
+                wave_no += 1
+        return self.queue
+
+    def _run_wave(self, wave_no: int, wave: List[Request], blen: int):
+        t0 = time.perf_counter()
+        b = self.max_batch
+        cache = self._fresh_cache()
+        # left-align prompts, pad with token 0 (prefix positions identical
+        # across the wave; padded tail tokens are fed but outputs ignored)
+        prompts = np.zeros((b, blen), np.int32)
+        plens = np.zeros((b,), np.int32)
+        for j, r in enumerate(wave):
+            prompts[j, :len(r.prompt)] = r.prompt
+            plens[j] = len(r.prompt)
+
+        # cache prefill: step the prompt through (one token per step)
+        logits = None
+        last_logits = [None] * b
+        for tpos in range(blen):
+            logits, cache = self._step(self.params, cache,
+                                       {"tokens": jnp.asarray(
+                                           prompts[:, tpos:tpos + 1])})
+            for j in range(len(wave)):
+                if plens[j] == tpos + 1:
+                    last_logits[j] = logits[j]
+
+        # greedy decode
+        max_new = max(r.max_new_tokens for r in wave)
+        nxt = np.zeros((b, 1), np.int32)
+        for j in range(len(wave)):
+            nxt[j, 0] = int(jnp.argmax(last_logits[j]))
+            wave[j].output.append(int(nxt[j, 0]))
+        decoded = 1
+        for _ in range(max_new - 1):
+            logits, cache = self._step(self.params, cache,
+                                       {"tokens": jnp.asarray(nxt)})
+            tok = np.asarray(jnp.argmax(logits, axis=-1))
+            decoded += 1
+            for j, r in enumerate(wave):
+                if r.done or len(r.output) >= r.max_new_tokens:
+                    r.done = True
+                    continue
+                t = int(tok[j])
+                r.output.append(t)
+                if r.eos_id is not None and t == r.eos_id:
+                    r.done = True
+                nxt[j, 0] = t
+            if all(r.done or len(r.output) >= r.max_new_tokens
+                   for r in wave):
+                break
+        for r in wave:
+            r.done = True
+        self.stats.append(WaveStats(wave_no, len(wave), blen, decoded,
+                                    time.perf_counter() - t0))

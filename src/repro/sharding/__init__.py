@@ -1,0 +1,6 @@
+from repro.sharding.partition import (batch_pspec, cache_pspecs, constrain,
+                                      param_pspecs, set_activation_spec,
+                                      opt_state_pspecs)
+
+__all__ = ["batch_pspec", "cache_pspecs", "constrain", "param_pspecs",
+           "set_activation_spec", "opt_state_pspecs"]

@@ -1,0 +1,246 @@
+"""PartitionSpec rules for params, optimizer state, batches, and caches.
+
+Axis conventions (see ``launch/mesh.py``):
+    pod   — cross-pod axis (multi-pod mesh only)
+    data  — within-pod data parallelism (batch / FSDP / context-parallel)
+    model — tensor/expert parallelism
+
+Param rules are matched on (leaf name, ndim). Leading stack axes (layer /
+period stacks) map to ``None`` by right-aligning the rule with the shape.
+"""
+from __future__ import annotations
+
+import contextvars
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+# name -> (rule for trailing dims). ndim disambiguates MoE (3D) from FFN (2D).
+_RULES_2D = {
+    # embed is sharded on D (not V): the token-gather gradient is a scatter
+    # over the V dim, which XLA materializes unsharded f32 when V is the
+    # sharded dim (measured: 1.9 GiB/chip on phi3). D-sharding keeps the
+    # scatter local; the small all-gather of [B,S,D/16] after lookup is cheap.
+    "embed": (None, "model"),
+    "lm_head": (None, "model"),
+    "wq": (None, "model"), "wk": (None, "model"), "wv": (None, "model"),
+    "wo": ("model", None),
+    "w_in": (None, "model"), "w_gate": (None, "model"),
+    "w_out": ("model", None),
+    "w_up": (None, "model"), "w_down": ("model", None),
+    "w_rec": (None, "model"), "w_zifo": (None, "model"),
+    "frame_proj": (None, "model"),
+    "w_uq": (None, "model"), "w_uk": (None, "model"), "w_uv": (None, "model"),
+    "w_dq": (None, None), "w_dkv": (None, None), "w_kr": (None, None),
+    "router": (None, None),
+    "w": (None, "model"),          # depthwise conv [width, dim]
+}
+_RULES_3D = {
+    # MoE expert tensors [E, D, F] / [E, F, D]: expert-parallel on model,
+    # FSDP-style second shard on data (Arctic would not fit otherwise).
+    "w_in": ("model", None, "data"),
+    "w_gate": ("model", None, "data"),
+    "w_out": ("model", "data", None),
+    # sLSTM recurrent block-diag [H, hd, hd]: small, replicated
+    "r_z": (None, None, None), "r_i": (None, None, None),
+    "r_f": (None, None, None), "r_o": (None, None, None),
+}
+
+
+def _leaf_rule(name: str, ndim: int, in_moe: bool) -> Tuple:
+    if (in_moe or name.startswith("r_")) and name in _RULES_3D:
+        return _RULES_3D[name]
+    if name in _RULES_2D:
+        return _RULES_2D[name]
+    return ()                       # replicate (norms, biases, scalars)
+
+
+def _right_align(rule: Tuple, ndim: int) -> P:
+    pad = (None,) * (ndim - len(rule))
+    return P(*(pad + tuple(rule)))
+
+
+def param_pspecs(param_tree) -> Any:
+    """PartitionSpec pytree mirroring ``param_tree`` (arrays or SDS)."""
+    def spec(path, leaf):
+        name = None
+        keys = [str(e.key) for e in path if isinstance(e, jax.tree_util.DictKey)]
+        name = keys[-1] if keys else ""
+        in_moe = "moe" in keys and name not in ("w",)  # dense_residual ffn keeps 2D rule
+        in_moe = in_moe and "dense_residual" not in keys
+        rule = _leaf_rule(name or "", leaf.ndim, in_moe)
+        if len(rule) > leaf.ndim:
+            rule = rule[-leaf.ndim:] if leaf.ndim else ()
+        return _right_align(rule, leaf.ndim)
+
+    return jax.tree_util.tree_map_with_path(spec, param_tree)
+
+
+def opt_state_pspecs(param_tree, mesh) -> Any:
+    """ZeRO-1 style: optimizer moments additionally sharded over ``data``
+    on the largest dim the param rule leaves replicated (when divisible)."""
+    data = mesh.shape.get("data", 1)
+    base = param_pspecs(param_tree)
+
+    def zero1(leaf, spec):
+        dims = list(spec) + [None] * (leaf.ndim - len(spec))
+        if "data" in dims:
+            return P(*dims)
+        # choose the largest replicated dim divisible by the data axis
+        best, best_size = None, 0
+        for i, d in enumerate(dims):
+            if d is None and leaf.shape[i] % data == 0 and leaf.shape[i] > best_size:
+                best, best_size = i, leaf.shape[i]
+        if best is not None and best_size >= data:
+            dims[best] = "data"
+        return P(*dims)
+
+    return jax.tree.map(zero1, param_tree, base)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache rules
+# ---------------------------------------------------------------------------
+
+def dp_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def batch_pspec(shape: InputShape, cfg: ModelConfig, multi_pod: bool) -> Any:
+    dp = dp_axes(multi_pod)
+    specs = {}
+    if shape.kind == "train":
+        specs = {"tokens": P(dp, None), "targets": P(dp, None)}
+    elif shape.kind == "prefill":
+        specs = {"tokens": P(dp, None)}
+    else:
+        if shape.global_batch == 1:
+            specs = {"tokens": P(None, None)}
+        else:
+            specs = {"tokens": P(dp, None)}
+    if cfg.family == "vlm" and shape.kind != "decode":
+        specs["vision_embeddings"] = P(dp, None, None)
+    if cfg.family == "audio" and shape.kind != "decode":
+        specs["frames"] = P(dp, None, None)
+    return specs
+
+
+def cache_pspecs(cfg: ModelConfig, cache_tree, shape: InputShape,
+                 multi_pod: bool, *, seq_shard: bool = True) -> Any:
+    """Sharding for the decode cache.
+
+    batch > 1: shard the batch dim over (pod, data); by default (the §Perf
+    hillclimb winner, 'cache_seq_sharded') the cache *sequence* dim is
+    additionally sharded over 'model' — KV heads rarely divide the model
+    axis, so the context dim is the only way the cache uses those chips'
+    HBM. Measured on granite-moe-1b decode_32k: collective bytes −99.9%,
+    peak 36 → 2.8 GiB. ``seq_shard=False`` restores the replicated-cache
+    baseline for comparison.
+    batch == 1 (long_500k): context parallelism — shard the cache sequence
+    dim over every available axis so the 500k context fits; attention then
+    contracts a sharded dim (XLA inserts the combine collective).
+    """
+    dp = dp_axes(multi_pod)
+    ctx_axes = dp + ("model",)
+    b = shape.global_batch
+
+    def spec(path, leaf):
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        if name == "pos" or leaf.ndim == 0:
+            return P()
+        if name == "kv_pos":
+            return P(None)
+        dims = [None] * leaf.ndim
+        # find the batch dim: first dim of size b after leading stack dims
+        batch_dim = None
+        for i, s in enumerate(leaf.shape):
+            if s == b and i <= 2:
+                batch_dim = i
+                break
+        if name in ("k", "v", "c_kv", "k_rope"):
+            # [*stack, B, T, ...]
+            if batch_dim is None:
+                batch_dim = leaf.ndim - 3 if name in ("k", "v") else leaf.ndim - 2
+            t_dim = batch_dim + 1
+            if b > 1:
+                dims[batch_dim] = dp if len(dp) > 1 else dp[0]
+                if seq_shard and \
+                        leaf.shape[t_dim] % _axes_size(("model",)) == 0 and \
+                        leaf.shape[t_dim] >= 4 * _axes_size(("model",)):
+                    dims[t_dim] = "model"
+            elif leaf.shape[t_dim] % _axes_size(ctx_axes) == 0 and \
+                    leaf.shape[t_dim] >= 4 * _axes_size(ctx_axes):
+                dims[t_dim] = ctx_axes
+            return P(*dims)
+        # recurrent states: [*stack, B, ...] — shard batch if possible
+        if batch_dim is not None and b > 1:
+            dims[batch_dim] = dp if len(dp) > 1 else dp[0]
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+
+_MESH_SIZES = {}
+
+
+def _axes_size(axes) -> int:
+    n = 1
+    for a in axes:
+        n *= _MESH_SIZES.get(a, 1)
+    return n
+
+
+def register_mesh(mesh) -> None:
+    """Record axis sizes so cache_pspecs can reason about divisibility."""
+    global _MESH_SIZES
+    _MESH_SIZES = dict(mesh.shape)
+
+
+# ---------------------------------------------------------------------------
+# activation sharding constraint hook (used inside model forward)
+# ---------------------------------------------------------------------------
+
+_ACT_SPEC: contextvars.ContextVar[Optional[P]] = \
+    contextvars.ContextVar("act_spec", default=None)
+
+
+def set_activation_spec(spec: Optional[P]):
+    """Set the residual-stream constraint, e.g. P(("pod","data"), None, "model")
+    for Megatron-style sequence-sharded activations. Returns a token for reset."""
+    return _ACT_SPEC.set(spec)
+
+
+def constrain(h):
+    spec = _ACT_SPEC.get()
+    if spec is None:
+        return h
+    return jax.lax.with_sharding_constraint(h, spec)
+
+
+# MoE dispatch buffer [E, C, D]: experts on 'model', capacity on 'data'
+# (§Perf: without this XLA replicates the buffer — arctic's 49 GiB temp)
+_MOE_SPEC: contextvars.ContextVar[Optional[P]] = \
+    contextvars.ContextVar("moe_spec", default=None)
+
+
+def set_moe_buffer_spec(spec: Optional[P]):
+    return _MOE_SPEC.set(spec)
+
+
+def constrain_moe_buffer(buf):
+    spec = _MOE_SPEC.get()
+    if spec is None:
+        return buf
+    return jax.lax.with_sharding_constraint(buf, spec)

@@ -1,0 +1,10 @@
+"""Shared fixtures. NOTE: no XLA device-count forcing here — smoke tests and
+benchmarks must see the single real CPU device (the dry-run launcher is the
+only entry point that forces 512 host devices, in its own process)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,88 @@
+"""Aggregation (Eq. 21), comm ledger / transport model, and quantization."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.aggregation import (CommLedger, IOT_UPLINK, TransportModel,
+                                    aggregate_modality)
+from repro.core.encoders import encoder_bytes, init_encoder
+from repro.core.quantize import (dequantize_tensor, quantize_tensor,
+                                 quantized_roundtrip)
+
+
+def _encs(n, seed=0):
+    return [init_encoder(jax.random.key(seed + i), (8, 4), 5)
+            for i in range(n)]
+
+
+class TestAggregation:
+    def test_weights_eq21(self):
+        e1, e2 = _encs(2)
+        agg = aggregate_modality([e1, e2], [30, 10])
+        for k in agg:
+            np.testing.assert_allclose(
+                np.asarray(agg[k]), 0.75 * np.asarray(e1[k])
+                + 0.25 * np.asarray(e2[k]), rtol=1e-6)
+
+    def test_single_upload_identity(self):
+        (e,) = _encs(1)
+        agg = aggregate_modality([e], [17])
+        for k in agg:
+            np.testing.assert_allclose(np.asarray(agg[k]), np.asarray(e[k]),
+                                       rtol=1e-7)
+
+    @given(st.lists(st.integers(1, 1000), min_size=2, max_size=5))
+    @settings(max_examples=20, deadline=None)
+    def test_convexity(self, counts):
+        """Aggregate lies inside the per-leaf convex hull of the uploads."""
+        encs = _encs(len(counts))
+        agg = aggregate_modality(encs, counts)
+        for k in agg:
+            stack = np.stack([np.asarray(e[k]) for e in encs])
+            assert np.all(np.asarray(agg[k]) <= stack.max(0) + 1e-5)
+            assert np.all(np.asarray(agg[k]) >= stack.min(0) - 1e-5)
+
+
+class TestTransport:
+    def test_paper_time_model(self):
+        # Table 7: T = bytes × 1.2 × 1.5 / (10e6/8)
+        assert IOT_UPLINK.seconds(10e6 / 8) == pytest.approx(1.2 * 1.5)
+
+    def test_ledger(self):
+        led = CommLedger()
+        led.record(1_000_000)
+        led.record(500_000, 2)
+        assert led.megabytes == pytest.approx(1.5)
+        assert led.uploads == 3
+
+
+class TestQuantize:
+    @pytest.mark.parametrize("bits,tol", [(8, 0.02), (4, 0.3)])
+    def test_roundtrip_error_bound(self, bits, tol):
+        x = jnp.asarray(np.random.default_rng(0).standard_normal((64, 32)),
+                        jnp.float32)
+        codes, scale, zero = quantize_tensor(x, bits)
+        back = dequantize_tensor(codes, scale, zero)
+        # max error <= scale/2 + eps
+        assert float(jnp.max(jnp.abs(back - x))) <= scale / 2 + 1e-6
+        assert float(jnp.mean(jnp.abs(back - x))) < tol
+
+    def test_encoder_roundtrip_structure(self):
+        (e,) = _encs(1)
+        back = quantized_roundtrip(e, 8)
+        assert set(back) == set(e)
+        for k in e:
+            assert back[k].shape == e[k].shape
+
+    def test_bits32_passthrough(self):
+        (e,) = _encs(1)
+        assert quantized_roundtrip(e, 32) is e
+
+    def test_encoder_bytes_scaling(self):
+        (e,) = _encs(1)
+        assert encoder_bytes(e, 8) * 4 == encoder_bytes(e, 32)
+        # 4-bit may round up to a whole byte
+        assert abs(encoder_bytes(e, 4) * 8 - encoder_bytes(e, 32)) <= 8

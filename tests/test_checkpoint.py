@@ -1,0 +1,36 @@
+"""Checkpoint round-trips for model params and federated server state."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.core.encoders import init_encoder
+
+
+class TestCheckpoint:
+    def test_roundtrip_nested(self, tmp_path):
+        tree = {"a": {"b": jnp.arange(6.0).reshape(2, 3),
+                      "c": [jnp.ones(4), jnp.zeros(2)]},
+                "d": jnp.asarray(3, jnp.int32)}
+        path = str(tmp_path / "ckpt.npz")
+        save_pytree(path, tree, meta={"round": 7})
+        back, meta = load_pytree(path, like=tree)
+        assert meta == {"round": 7}
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_flat_load(self, tmp_path):
+        enc = init_encoder(jax.random.key(0), (8, 4), 5)
+        path = str(tmp_path / "enc.npz")
+        save_pytree(path, {"m": enc})
+        flat, _ = load_pytree(path)
+        assert "m/w_x" in flat
+
+    def test_missing_leaf_raises(self, tmp_path):
+        path = str(tmp_path / "x.npz")
+        save_pytree(path, {"a": jnp.ones(2)})
+        with pytest.raises(KeyError):
+            load_pytree(path, like={"a": jnp.ones(2), "b": jnp.ones(2)})

@@ -1,0 +1,122 @@
+"""Data pipeline tests: registry shapes, generators, all five partitioners."""
+import numpy as np
+import pytest
+
+from repro.data import (DATASETS, get_dataset_spec, make_dataset,
+                        make_federation)
+from repro.data.partition import (partition_class_noniid, partition_iid,
+                                  partition_longtail,
+                                  partition_modality_noniid,
+                                  partition_natural)
+
+
+class TestRegistry:
+    def test_table1_counts(self):
+        assert get_dataset_spec("actionsense").num_clients == 9
+        assert get_dataset_spec("ucihar").num_clients == 30
+        assert get_dataset_spec("ptbxl").num_clients == 39
+        assert get_dataset_spec("meld").num_clients == 42
+        assert get_dataset_spec("dfc23").num_clients == 27
+
+    def test_table1_modalities(self):
+        assert len(get_dataset_spec("actionsense").modalities) == 6
+        spec = get_dataset_spec("dfc23")
+        assert all(m.kind == "image" for m in spec.modalities)
+        assert spec.modality("optical").shape == (32, 32, 3)
+
+    def test_ucihar_identical_encoder_sizes(self):
+        # the paper's §4.4 point: both UCI-HAR modalities have equal dims
+        spec = get_dataset_spec("ucihar")
+        assert spec.modalities[0].shape == spec.modalities[1].shape
+
+
+class TestGenerator:
+    @pytest.mark.parametrize("name", sorted(DATASETS))
+    def test_shapes_and_determinism(self, name):
+        ds = make_dataset(name, seed=3)
+        spec = ds.spec
+        labels = np.arange(spec.num_classes).repeat(2) % spec.num_classes
+        c1 = ds.sample_client(0, labels, spec.modality_names)
+        c2 = make_dataset(name, seed=3).sample_client(
+            0, labels, spec.modality_names)
+        for m in spec.modality_names:
+            exp = spec.modality(m).feature_shape(True)
+            assert c1.modalities[m].shape == (len(labels),) + exp
+            np.testing.assert_array_equal(c1.modalities[m],
+                                          c2.modalities[m])
+
+    def test_client_heterogeneity(self):
+        ds = make_dataset("ucihar", seed=0)
+        labels = np.zeros(4, np.int64)
+        a = ds.sample_client(0, labels, ["accelerometer"])
+        b = ds.sample_client(1, labels, ["accelerometer"])
+        assert not np.allclose(a.modalities["accelerometer"],
+                               b.modalities["accelerometer"])
+
+    def test_split(self):
+        ds = make_dataset("ucihar", seed=0)
+        data = ds.sample_client(0, np.arange(20) % 6, ["gyroscope"])
+        tr, te = data.split(0.8)
+        assert tr.num_samples == 16 and te.num_samples == 4
+
+
+class TestPartitioners:
+    def test_iid(self):
+        ds = make_dataset("ucihar", seed=0)
+        clients = partition_iid(ds, samples_per_client=24)
+        assert len(clients) == 30
+        for c in clients:
+            assert c.num_samples == 24
+            assert set(c.modality_names) == {"accelerometer", "gyroscope"}
+            # balanced-ish classes
+            assert len(np.unique(c.labels)) == 6
+
+    def test_natural_missing_modalities(self):
+        ds = make_dataset("actionsense", seed=0)
+        clients = partition_natural(ds, samples_per_client=16)
+        for k in (5, 6, 7, 8):
+            assert "tactile_left" not in clients[k].modalities
+            assert "tactile_right" not in clients[k].modalities
+        assert "tactile_left" in clients[0].modalities
+
+    def test_natural_skew(self):
+        ds = make_dataset("ptbxl", seed=0)
+        clients = partition_natural(ds, samples_per_client=64)
+        counts = sorted(c.num_samples for c in clients)
+        assert counts[-1] > 5 * counts[0]   # heavy head
+
+    def test_dirichlet_concentration(self):
+        ds = make_dataset("ucihar", seed=0)
+        skewed = partition_class_noniid(ds, beta=0.1, samples_per_client=60)
+        uniform = partition_class_noniid(ds, beta=100.0,
+                                         samples_per_client=60)
+
+        def mean_entropy(cs):
+            es = []
+            for c in cs:
+                p = np.bincount(c.labels, minlength=6) / c.num_samples
+                es.append(-(p[p > 0] * np.log(p[p > 0])).sum())
+            return np.mean(es)
+
+        assert mean_entropy(skewed) < mean_entropy(uniform) - 0.3
+
+    @pytest.mark.parametrize("rate", [0.3, 0.8])
+    def test_modality_noniid(self, rate):
+        ds = make_dataset("actionsense", seed=0)
+        clients = partition_modality_noniid(ds, missing_rate=rate,
+                                            samples_per_client=8)
+        for c in clients:
+            assert len(c.modality_names) >= 2       # keep_min
+        total = sum(len(c.modality_names) for c in clients)
+        assert total < 9 * 6                        # some dropped
+
+    def test_longtail_if(self):
+        ds = make_dataset("ucihar", seed=0)
+        clients = partition_longtail(ds, imbalance_factor=50,
+                                     max_samples=100)
+        counts = [c.num_samples for c in clients]
+        assert max(counts) / max(min(counts), 1) > 10
+
+    def test_make_federation_dispatch(self):
+        clients = make_federation("meld", "iid", samples_per_client=8)
+        assert len(clients) == 42

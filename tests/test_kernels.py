@@ -1,0 +1,139 @@
+"""Pallas kernel validation: shape/dtype sweeps, allclose vs ref.py oracles
+(interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,h,kv,s,d", [
+        (1, 4, 4, 64, 32),          # MHA
+        (2, 4, 2, 128, 32),         # GQA g=2
+        (1, 8, 1, 64, 64),          # MQA
+    ])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_shapes_vs_oracle(self, b, h, kv, s, d, causal):
+        ks = jax.random.split(jax.random.key(0), 3)
+        q = jax.random.normal(ks[0], (b, h, s, d))
+        k = jax.random.normal(ks[1], (b, kv, s, d))
+        v = jax.random.normal(ks[2], (b, kv, s, d))
+        out = ops.flash_attention(q, k, v, causal=causal,
+                                  block_q=32, block_k=32)
+        exp = ref.flash_attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   **_tol(q.dtype))
+
+    def test_window(self):
+        ks = jax.random.split(jax.random.key(1), 3)
+        q = jax.random.normal(ks[0], (1, 2, 128, 16))
+        k = jax.random.normal(ks[1], (1, 2, 128, 16))
+        v = jax.random.normal(ks[2], (1, 2, 128, 16))
+        out = ops.flash_attention(q, k, v, causal=True, window=32,
+                                  block_q=32, block_k=32)
+        exp = ref.flash_attention_ref(q, k, v, causal=True, window=32)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_bfloat16(self):
+        ks = jax.random.split(jax.random.key(2), 3)
+        q = jax.random.normal(ks[0], (1, 2, 64, 32), jnp.bfloat16)
+        k = jax.random.normal(ks[1], (1, 2, 64, 32), jnp.bfloat16)
+        v = jax.random.normal(ks[2], (1, 2, 64, 32), jnp.bfloat16)
+        out = ops.flash_attention(q, k, v, causal=True,
+                                  block_q=32, block_k=32)
+        exp = ref.flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(exp, np.float32),
+            **_tol(jnp.bfloat16))
+
+    def test_cross_block_boundary(self):
+        """Online-softmax must combine across k blocks: one strong kv hit
+        in the first block, queries in the last."""
+        s, d = 128, 16
+        q = jnp.zeros((1, 1, s, d)).at[:, :, -1, 0].set(10.0)
+        k = jnp.zeros((1, 1, s, d)).at[:, :, 3, 0].set(10.0)
+        v = jax.random.normal(jax.random.key(3), (1, 1, s, d))
+        out = ops.flash_attention(q, k, v, causal=True,
+                                  block_q=32, block_k=32)
+        exp = ref.flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestRGLRUScan:
+    @pytest.mark.parametrize("b,s,w,bt,bw", [
+        (1, 32, 32, 8, 16),
+        (2, 64, 64, 16, 32),
+        (2, 128, 32, 32, 32),       # single width block
+    ])
+    def test_vs_oracle(self, b, s, w, bt, bw):
+        ks = jax.random.split(jax.random.key(0), 4)
+        x = jax.random.normal(ks[0], (b, s, w))
+        wa = 0.05 * jax.random.normal(ks[1], (w, w))
+        wx = 0.05 * jax.random.normal(ks[2], (w, w))
+        lam = jax.random.normal(ks[3], (w,))
+        h, hl = ops.rglru_scan(x, wa, wx, lam, block_t=bt, block_w=bw)
+        hr, hlr = ref.rglru_scan_ref(x, wa, wx, lam)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(hl), np.asarray(hlr),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_state_carries_across_time_blocks(self):
+        """An impulse in the first time block must decay into later blocks."""
+        b, s, w = 1, 64, 32
+        x = jnp.zeros((b, s, w)).at[:, 0, :].set(1.0)
+        wa = jnp.zeros((w, w))       # r = 0.5 -> slow decay
+        wx = jnp.zeros((w, w))       # i = 0.5
+        lam = jnp.full((w,), -2.0)
+        h, _ = ops.rglru_scan(x, wa, wx, lam, block_t=8, block_w=32)
+        hr, _ = ref.rglru_scan_ref(x, wa, wx, lam)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
+                                   rtol=1e-5, atol=1e-6)
+        assert float(jnp.abs(h[:, 40:]).max()) > 0   # state propagated
+
+
+class TestMLSTMScan:
+    @pytest.mark.parametrize("b,h,s,dk,dv,chunk", [
+        (1, 2, 32, 16, 16, 8),
+        (2, 2, 64, 16, 32, 16),     # dk != dv
+        (1, 4, 128, 32, 32, 64),
+    ])
+    def test_vs_oracle(self, b, h, s, dk, dv, chunk):
+        ks = jax.random.split(jax.random.key(0), 5)
+        q = jax.random.normal(ks[0], (b, h, s, dk))
+        k = jax.random.normal(ks[1], (b, h, s, dk))
+        v = jax.random.normal(ks[2], (b, h, s, dv))
+        ip = jax.random.normal(ks[3], (b, h, s))
+        fp = jax.random.normal(ks[4], (b, h, s)) + 2.0
+        out, (C, n, m) = ops.mlstm_scan(q, k, v, ip, fp, chunk=chunk)
+        exp, (Cr, nr, mr) = ref.mlstm_scan_ref(q, k, v, ip, fp, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(C), np.asarray(Cr),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(m), np.asarray(mr),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_chunk_boundary_state(self):
+        """Different chunk sizes must give identical results (the carried
+        (C, n, m) state is exact, not approximate)."""
+        ks = jax.random.split(jax.random.key(7), 5)
+        b, h, s, d = 1, 1, 64, 8
+        q = jax.random.normal(ks[0], (b, h, s, d))
+        k = jax.random.normal(ks[1], (b, h, s, d))
+        v = jax.random.normal(ks[2], (b, h, s, d))
+        ip = jax.random.normal(ks[3], (b, h, s))
+        fp = jax.random.normal(ks[4], (b, h, s)) + 2.0
+        o8, _ = ops.mlstm_scan(q, k, v, ip, fp, chunk=8)
+        o32, _ = ops.mlstm_scan(q, k, v, ip, fp, chunk=32)
+        np.testing.assert_allclose(np.asarray(o8), np.asarray(o32),
+                                   rtol=1e-4, atol=1e-4)

@@ -1,0 +1,34 @@
+"""Launcher smoke tests (direct main() calls, tiny workloads)."""
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_train_launcher_smoke(tmp_path):
+    from repro.launch.train import main
+    ckpt = str(tmp_path / "ck.npz")
+    assert main(["--arch", "xlstm-125m", "--steps", "3",
+                 "--ckpt", ckpt]) == 0
+
+
+@pytest.mark.slow
+def test_serve_launcher_smoke():
+    from repro.launch.serve import main
+    assert main(["--arch", "phi3-medium-14b", "--tokens", "4",
+                 "--batch", "1", "--cache-len", "32"]) == 0
+
+
+@pytest.mark.slow
+def test_fed_train_launcher_smoke():
+    import subprocess, os
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.fed_train", "--dataset",
+         "ucihar", "--rounds", "1", "--devices", "2", "--steps", "2",
+         "--batch", "8"],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-1000:]
+    assert "done" in out.stdout

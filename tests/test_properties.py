@@ -1,0 +1,102 @@
+"""Hypothesis property tests on system invariants that cut across modules:
+quantization error bounds, selection/priority invariances, ledger linearity,
+and data-partitioner conservation laws."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core.aggregation import CommLedger, aggregate_modality
+from repro.core.quantize import dequantize_tensor, quantize_tensor
+from repro.core.selection import minmax_normalize, modality_priority
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+class TestQuantizeProperties:
+    @given(hnp.arrays(np.float32, hnp.array_shapes(min_dims=1, max_dims=3,
+                                                   max_side=16),
+                      elements=st.floats(-1e3, 1e3, width=32)),
+           st.sampled_from([4, 8]))
+    def test_roundtrip_error_bounded_by_half_step(self, x, bits):
+        xj = jnp.asarray(x)
+        codes, scale, zero = quantize_tensor(xj, bits)
+        back = dequantize_tensor(codes, scale, zero)
+        assert float(jnp.max(jnp.abs(back - xj))) <= scale / 2 + 1e-4
+
+    @given(hnp.arrays(np.float32, (8, 4),
+                      elements=st.floats(-10, 10, width=32)))
+    def test_codes_within_range(self, x):
+        codes, _, _ = quantize_tensor(jnp.asarray(x), 4)
+        assert int(jnp.max(codes)) <= 15 and int(jnp.min(codes)) >= 0
+
+
+class TestPriorityProperties:
+    @given(st.lists(st.floats(0, 10, width=32), min_size=2, max_size=6),
+           st.floats(0.01, 1), st.floats(0.01, 1), st.floats(0.01, 1))
+    def test_priority_in_unit_interval_scaled(self, phis, a, b, c):
+        """0 ≤ P ≤ α_s + α_c + α_r for any inputs."""
+        m = len(phis)
+        phi = np.array(phis)
+        sizes = np.linspace(100, 200, m)
+        rec = np.arange(m, dtype=float)
+        p = modality_priority(phi, sizes, rec, t=max(m, 1),
+                              alpha_s=a, alpha_c=b, alpha_r=c)
+        assert np.all(p >= -1e-9)
+        assert np.all(p <= a + b + c + 1e-9)
+
+    @given(st.lists(st.floats(-100, 100), min_size=2, max_size=8),
+           st.floats(0.1, 10), st.floats(-50, 50))
+    def test_minmax_invariant_to_affine(self, xs, scale, shift):
+        """Normalization is invariant to positive affine transforms."""
+        x = np.array(xs)
+        if np.ptp(x) < 1e-6:
+            return
+        a = minmax_normalize(x)
+        b = minmax_normalize(scale * x + shift)
+        np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+class TestAggregationProperties:
+    @given(st.integers(2, 5), st.integers(0, 10_000))
+    def test_permutation_invariance(self, n, seed):
+        """FedAvg must not depend on upload order."""
+        rng = np.random.default_rng(seed)
+        encs = [{"w": jnp.asarray(rng.standard_normal((4, 3)), jnp.float32)}
+                for _ in range(n)]
+        counts = rng.integers(1, 100, n).tolist()
+        agg1 = aggregate_modality(encs, counts)
+        perm = rng.permutation(n)
+        agg2 = aggregate_modality([encs[i] for i in perm],
+                                  [counts[i] for i in perm])
+        np.testing.assert_allclose(np.asarray(agg1["w"]),
+                                   np.asarray(agg2["w"]), rtol=1e-5)
+
+    @given(st.lists(st.floats(1, 1e6), min_size=1, max_size=20))
+    def test_ledger_linearity(self, amounts):
+        led = CommLedger()
+        for a in amounts:
+            led.record(a)
+        assert led.uploaded_bytes == pytest.approx(sum(amounts), rel=1e-9)
+        assert led.uploads == len(amounts)
+
+
+class TestDataProperties:
+    @given(st.integers(0, 1000))
+    def test_partition_conserves_labels_range(self, seed):
+        from repro.data import make_dataset
+        from repro.data.partition import partition_class_noniid
+        ds = make_dataset("ucihar", seed=seed % 7)
+        clients = partition_class_noniid(ds, beta=0.5, seed=seed,
+                                         samples_per_client=12)
+        assert len(clients) == 30
+        for c in clients:
+            assert c.labels.min() >= 0
+            assert c.labels.max() < 6
+            for m, arr in c.modalities.items():
+                assert arr.shape[0] == c.num_samples
+                assert np.isfinite(arr).all()

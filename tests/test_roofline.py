@@ -1,0 +1,121 @@
+"""Roofline metering tests: the jaxpr FLOP counter must multiply scan trip
+counts (the exact failure mode of XLA's cost_analysis), and the collective
+parser must weight while-body collectives by their trip count."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline import (analytic_hbm_bytes, collective_bytes,
+                            count_step_flops)
+from repro.roofline.collectives import (computation_multipliers,
+                                        split_computations)
+
+
+class TestJaxprFlops:
+    def test_plain_matmul(self):
+        a = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+        b = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+        flops = count_step_flops(lambda x, y: x @ y, a, b)
+        assert flops == pytest.approx(2 * 32 * 64 * 128, rel=0.01)
+
+    def test_scan_multiplies_trip_count(self):
+        d, L = 64, 8
+        h = jax.ShapeDtypeStruct((4, d), jnp.float32)
+        ws = jax.ShapeDtypeStruct((L, d, d), jnp.float32)
+
+        def f(h0, w):
+            out, _ = jax.lax.scan(lambda c, wi: (c @ wi, None), h0, w)
+            return out
+
+        flops = count_step_flops(f, h, ws)
+        assert flops == pytest.approx(L * 2 * 4 * d * d, rel=0.01)
+
+    def test_grad_roughly_3x_forward(self):
+        d = 32
+        x = jax.ShapeDtypeStruct((8, d), jnp.float32)
+        w = jax.ShapeDtypeStruct((d, d), jnp.float32)
+
+        def loss(ww, xx):
+            return jnp.sum((xx @ ww) ** 2)
+
+        fwd = count_step_flops(loss, w, x)
+        bwd = count_step_flops(jax.grad(loss), w, x)
+        assert 2.0 <= bwd / fwd <= 4.0
+
+    def test_remat_counts_recompute(self):
+        d, L = 32, 4
+        h = jax.ShapeDtypeStruct((4, d), jnp.float32)
+        ws = jax.ShapeDtypeStruct((L, d, d), jnp.float32)
+
+        def f(h0, w):
+            body = jax.checkpoint(lambda c, wi: (jnp.tanh(c @ wi), None))
+            out, _ = jax.lax.scan(body, h0, w)
+            return jnp.sum(out)
+
+        plain = count_step_flops(jax.grad(f, argnums=1), h, ws)
+        # remat bwd >= non-remat fwd * 3 (fwd + recompute + transpose)
+        fwd = count_step_flops(f, h, ws)
+        assert plain >= 2.5 * fwd
+
+    def test_batched_dot_general(self):
+        a = jax.ShapeDtypeStruct((2, 8, 16, 32), jnp.float32)
+        b = jax.ShapeDtypeStruct((2, 8, 32, 64), jnp.float32)
+        flops = count_step_flops(
+            lambda x, y: jnp.einsum("bhik,bhkj->bhij", x, y), a, b)
+        assert flops == pytest.approx(2 * 2 * 8 * 16 * 32 * 64, rel=0.01)
+
+
+SYNTH_HLO = """\
+HloModule test, entry_computation_layout={()->f32[]}
+
+%body.1 (param: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %p = (s32[], f32[128,256]) parameter(0)
+  %ar = f32[128,256]{1,0} all-reduce(%x), replica_groups={}
+  ROOT %t = (s32[], f32[128,256]) tuple(%i, %ar)
+}
+
+%cond.1 (param.1: (s32[], f32[128,256])) -> pred[] {
+  %p1 = (s32[], f32[128,256]) parameter(0)
+  %limit = s32[] constant(12)
+  ROOT %lt = pred[] compare(%iv, %limit), direction=LT
+}
+
+ENTRY %main (p: f32[128,256]) -> f32[] {
+  %w = (s32[], f32[128,256]) while(%init), condition=%cond.1, body=%body.1
+  %ag = f32[64,64]{1,0} all-gather(%y), replica_groups={}
+  ROOT %r = f32[] reduce(%z)
+}
+"""
+
+
+class TestCollectiveParser:
+    def test_split(self):
+        comps = split_computations(SYNTH_HLO)
+        assert set(comps) == {"body.1", "cond.1", "main"}
+
+    def test_trip_multiplier(self):
+        _, mult = computation_multipliers(SYNTH_HLO)
+        assert mult["body.1"] == 12
+        assert mult["main"] == 1
+
+    def test_weighted_bytes(self):
+        out = collective_bytes(SYNTH_HLO)
+        assert out["all-reduce"] == 12 * 128 * 256 * 4
+        assert out["all-gather"] == 64 * 64 * 4
+
+
+class TestAnalyticMemory:
+    def test_train_terms(self):
+        from repro.configs import get_config, get_shape
+        cfg = get_config("phi3-medium-14b")
+        shape = get_shape("train_4k")
+        m = analytic_hbm_bytes(cfg, shape, 256, 16)
+        assert m["total"] == m["params"] + m["acts"] + m["logits"] + m["cache"]
+        assert m["params"] > 0 and m["acts"] > 0
+
+    def test_decode_cache_dominates_params_at_32k(self):
+        from repro.configs import get_config, get_shape
+        cfg = get_config("yi-34b")
+        m = analytic_hbm_bytes(cfg, get_shape("decode_32k"), 256, 16)
+        assert m["cache"] > 0

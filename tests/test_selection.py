@@ -1,0 +1,146 @@
+"""Unit tests for the joint-selection math (Eqs. 9–20) against hand-computed
+values, plus hypothesis properties for the invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.selection import (RecencyTracker, joint_select,
+                                  minmax_normalize, modality_priority,
+                                  select_clients, select_top_gamma)
+
+
+class TestMinMax:
+    def test_hand(self):
+        out = minmax_normalize(np.array([1.0, 3.0, 2.0]))
+        np.testing.assert_allclose(out, [0.0, 1.0, 0.5])
+
+    def test_constant_vector(self):
+        np.testing.assert_allclose(minmax_normalize(np.array([2.0, 2.0])),
+                                   [0.0, 0.0])
+
+    @given(st.lists(st.floats(-1e6, 1e6), min_size=2, max_size=16))
+    def test_range(self, xs):
+        out = minmax_normalize(np.array(xs))
+        assert np.all(out >= 0.0) and np.all(out <= 1.0)
+
+
+class TestPriority:
+    def test_hand_computed_eq13(self):
+        # 3 modalities: shapley (.3, .1, .2), sizes (100, 300, 200), rec (0,2,1), t=3
+        phi = np.array([0.3, 0.1, 0.2])
+        sizes = np.array([100.0, 300.0, 200.0])
+        rec = np.array([0.0, 2.0, 1.0])
+        p = modality_priority(phi, sizes, rec, 3, 1 / 3, 1 / 3, 1 / 3)
+        # normalized: phi (1, 0, .5); size (0, 1, .5) -> 1-size (1, 0, .5);
+        # rec/t (0, 2/3, 1/3)
+        expect = (np.array([1, 0, .5]) + np.array([1, 0, .5])
+                  + np.array([0, 2 / 3, 1 / 3])) / 3
+        np.testing.assert_allclose(p, expect, rtol=1e-12)
+
+    def test_alpha_s_only_ranks_by_shapley(self):
+        phi = np.array([0.1, 0.9, 0.5])
+        p = modality_priority(phi, np.array([1., 2., 3.]),
+                              np.array([5., 0., 1.]), 6, 1.0, 0.0, 0.0)
+        assert np.argmax(p) == 1
+
+    def test_alpha_c_only_prefers_small(self):
+        p = modality_priority(np.array([0.9, 0.1]), np.array([100.0, 10.0]),
+                              np.zeros(2), 1, 0.0, 1.0, 0.0)
+        assert np.argmax(p) == 1
+
+    def test_negative_shapley_uses_magnitude(self):
+        p = modality_priority(np.array([-0.9, 0.1]), np.ones(2),
+                              np.zeros(2), 1, 1.0, 0.0, 0.0)
+        assert np.argmax(p) == 0
+
+    @given(st.integers(1, 6), st.integers(2, 6))
+    @settings(max_examples=30, deadline=None)
+    def test_top_gamma_cardinality(self, gamma, m):
+        names = [f"m{i}" for i in range(m)]
+        prio = np.random.default_rng(0).random(m)
+        sel = select_top_gamma(prio, names, gamma)
+        assert len(sel) == min(gamma, m)
+        assert len(set(sel)) == len(sel)
+        # selected are exactly the top-γ by priority
+        thresh = sorted(prio, reverse=True)[len(sel) - 1]
+        for s in sel:
+            assert prio[names.index(s)] >= thresh - 1e-12
+
+
+class TestRecency:
+    def test_eq11(self):
+        r = RecencyTracker(("a", "b"))
+        # never uploaded: T = t - (-1) - 1 = t
+        assert r.recency("a", 5) == 5
+        r.mark_uploaded(["a"], 5)
+        assert r.recency("a", 6) == 0       # just uploaded
+        assert r.recency("b", 6) == 6
+        assert r.recency("a", 9) == 3
+
+    def test_mark_resets_only_named(self):
+        r = RecencyTracker(("a", "b", "c"))
+        r.mark_uploaded(["b"], 3)
+        assert r.last_upload == {"a": -1, "b": 3, "c": -1}
+
+
+class TestClientSelection:
+    LOSSES = {0: 0.5, 1: 0.1, 2: 0.9, 3: 0.3, 4: 0.7}
+
+    def test_low_loss_eq18(self):
+        assert select_clients(self.LOSSES, 0.4) == [1, 3]
+
+    def test_high_loss(self):
+        assert select_clients(self.LOSSES, 0.4,
+                              criterion="high_loss") == [2, 4]
+
+    def test_ceil_delta_k(self):
+        # ⌈0.5 * 5⌉ = 3
+        assert len(select_clients(self.LOSSES, 0.5)) == 3
+        # ⌈0.01 * 5⌉ = 1
+        assert len(select_clients(self.LOSSES, 0.01)) == 1
+
+    def test_random_is_seeded_and_sized(self):
+        rng = np.random.default_rng(7)
+        out = select_clients(self.LOSSES, 0.4, criterion="random", rng=rng)
+        assert len(out) == 2 and set(out) <= set(self.LOSSES)
+
+    def test_loss_recency_pure_recency(self):
+        rec = {0: 9, 1: 0, 2: 5, 3: 1, 4: 7}
+        out = select_clients(self.LOSSES, 0.4, criterion="loss_recency",
+                             recency=rec, loss_weight=0.0)
+        assert out == [0, 4]        # stalest two
+
+    @given(st.floats(0.01, 1.0), st.integers(2, 20))
+    @settings(max_examples=30, deadline=None)
+    def test_cardinality_property(self, delta, k):
+        losses = {i: float(i) for i in range(k)}
+        out = select_clients(losses, delta)
+        assert len(out) == max(1, int(np.ceil(delta * k)))
+
+
+class TestJointSelect:
+    def test_eq20_composition(self):
+        prios = {
+            0: (["a", "b"], np.array([0.9, 0.1])),
+            1: (["a", "b"], np.array([0.2, 0.8])),
+            2: (["a"], np.array([0.5])),
+        }
+        losses = {0: 0.1, 1: 0.9, 2: 0.5}
+        res = joint_select(prios, losses, gamma=1, delta=0.34)
+        assert res.modality_choices == {0: ["a"], 1: ["b"], 2: ["a"]}
+        # ⌈0.34 · 3⌉ = 2 lowest-loss clients
+        assert res.selected_clients == [0, 2]
+        assert res.uploads == [(0, "a"), (2, "a")]
+        res1 = joint_select(prios, losses, gamma=1, delta=0.1)
+        assert res1.selected_clients == [0]
+
+    def test_comm_reduction_factor(self):
+        # γ/M̄ · δ (paper's Eq. after 20): 100 clients × 3 modalities,
+        # γ=1, δ=0.2 -> 20 uploads instead of 300
+        prios = {k: ([f"m{i}" for i in range(3)],
+                     np.random.default_rng(k).random(3))
+                 for k in range(100)}
+        losses = {k: float(k) for k in range(100)}
+        res = joint_select(prios, losses, gamma=1, delta=0.2)
+        assert len(res.uploads) == 20

@@ -1,0 +1,101 @@
+"""Shapley estimator tests: game-theoretic axioms as (hypothesis) properties
+on the exact interventional estimator, plus exact-vs-sampled agreement."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.fusion import fusion_forward, init_fusion
+from repro.core.shapley import exact_shapley, sampled_shapley, subset_masks
+
+
+def _setup(m=3, c=4, b=6, g=5, seed=0):
+    rng = np.random.default_rng(seed)
+    fusion = init_fusion(jax.random.key(seed), m, c)
+    preds = jnp.asarray(rng.random((b, m, c)), jnp.float32)
+    bg = jnp.asarray(rng.random((g, m, c)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, c, b), jnp.int32)
+    return fusion, preds, bg, y
+
+
+def _value(fusion, preds, bg, mask_vec, avail, y):
+    """Direct coalition value v(S) for cross-checking."""
+    b, m, c = preds.shape
+    g = bg.shape[0]
+    sm = jnp.asarray(mask_vec, jnp.float32)
+    mixed = (sm[None, None, :, None] * preds[:, None]
+             + (1 - sm)[None, None, :, None] * bg[None]).reshape(b * g, m, c)
+    logits = fusion_forward(fusion, mixed,
+                            jnp.broadcast_to(avail[None], (b * g, m)))
+    p = jax.nn.softmax(logits.astype(jnp.float32)).reshape(b, g, c)
+    pt = jnp.take_along_axis(p, jnp.broadcast_to(y[:, None, None], (b, g, 1)),
+                             axis=2)
+    return float(jnp.mean(pt))
+
+
+class TestSubsetMasks:
+    def test_enumeration(self):
+        m = subset_masks(3)
+        assert m.shape == (8, 3)
+        assert m.sum() == 12                 # each player in half the subsets
+        assert not m[0].any() and m[-1].all()
+
+
+class TestAxioms:
+    @pytest.mark.parametrize("m", [2, 3, 4])
+    def test_efficiency(self, m):
+        """Σφ = v(full) − v(∅) — the Shapley efficiency axiom."""
+        fusion, preds, bg, y = _setup(m=m)
+        avail = jnp.ones((m,), jnp.float32)
+        phi = exact_shapley(fusion, preds, bg, avail, y, num_modalities=m)
+        v_full = _value(fusion, preds, bg, np.ones(m), avail, y)
+        v_empty = _value(fusion, preds, bg, np.zeros(m), avail, y)
+        np.testing.assert_allclose(float(jnp.sum(phi)), v_full - v_empty,
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_dummy_player(self):
+        """A modality whose eval predictions equal the background ones has
+        zero marginal contribution in every coalition -> φ = 0."""
+        fusion, preds, bg, y = _setup(m=3, b=5, g=5)
+        # make modality 1 a dummy: identical rows in eval and background
+        const = jnp.broadcast_to(jnp.linspace(0, 1, 4)[None], (5, 4))
+        preds = preds.at[:, 1].set(const)
+        bg = bg.at[:, 1].set(const)
+        avail = jnp.ones((3,), jnp.float32)
+        phi = exact_shapley(fusion, preds, bg, avail, y, num_modalities=3)
+        assert abs(float(phi[1])) < 1e-6
+
+    def test_absent_modality_is_dummy(self):
+        """Zero-filled absent modalities get exactly φ = 0 and do not change
+        the other values vs the restricted game."""
+        fusion, preds, bg, y = _setup(m=3)
+        preds = preds.at[:, 2].set(0.0)
+        bg = bg.at[:, 2].set(0.0)
+        avail = jnp.asarray([1.0, 1.0, 0.0])
+        phi = exact_shapley(fusion, preds, bg, avail, y, num_modalities=3)
+        assert abs(float(phi[2])) < 1e-6
+
+    @given(st.integers(0, 1000))
+    @settings(max_examples=10, deadline=None)
+    def test_efficiency_random_instances(self, seed):
+        fusion, preds, bg, y = _setup(m=3, seed=seed)
+        avail = jnp.ones((3,), jnp.float32)
+        phi = exact_shapley(fusion, preds, bg, avail, y, num_modalities=3)
+        v_full = _value(fusion, preds, bg, np.ones(3), avail, y)
+        v_empty = _value(fusion, preds, bg, np.zeros(3), avail, y)
+        np.testing.assert_allclose(float(jnp.sum(phi)), v_full - v_empty,
+                                   rtol=1e-3, atol=1e-5)
+
+
+class TestSampledEstimator:
+    def test_agrees_with_exact(self):
+        fusion, preds, bg, y = _setup(m=3)
+        avail = jnp.ones((3,), jnp.float32)
+        phi_e = exact_shapley(fusion, preds, bg, avail, y, num_modalities=3)
+        phi_s = sampled_shapley(fusion, preds, bg, avail, y,
+                                num_modalities=3, num_permutations=200,
+                                rng=np.random.default_rng(0))
+        np.testing.assert_allclose(np.asarray(phi_s), np.asarray(phi_e),
+                                   atol=0.02)

@@ -1,0 +1,63 @@
+"""Sharding-rule regressions found during the dry-run: vocab padding and
+the sequence-sharded decode cache default."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_config, list_archs
+from repro.models.model import cache_specs, param_specs
+from repro.sharding.partition import cache_pspecs, param_pspecs, register_mesh
+
+
+class _FakeMesh:
+    shape = {"data": 16, "model": 16}
+
+
+class TestVocabPadding:
+    @pytest.mark.parametrize("arch", list_archs())
+    def test_padded_vocab_divides_model_axis(self, arch):
+        cfg = get_config(arch)
+        assert cfg.padded_vocab % 256 == 0
+        assert cfg.padded_vocab >= cfg.vocab_size
+        assert cfg.padded_vocab - cfg.vocab_size < 256
+
+    def test_embed_uses_padded(self):
+        cfg = get_config("granite-moe-1b-a400m")
+        specs = param_specs(cfg)
+        assert specs["embed"].shape[0] == cfg.padded_vocab
+        assert specs["lm_head"].shape[1] == cfg.padded_vocab
+
+
+class TestCacheSeqSharding:
+    def _kv_specs(self, arch, seq_shard):
+        register_mesh(_FakeMesh())
+        cfg = get_config(arch)
+        shape = INPUT_SHAPES["decode_32k"]
+        specs = cache_specs(cfg, shape.global_batch, shape.seq_len)
+        return cfg, cache_pspecs(cfg, specs, shape, False,
+                                 seq_shard=seq_shard)
+
+    def test_default_shards_sequence_over_model(self):
+        cfg, pspecs = self._kv_specs("yi-34b", True)
+        k_spec = pspecs["layers"]["k"]
+        # [L, B, T, KV, hd]: batch on data, seq on model
+        assert k_spec[1] == "data"
+        assert k_spec[2] == "model"
+
+    def test_baseline_replicates_sequence(self):
+        cfg, pspecs = self._kv_specs("yi-34b", False)
+        k_spec = pspecs["layers"]["k"]
+        assert k_spec[2] is None
+
+    def test_long500k_context_parallel(self):
+        register_mesh(_FakeMesh())
+        cfg = get_config("xlstm-125m")
+        # SSM carries recurrent state — no T dim; use a dense arch instead
+        cfg = get_config("phi3-medium-14b")
+        shape = INPUT_SHAPES["long_500k"]
+        specs = cache_specs(cfg, shape.global_batch, shape.seq_len)
+        pspecs = cache_pspecs(cfg, specs, shape, False)
+        k_spec = pspecs["layers"]["k"]
+        # batch==1: sequence sharded over every axis
+        assert k_spec[2] == ("data", "model")
