@@ -1,0 +1,140 @@
+"""Python-loop vs. batched federation rounds across client counts.
+
+    PYTHONPATH=src python -m benchmarks.bench_batched_round \
+        [--full] [--out BENCH_batched_round.json]
+
+Builds a homogeneous synthetic federation of K clients (two LSTM modalities,
+UCI-HAR shapes) and times one full ``run_federation`` round per backend —
+identical selection/aggregation phases, so the measured gap is the Local
+Learning phase: K·M·E per-batch jit dispatches (loop) vs. E vmapped
+scans over the stacked [K, ...] population (batched).
+
+Emits ``BENCH_batched_round.json`` with per-K wall seconds and speedup, and
+supports the ``benchmarks.run`` Row contract.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row, Timer
+from repro.core.client import make_client
+from repro.core.rounds import MFedMCConfig, run_federation
+from repro.data.registry import get_dataset_spec
+from repro.data.synthetic import ClientData
+
+
+def synthetic_federation(K: int, n: int = 48, seed: int = 0):
+    """K homogeneous clients with UCI-HAR-shaped modalities (arbitrary K —
+    the registry's fixed client counts don't apply to a scaling bench)."""
+    spec = get_dataset_spec("ucihar")
+    rng = np.random.default_rng(seed)
+    clients = []
+    for k in range(K):
+        labels = np.tile(np.arange(spec.num_classes),
+                         n // spec.num_classes + 1)[:n]
+        rng.shuffle(labels)
+        mods = {
+            m.name: rng.standard_normal(
+                (n, *m.feature_shape(True))).astype(np.float32)
+            for m in spec.modalities
+        }
+        data = ClientData(k, mods, labels.astype(np.int32), spec.num_classes)
+        clients.append(make_client(k, spec, data, seed=seed))
+    return clients, spec
+
+
+def _bench_cfg(**kw) -> MFedMCConfig:
+    base = dict(rounds=1, local_epochs=2, batch_size=16, seed=0,
+                modality_strategy="random", client_strategy="random",
+                gamma=1)
+    base.update(kw)
+    return MFedMCConfig(**base)
+
+
+def time_round(K: int, backend: str, *, n: int = 48,
+               warm: bool = True) -> float:
+    """Steady-state wall seconds for one federation round.
+
+    The warm run uses the SAME K: the batched backend's compiled programs
+    are shaped [K, ...], so a smaller warm-up would leave the measured run
+    paying the XLA compile (the loop backend's per-batch step is
+    K-independent and warms either way).
+    """
+    if warm:
+        clients, spec = synthetic_federation(K, n=n)
+        run_federation(clients, spec, _bench_cfg(), backend=backend)
+    clients, spec = synthetic_federation(K, n=n)
+    with Timer() as t:
+        run_federation(clients, spec, _bench_cfg(), backend=backend)
+    return t.us / 1e6
+
+
+def run(fast: bool = True) -> List[Row]:
+    ks = [8, 32] if fast else [8, 32, 128]
+    rows = []
+    for K in ks:
+        loop_s = time_round(K, "loop")
+        batched_s = time_round(K, "batched")
+        rows.append(Row(f"batched_round/K{K}/loop", loop_s * 1e6,
+                        f"round_s={loop_s:.2f}"))
+        rows.append(Row(f"batched_round/K{K}/batched", batched_s * 1e6,
+                        f"speedup={loop_s / batched_s:.2f}x"))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="also run K=128 (several minutes on CPU)")
+    ap.add_argument("--ks", default=None,
+                    help="comma-separated client counts (overrides --full)")
+    ap.add_argument("--samples", type=int, default=48)
+    ap.add_argument("--out", default="BENCH_batched_round.json")
+    args = ap.parse_args(argv)
+
+    if args.ks:
+        ks = [int(k) for k in args.ks.split(",")]
+    else:
+        ks = [8, 32, 128]
+
+    results = []
+    for K in ks:
+        t0 = time.time()
+        loop_s = time_round(K, "loop", n=args.samples)
+        batched_s = time_round(K, "batched", n=args.samples)
+        results.append({
+            "K": K,
+            "loop_s": round(loop_s, 4),
+            "batched_s": round(batched_s, 4),
+            "speedup": round(loop_s / batched_s, 3),
+        })
+        print(f"K={K:4d} loop={loop_s:7.2f}s batched={batched_s:7.2f}s "
+              f"speedup={loop_s / batched_s:5.2f}x "
+              f"(total {time.time() - t0:.0f}s)", flush=True)
+
+    payload = {
+        "benchmark": "batched_round",
+        "config": {
+            "dataset_shapes": "ucihar (reduced)",
+            "modalities": 2,
+            "samples_per_client": args.samples,
+            "local_epochs": 2,
+            "batch_size": 16,
+            "rounds_timed": 1,
+        },
+        "results": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

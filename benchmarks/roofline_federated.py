@@ -41,14 +41,10 @@ for mode in ("flat", "hierarchical", "flat_bf16_uplink"):
                                hierarchical=(mode == "hierarchical"),
                                uplink_dtype=(jnp.bfloat16 if "bf16" in mode
                                              else None))
-    prev = jax.sharding.get_mesh()
-    jax.sharding.set_mesh(mesh)
-    try:
+    with mesh:
         lowered = jax.jit(rnd).lower(specs["params"], specs["batches"],
                                      specs["select"], specs["weight"])
         compiled = lowered.compile()
-    finally:
-        jax.sharding.set_mesh(prev)
     coll = collective_bytes(compiled.as_text())
     flops = count_step_flops(rnd, specs["params"], specs["batches"],
                              specs["select"], specs["weight"])

@@ -35,7 +35,7 @@ v = S((B, T, KV, D), jnp.bfloat16)
 kv_pos = S((T,), jnp.int32)
 pos = S((), jnp.int32)
 seq_axes = ("pod", "data", "model")
-jax.sharding.set_mesh(mesh)
+mesh.__enter__()  # ambient mesh for shard_map lowering
 out = []
 
 # explicit shard_map flash-decode

@@ -25,6 +25,7 @@ MODULES = [
     "fig11_quantization",
     "table7_runtime",
     "fig12_shapley_runtime",
+    "bench_batched_round",
     "roofline",
     "roofline_federated",
     "roofline_flash_decode",

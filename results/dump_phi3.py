@@ -24,7 +24,7 @@ opt = adamw(1e-4)
 o_specs = jax.eval_shape(opt.init, p_specs)
 o_sh = dr._opt_shardings(p_specs, o_specs, mesh)
 step = make_train_step(cfg, opt, shape)
-jax.sharding.set_mesh(mesh)
+mesh.__enter__()  # ambient mesh for shard_map lowering
 compiled = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
                    out_shardings=(p_sh, o_sh, None), donate_argnums=(0,1)
                    ).lower(p_specs, o_specs, in_specs).compile()

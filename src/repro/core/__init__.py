@@ -10,12 +10,17 @@ Layers:
     quantize.py    — 4/8-bit uplink quantization (§4.10)
     client.py      — client state + Algorithm 1 local phases
     rounds.py      — the federation loop with every §4 ablation knob
+                     (backend='loop' reference / 'batched' fast path)
+    batched.py     — vmapped stacked local learning (the simulator's
+                     hot-path backend; same layout the mesh shards)
     baselines.py   — FL-FD / MMFed / FedMultimodal / FLASH / Harmony
     distributed.py — the datacenter mapping: clients on the mesh 'data'
-                     axis, selective upload as masked sparse all-reduce
+                     axis, selective upload as masked sparse all-reduce,
+                     single- and multi-modality jit'd rounds
 """
 from repro.core.aggregation import (CommLedger, ICI_LINK, IOT_UPLINK,
                                     TransportModel, aggregate_modality)
+from repro.core.batched import batched_local_learning, plan_permutations
 from repro.core.client import Client, make_client
 from repro.core.encoders import (encoder_bytes, encoder_eval,
                                  encoder_forward, encoder_num_params,
@@ -35,7 +40,8 @@ from repro.core.shapley import exact_shapley, sampled_shapley, subset_masks
 
 __all__ = [
     "CommLedger", "ICI_LINK", "IOT_UPLINK", "TransportModel",
-    "aggregate_modality", "Client", "make_client", "encoder_bytes",
+    "aggregate_modality", "batched_local_learning", "plan_permutations",
+    "Client", "make_client", "encoder_bytes",
     "encoder_eval", "encoder_forward", "encoder_num_params",
     "encoder_predict", "encoder_sgd_step", "init_encoder", "fusion_eval",
     "fusion_forward", "fusion_sgd_step", "init_fusion", "dequantize_encoder",

@@ -1,0 +1,297 @@
+"""Batched local learning — the simulator's hot path as vmapped SGD.
+
+``run_federation(backend="batched")`` replaces Algorithm 1's per-client
+Python loop (Local Learning) with a stacked computation: clients with the
+same *training signature* — modality set, per-modality array shapes (which
+include the sample count) — are packed onto a leading K axis and each
+modality's encoder population trains with one jit'd ``vmap(scan(sgd_step))``
+per epoch. This is exactly the client-stacked layout the mesh engine
+(``repro.core.distributed``) shards over the ``data`` axis, so the simulator
+fast path and the datacenter round are the same program at different scales.
+
+Clients whose signature nobody else shares (ragged federations: structural
+missing modalities, skewed sample counts) fall back to the per-client loop —
+semantics are identical either way.
+
+RNG parity: the loop backend draws one ``rng.permutation(n)`` per
+(client, modality, epoch) and per (client, fusion-epoch), interleaved in
+client order. :func:`plan_permutations` precomputes exactly that sequence up
+front, so both backends consume the shared generator identically — every
+downstream phase (Shapley subsampling, random strategies, availability) sees
+bit-identical randomness, and round-1 aggregates match the loop backend to
+float tolerance (the parity test pins this at 1e-5).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import encoders as enc
+from repro.core.client import Client
+from repro.core.encoders import encoder_loss
+from repro.core.fusion import fusion_loss
+
+
+@dataclass
+class ClientPlan:
+    """One client's precomputed shuffles for a round's local learning."""
+    client: Client
+    encoder_perms: Dict[str, List[np.ndarray]]   # modality -> one perm per epoch
+    fusion_perms: List[np.ndarray]               # one perm per fusion epoch
+
+
+def plan_permutations(clients: Sequence[Client], epochs: int,
+                      rng: np.random.Generator) -> List[ClientPlan]:
+    """Draw every shuffle the loop backend would draw, in its exact order:
+    per client, first the encoder perms (modalities in name order, then
+    epochs), then the Stage-#1 fusion perms."""
+    plans = []
+    for c in clients:
+        n = c.train.num_samples
+        eperms = {m: [rng.permutation(n) for _ in range(epochs)]
+                  for m in c.modality_names}
+        fperms = [rng.permutation(n) for _ in range(epochs)]
+        plans.append(ClientPlan(c, eperms, fperms))
+    return plans
+
+
+def _signature(c: Client) -> Tuple:
+    """Clients pack together iff every modality array has identical shape."""
+    return tuple((m, c.train.modalities[m].shape) for m in c.modality_names)
+
+
+@functools.partial(jax.jit, static_argnames=("lr",))
+def batched_epoch(params, xs, ys, lr: float):
+    """One epoch of independent per-client SGD over stacked full batches.
+
+    params: pytree with leading K axis; xs: [K, S, B, ...]; ys: [K, S, B]
+    -> (new params, per-step losses [K, S])
+    """
+    def client_epoch(p, bx, by):
+        def step(pp, xy):
+            x, y = xy
+            loss, g = jax.value_and_grad(encoder_loss)(pp, x, y)
+            return jax.tree.map(lambda a, b: a - lr * b, pp, g), loss
+        return jax.lax.scan(step, p, (bx, by))
+
+    return jax.vmap(client_epoch)(params, xs, ys)
+
+
+@functools.partial(jax.jit, static_argnames=("lr",))
+def batched_step(params, x, y, lr: float):
+    """One vmapped SGD step (the epoch's trailing partial batch).
+
+    params: pytree with leading K axis; x: [K, r, ...]; y: [K, r]
+    -> (new params, losses [K])
+    """
+    def one(p, xx, yy):
+        loss, g = jax.value_and_grad(encoder_loss)(p, xx, yy)
+        return jax.tree.map(lambda a, b: a - lr * b, p, g), loss
+
+    return jax.vmap(one)(params, x, y)
+
+
+def train_group_encoders(plans: Sequence[ClientPlan], *, epochs: int,
+                         lr: float, batch_size: int) -> None:
+    """Train one signature-group's encoders batched, per modality.
+
+    Mirrors ``Client.train_encoders`` exactly: E epochs, each a sequence of
+    ⌊n/B⌋ full batches plus one trailing partial batch, per-epoch shuffles
+    from the plan; caches the final-epoch mean loss ℓ_m^k per client.
+    """
+    clients = [p.client for p in plans]
+    for c in clients:
+        c.losses = {}
+    for m in clients[0].modality_names:
+        stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves),
+                               *[c.encoders[m] for c in clients])
+        x = np.stack([np.asarray(c.train.modalities[m]) for c in clients])
+        y = np.stack([np.asarray(c.train.labels) for c in clients])
+        kg, n = x.shape[0], x.shape[1]
+        full, rem = divmod(n, batch_size)
+        gather = np.arange(kg)[:, None]
+        last = np.zeros((kg, 1), np.float64)     # epochs == 0 -> loss 0.0
+        for e in range(epochs):
+            idx = np.stack([p.encoder_perms[m][e] for p in plans])
+            xe, ye = x[gather, idx], y[gather, idx]
+            step_losses = []
+            if full:
+                xf = jnp.asarray(xe[:, :full * batch_size].reshape(
+                    kg, full, batch_size, *x.shape[2:]))
+                yf = jnp.asarray(ye[:, :full * batch_size].reshape(
+                    kg, full, batch_size))
+                stacked, lf = batched_epoch(stacked, xf, yf, lr)
+                step_losses.append(np.asarray(lf, np.float64))
+            if rem:
+                xr = jnp.asarray(xe[:, full * batch_size:])
+                yr = jnp.asarray(ye[:, full * batch_size:])
+                stacked, lp = batched_step(stacked, xr, yr, lr)
+                step_losses.append(np.asarray(lp, np.float64)[:, None])
+            last = np.concatenate(step_losses, axis=1)
+        for k, c in enumerate(clients):
+            c.encoders[m] = jax.tree.map(lambda v: v[k], stacked)
+            c.losses[m] = float(np.mean(last[k]))
+
+
+@functools.partial(jax.jit, static_argnames=("lr",))
+def batched_fusion_epoch(params, preds, mask, ys, lr: float):
+    """One epoch of per-client fusion SGD over stacked full batches.
+
+    params: pytree with leading K axis; preds: [K, S, B, M, C];
+    mask: [M] (identical within a signature group); ys: [K, S, B]
+    """
+    def client_epoch(p, bp, by):
+        def step(pp, xy):
+            x, y = xy
+            loss, g = jax.value_and_grad(fusion_loss)(pp, x, mask, y)
+            return jax.tree.map(lambda a, b: a - lr * b, pp, g), loss
+        return jax.lax.scan(step, p, (bp, by))
+
+    return jax.vmap(client_epoch)(params, preds, ys)
+
+
+@functools.partial(jax.jit, static_argnames=("lr",))
+def batched_fusion_step(params, preds, mask, y, lr: float):
+    def one(p, xx, yy):
+        loss, g = jax.value_and_grad(fusion_loss)(p, xx, mask, yy)
+        return jax.tree.map(lambda a, b: a - lr * b, p, g), loss
+
+    return jax.vmap(one)(params, preds, y)
+
+
+@jax.jit
+def _batched_predict(stacked_params, xs):
+    return jax.vmap(enc.encoder_predict)(stacked_params, xs)
+
+
+@jax.jit
+def _batched_predict_probs(stacked_params, xs):
+    return jax.vmap(enc.encoder_predict_probs)(stacked_params, xs)
+
+
+def _group_predictions(clients: Sequence[Client]) -> np.ndarray:
+    """Stacked ``Client.predictions`` for one signature group: [K, n, M, C]
+    with zero columns at absent modalities (one-hot predictions are argmax
+    outputs, so the vmapped forward matches the per-client one bitwise up
+    to logit ties)."""
+    c0 = clients[0]
+    n = c0.train.num_samples
+    nc = c0.spec.num_classes
+    cols = []
+    for m in c0.all_modalities:
+        if m in c0.encoders and m in c0.train.modalities:
+            stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves),
+                                   *[c.encoders[m] for c in clients])
+            xs = jnp.asarray(np.stack(
+                [np.asarray(c.train.modalities[m]) for c in clients]))
+            fn = (_batched_predict_probs if c0.fusion_input == "probs"
+                  else _batched_predict)
+            cols.append(np.asarray(fn(stacked, xs)))
+        else:
+            cols.append(np.zeros((len(clients), n, nc), np.float32))
+    return np.stack(cols, axis=2)                        # [K, n, M, C]
+
+
+def train_group_fusion(clients: Sequence[Client],
+                       perms: Sequence[Sequence[np.ndarray]], *,
+                       epochs: int, lr: float, batch_size: int) -> None:
+    """One signature-group's Stage-#1/#2 fusion training, batched.
+
+    Mirrors ``Client.train_fusion``: predictions computed once with frozen
+    encoders, then E epochs of planned-shuffle minibatch SGD.
+    """
+    preds = _group_predictions(clients)                  # [K, n, M, C]
+    y = np.stack([np.asarray(c.train.labels) for c in clients])
+    mask = jnp.asarray(clients[0].avail_mask())
+    stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves),
+                           *[c.fusion for c in clients])
+    kg, n = y.shape
+    full, rem = divmod(n, batch_size)
+    gather = np.arange(kg)[:, None]
+    for e in range(epochs):
+        idx = np.stack([p[e] for p in perms])
+        pe, ye = preds[gather, idx], y[gather, idx]
+        if full:
+            pf = jnp.asarray(pe[:, :full * batch_size].reshape(
+                kg, full, batch_size, *preds.shape[2:]))
+            yf = jnp.asarray(ye[:, :full * batch_size].reshape(
+                kg, full, batch_size))
+            stacked, _ = batched_fusion_epoch(stacked, pf, mask, yf, lr)
+        if rem:
+            pr = jnp.asarray(pe[:, full * batch_size:])
+            yr = jnp.asarray(ye[:, full * batch_size:])
+            stacked, _ = batched_fusion_step(stacked, pr, mask, yr, lr)
+    for k, c in enumerate(clients):
+        c.fusion = jax.tree.map(lambda v: v[k], stacked)
+
+
+def _grouped(plans: Sequence[ClientPlan]) -> Dict[Tuple, List[ClientPlan]]:
+    groups: Dict[Tuple, List[ClientPlan]] = {}
+    for p in plans:
+        groups.setdefault(_signature(p.client), []).append(p)
+    return groups
+
+
+def batched_local_learning(clients: Sequence[Client], cfg,
+                           rng: np.random.Generator, *,
+                           min_group: int = 2) -> None:
+    """Algorithm 1's Local Learning phase, batched.
+
+    1. plan all shuffles (loop-order RNG parity);
+    2. group clients by training signature; groups of ≥ ``min_group`` train
+       encoders stacked, singletons fall back to the per-client loop;
+    3. Stage-#1 fusion, batched per group the same way.
+    """
+    plans = plan_permutations(clients, cfg.local_epochs, rng)
+    groups = _grouped(plans)
+    for plist in groups.values():
+        if len(plist) < min_group:
+            for p in plist:
+                p.client.train_encoders(cfg.local_epochs, cfg.lr_encoder,
+                                        cfg.batch_size, None,
+                                        perms=p.encoder_perms)
+        else:
+            train_group_encoders(plist, epochs=cfg.local_epochs,
+                                 lr=cfg.lr_encoder,
+                                 batch_size=cfg.batch_size)
+    for plist in groups.values():
+        if len(plist) < min_group:
+            for p in plist:
+                p.client.train_fusion(cfg.local_epochs, cfg.lr_fusion,
+                                      cfg.batch_size, None,
+                                      perms=p.fusion_perms)
+        else:
+            train_group_fusion([p.client for p in plist],
+                               [p.fusion_perms for p in plist],
+                               epochs=cfg.local_epochs, lr=cfg.lr_fusion,
+                               batch_size=cfg.batch_size)
+
+
+def batched_fusion_stage(clients: Sequence[Client], cfg,
+                         rng: np.random.Generator, *,
+                         min_group: int = 2) -> None:
+    """Stage-#2 fusion fine-tune (Local Deploying), batched.
+
+    Draws the per-client epoch shuffles in client order first — the same
+    order the loop backend consumes ``rng`` — then trains signature groups
+    stacked."""
+    perms = [[rng.permutation(c.train.num_samples)
+              for _ in range(cfg.local_epochs)] for c in clients]
+    groups: Dict[Tuple, List[int]] = {}
+    for i, c in enumerate(clients):
+        groups.setdefault(_signature(c), []).append(i)
+    for idxs in groups.values():
+        if len(idxs) < min_group:
+            for i in idxs:
+                clients[i].train_fusion(cfg.local_epochs, cfg.lr_fusion,
+                                        cfg.batch_size, None, perms=perms[i])
+        else:
+            train_group_fusion([clients[i] for i in idxs],
+                               [perms[i] for i in idxs],
+                               epochs=cfg.local_epochs, lr=cfg.lr_fusion,
+                               batch_size=cfg.batch_size)

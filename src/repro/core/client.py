@@ -56,11 +56,11 @@ class Client:
 
     # ------------------------------------------------------------------
     def _batches(self, data: ClientData, modality: str, batch_size: int,
-                 rng: np.random.Generator):
+                 rng: Optional[np.random.Generator], perm=None):
         x = data.modalities[modality]
         y = data.labels
         n = len(y)
-        idx = rng.permutation(n)
+        idx = rng.permutation(n) if perm is None else np.asarray(perm)
         for i in range(0, n, batch_size):
             sel = idx[i:i + batch_size]
             if len(sel) == 0:
@@ -68,16 +68,25 @@ class Client:
             yield jnp.asarray(x[sel]), jnp.asarray(y[sel])
 
     def train_encoders(self, epochs: int, lr: float, batch_size: int,
-                       rng: np.random.Generator) -> Dict[str, float]:
+                       rng: Optional[np.random.Generator], *,
+                       perms: Optional[Dict[str, List[np.ndarray]]] = None
+                       ) -> Dict[str, float]:
         """E epochs of SGD per modality encoder (Eq. 6). Returns and caches
-        the final-epoch mean loss ℓ_m^k per modality."""
+        the final-epoch mean loss ℓ_m^k per modality.
+
+        ``perms`` — optional precomputed shuffles, ``{modality: [perm] * E}``
+        (the batched backend plans all permutations up front so both backends
+        consume the shared generator in the same order); when given, ``rng``
+        is not touched."""
         out: Dict[str, float] = {}
         for m in self.modality_names:
             params = self.encoders[m]
             last = 0.0
-            for _ in range(epochs):
+            for e in range(epochs):
+                perm = None if perms is None else perms[m][e]
                 losses = []
-                for xb, yb in self._batches(self.train, m, batch_size, rng):
+                for xb, yb in self._batches(self.train, m, batch_size, rng,
+                                            perm=perm):
                     params, loss = enc.encoder_sgd_step(params, xb, yb, lr=lr)
                     losses.append(float(loss))
                 last = float(np.mean(losses)) if losses else 0.0
@@ -107,14 +116,18 @@ class Client:
         return jnp.stack(cols, axis=1), jnp.asarray(data.labels)
 
     def train_fusion(self, epochs: int, lr: float, batch_size: int,
-                     rng: np.random.Generator) -> float:
-        """Train ω^k with frozen encoders (Stage #1 / Stage #2)."""
+                     rng: Optional[np.random.Generator], *,
+                     perms: Optional[List[np.ndarray]] = None) -> float:
+        """Train ω^k with frozen encoders (Stage #1 / Stage #2).
+
+        ``perms`` — optional precomputed shuffles (one per epoch); when
+        given, ``rng`` is not touched."""
         preds, y = self.predictions(self.train)
         mask = jnp.asarray(self.avail_mask())
         n = preds.shape[0]
         last = 0.0
-        for _ in range(epochs):
-            idx = rng.permutation(n)
+        for e in range(epochs):
+            idx = rng.permutation(n) if perms is None else np.asarray(perms[e])
             losses = []
             for i in range(0, n, batch_size):
                 sel = jnp.asarray(idx[i:i + batch_size])

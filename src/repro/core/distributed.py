@@ -22,7 +22,7 @@ algorithm becomes a *sparse, masked cross-device reduction*:
 from __future__ import annotations
 
 import functools
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -120,6 +120,82 @@ def make_federated_round(mesh, *, local_steps: int, lr: float = 0.1,
         return deployed, agg, per_client_loss
 
     return round_fn
+
+
+def make_multimodal_federated_round(mesh, *, local_steps: int,
+                                    lr: float = 0.1,
+                                    loss_fn: Callable = encoder_loss,
+                                    hierarchical: bool = False,
+                                    uplink_dtype=None):
+    """The batched multi-modality round: every modality's encoder population
+    trains and aggregates inside ONE jit'd mesh program.
+
+    Each modality carries its own stacked pytree (clients on the leading K
+    axis, sharded over the mesh client axes) and its own [K] 0/1 mask, so the
+    joint modality-and-client selection (Eq. 20) — not just client selection —
+    gates Eq. 21's weighted all-reduce per (client, modality) pair.
+
+    Signature of the returned fn (all dicts keyed by modality name):
+        (params,    # {m: pytree with leading K axis}
+         batches,   # {m: {"x": [K, S, B, ...], "y": [K, S, B]}}
+         select,    # {m: [K] float 0/1} — per-(client, modality) mask
+         weight)    # {m: [K] float}     — |D_m^k| sample counts
+        -> (deployed, aggregated, per_client_loss) dicts keyed by modality
+
+    The python loop over modalities unrolls at trace time: XLA sees one
+    program with M independent masked reductions and can overlap their
+    collectives. A modality whose mask is all-zero skips the broadcast and
+    keeps each client's locally-trained params (denominator guard in the
+    single-modality round).
+    """
+    single = make_federated_round(mesh, local_steps=local_steps, lr=lr,
+                                  loss_fn=loss_fn, hierarchical=hierarchical,
+                                  uplink_dtype=uplink_dtype)
+
+    def round_fn(params: Dict, batches: Dict, select: Dict, weight: Dict):
+        deployed: Dict = {}
+        agg: Dict = {}
+        losses: Dict = {}
+        for m in sorted(params):
+            deployed[m], agg[m], losses[m] = single(
+                params[m], batches[m], select[m], weight[m])
+        return deployed, agg, losses
+
+    return round_fn
+
+
+def selection_masks(choices: Mapping[int, Sequence[str]],
+                    selected_clients: Sequence[int],
+                    num_clients: int,
+                    modality_names: Sequence[str]) -> Dict[str, jnp.ndarray]:
+    """Joint selection (Eq. 20) -> per-modality [K] 0/1 device masks.
+
+    ``choices`` maps client id -> modality names that client would upload
+    (top-γ, Eq. 16); ``selected_clients`` are the server-kept ids (Eq. 19).
+    Client ids index the stacked K axis directly.
+    """
+    chosen = set(int(k) for k in selected_clients)
+    masks = {}
+    for m in modality_names:
+        row = [1.0 if (k in chosen and m in choices.get(k, ())) else 0.0
+               for k in range(num_clients)]
+        masks[m] = jnp.asarray(row, jnp.float32)
+    return masks
+
+
+def multimodal_input_specs(num_clients: int, steps: int, batch: int,
+                           feature_shapes: Mapping[str, Tuple[int, ...]],
+                           param_specs: Mapping[str, Dict]) -> Dict:
+    """Per-modality ShapeDtypeStruct stand-ins for the dry-run."""
+    specs = {m: federated_input_specs(num_clients, steps, batch,
+                                      feature_shapes[m], param_specs[m])
+             for m in feature_shapes}
+    return {
+        "params": {m: s["params"] for m, s in specs.items()},
+        "batches": {m: s["batches"] for m, s in specs.items()},
+        "select": {m: s["select"] for m, s in specs.items()},
+        "weight": {m: s["weight"] for m, s in specs.items()},
+    }
 
 
 def federated_input_specs(num_clients: int, steps: int, batch: int,

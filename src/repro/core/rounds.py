@@ -130,8 +130,20 @@ def build_federation(dataset: str, scenario: str = "natural", *,
 
 def run_federation(clients: List[Client], spec: DatasetSpec,
                    cfg: MFedMCConfig, *, verbose: bool = False,
-                   server_encoders: Optional[Dict[str, Dict]] = None
-                   ) -> RunHistory:
+                   server_encoders: Optional[Dict[str, Dict]] = None,
+                   backend: str = "loop") -> RunHistory:
+    """Run T rounds of Algorithm 1.
+
+    ``backend`` selects how the Local Learning phase executes:
+      - ``"loop"``    — per-client Python loop (paper-faithful reference);
+      - ``"batched"`` — clients with homogeneous modality sets/shapes are
+        stacked on a leading K axis and trained with vmapped SGD
+        (``repro.core.batched``); ragged clients fall back to the loop.
+        Both backends consume the round RNG identically, so selection,
+        aggregation and the comm ledger match the loop to float tolerance.
+    """
+    if backend not in ("loop", "batched"):
+        raise ValueError(f"unknown backend {backend!r}")
     rng = np.random.default_rng(cfg.seed)
     ledger = CommLedger()
     history = RunHistory()
@@ -148,11 +160,15 @@ def run_federation(clients: List[Client], spec: DatasetSpec,
             avail = clients
 
         # -- local learning --------------------------------------------
-        for c in avail:
-            lr = cfg.lr_encoder
-            c.train_encoders(cfg.local_epochs, lr, cfg.batch_size, rng)
-            c.train_fusion(cfg.local_epochs, cfg.lr_fusion,
-                           cfg.batch_size, rng)      # Stage #1
+        if backend == "batched":
+            from repro.core.batched import batched_local_learning
+            batched_local_learning(avail, cfg, rng)
+        else:
+            for c in avail:
+                c.train_encoders(cfg.local_epochs, cfg.lr_encoder,
+                                 cfg.batch_size, rng)
+                c.train_fusion(cfg.local_epochs, cfg.lr_fusion,
+                               cfg.batch_size, rng)  # Stage #1
 
         # -- modality selection (§3.2) ----------------------------------
         round_shapley: Dict[str, List[float]] = {}
@@ -226,8 +242,13 @@ def run_federation(clients: List[Client], spec: DatasetSpec,
             for m in c.modality_names:
                 if m in server_encoders:
                     c.install_global(m, server_encoders[m])
-            c.train_fusion(cfg.local_epochs, cfg.lr_fusion,
-                           cfg.batch_size, rng)      # Stage #2
+        if backend == "batched":
+            from repro.core.batched import batched_fusion_stage
+            batched_fusion_stage(avail, cfg, rng)
+        else:
+            for c in avail:
+                c.train_fusion(cfg.local_epochs, cfg.lr_fusion,
+                               cfg.batch_size, rng)  # Stage #2
 
         # -- evaluate -----------------------------------------------------
         acc, loss = _weighted_accuracy(clients)
@@ -246,9 +267,10 @@ def run_federation(clients: List[Client], spec: DatasetSpec,
 
 def run_mfedmc(dataset: str, scenario: str = "natural",
                cfg: Optional[MFedMCConfig] = None, *, verbose: bool = False,
-               **partition_kw) -> RunHistory:
+               backend: str = "loop", **partition_kw) -> RunHistory:
     """One-call paper pipeline: build federation + run Algorithm 1."""
     cfg = cfg or MFedMCConfig()
     clients, spec = build_federation(dataset, scenario, cfg=cfg,
                                      seed=cfg.seed, **partition_kw)
-    return run_federation(clients, spec, cfg, verbose=verbose)
+    return run_federation(clients, spec, cfg, verbose=verbose,
+                          backend=backend)

@@ -8,6 +8,12 @@ Shapley estimation on CPU-class clients, which is a fully-vectorized jnp
 batched fusion forward (see DESIGN.md §6). These kernels serve the assigned
 architectures' hot paths: attention, RG-LRU scan, mLSTM scan.
 """
+from jax.experimental.pallas import tpu as _pltpu
+
+# jax<0.5 names this TPUCompilerParams; the kernels use the modern name
+if not hasattr(_pltpu, "CompilerParams"):          # pragma: no cover
+    _pltpu.CompilerParams = _pltpu.TPUCompilerParams
+
 from repro.kernels.ops import (flash_attention, mlstm_scan, rglru_scan,
                                use_pallas)
 

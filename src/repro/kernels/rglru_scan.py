@@ -39,8 +39,8 @@ def _rglru_kernel(x_full_ref, x_ref, wa_ref, wx_ref, lam_ref, o_ref, h_ref,
     def _init():
         h_ref[...] = jnp.zeros_like(h_ref)
 
-    x_full = x_full_ref[0].astype(jnp.float32)            # [bt, W]
-    x_blk = x_ref[0].astype(jnp.float32)                  # [bt, bw]
+    x_full = x_full_ref[...][0].astype(jnp.float32)       # [bt, W]
+    x_blk = x_ref[...][0].astype(jnp.float32)             # [bt, bw]
     wa = wa_ref[...].astype(jnp.float32)                  # [W, bw]
     wx = wx_ref[...].astype(jnp.float32)
     lam = lam_ref[...].astype(jnp.float32)                # [1, bw]
@@ -57,12 +57,12 @@ def _rglru_kernel(x_full_ref, x_ref, wa_ref, wx_ref, lam_ref, o_ref, h_ref,
 
     def row(tt, h):
         h = a[tt] * h + gx[tt]
-        pl.store(o_ref, (0, pl.dslice(tt, 1), pl.dslice(None)),
-                 h[None, :].astype(o_ref.dtype))
+        pl.store(o_ref, (pl.dslice(0, 1), pl.dslice(tt, 1), pl.dslice(None)),
+                 h[None, None, :].astype(o_ref.dtype))
         return h
 
-    h = jax.lax.fori_loop(0, block_t, row, h_ref[0])
-    h_ref[0] = h
+    h = jax.lax.fori_loop(0, block_t, row, h_ref[...][0])
+    h_ref[...] = h[None]
 
 
 def rglru_scan_pallas(x, w_a, w_x, lam, *, block_t: int = 128,

@@ -116,10 +116,8 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool,
         dp = ("pod", "data") if multi_pod else ("data",)
         moe_token = set_moe_buffer_spec(P("model", dp, None))
 
-    prev_mesh = jax.sharding.get_mesh()
-    jax.sharding.set_mesh(mesh)
     try:
-        if True:
+        with mesh:
             if shape.kind == "train":
                 opt = adamw(1e-4, moment_dtype=(
                     jnp.bfloat16 if "bf16_moments" in modes
@@ -159,7 +157,6 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool,
 
             compiled = lowered.compile()
     finally:
-        jax.sharding.set_mesh(prev_mesh)
         if act_token is not None:
             set_activation_spec(None)
         if moe_token is not None:

@@ -1,17 +1,27 @@
-"""Datacenter federated training: MFedMC's round as a jit'd mesh program.
+"""Datacenter federated training: MFedMC's multi-modality round as one
+jit'd mesh program.
 
     PYTHONPATH=src python -m repro.launch.fed_train --dataset ucihar \
-        --rounds 3 [--devices 8] [--hierarchical]
+        --rounds 3 [--devices 8] [--gamma 1] [--hierarchical]
 
-The K-client population is stacked and sharded over the mesh 'data' axis;
-each round runs E·steps of vmapped local SGD per modality encoder, then the
-joint-selection mask gates Eq. 21's weighted all-reduce
-(``repro.core.distributed``). Selection itself (Shapley priority + loss
-ranking) stays host-side — it consumes scalars, not tensors.
+The K-client population is stacked and sharded over the mesh 'data' axis,
+*per modality*: every modality's encoder population trains E·steps of
+vmapped local SGD and aggregates through its own masked weighted all-reduce
+(Eq. 21), all inside a single XLA program
+(``repro.core.distributed.make_multimodal_federated_round``). The
+per-(client, modality) selection mask is the joint modality-and-client
+selection (Eq. 20), so the collectives' useful traffic shrinks by the
+paper's γ/M̄·δ factor per modality.
+
+Selection itself stays host-side — it consumes K·M scalars, not tensors.
+The modality-impact criterion uses the per-round loss improvement as a
+cheap Shapley proxy (the exact interventional Shapley of the simulator
+needs the fusion module, which never leaves the edge); size and recency
+criteria are the paper's Eqs. 10–11 unchanged.
 
 This launcher is the bridge between the paper-faithful simulator
-(``repro.core.rounds``) and the multi-pod dry-run: the same ``round_fn``
-lowers on the production mesh.
+(``repro.core.rounds``) and the multi-pod dry-run: the same round lowers
+on the production mesh.
 """
 from __future__ import annotations
 
@@ -28,10 +38,16 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=6)
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--delta", type=float, default=0.2)
+    ap.add_argument("--gamma", type=int, default=1,
+                    help="modality uploads per client (top-γ, Eq. 16)")
+    ap.add_argument("--modalities", default="all",
+                    help="comma-separated subset (default: every modality)")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host devices (0 = use what exists)")
     ap.add_argument("--hierarchical", action="store_true")
     args = ap.parse_args(argv)
+    if args.gamma < 1:
+        ap.error("--gamma must be >= 1")
 
     if args.devices:
         os.environ["XLA_FLAGS"] = (
@@ -41,16 +57,25 @@ def main(argv=None):
     import jax.numpy as jnp
     import numpy as np
 
-    from repro.core.distributed import make_federated_round
-    from repro.core.encoders import encoder_eval, init_encoder
-    from repro.core.selection import select_clients
+    from repro.core.aggregation import CommLedger
+    from repro.core.distributed import (make_multimodal_federated_round,
+                                        selection_masks)
+    from repro.core.encoders import encoder_bytes, encoder_eval, init_encoder
+    from repro.core.selection import (modality_priority, select_clients,
+                                      select_top_gamma)
     from repro.data import get_dataset_spec, make_federation
 
     spec = get_dataset_spec(args.dataset)
     clients = make_federation(args.dataset, "iid",
                               samples_per_client=args.batch * args.steps)
-    modality = spec.modality_names[0]
-    K = len(clients)
+    if args.modalities == "all":
+        modalities = list(spec.modality_names)
+    else:
+        modalities = [m.strip() for m in args.modalities.split(",")]
+        unknown = set(modalities) - set(spec.modality_names)
+        if unknown:
+            raise SystemExit(f"unknown modalities: {sorted(unknown)}")
+    K, M = len(clients), len(modalities)
 
     n_dev = len(jax.devices())
     data_ax = 1
@@ -59,42 +84,81 @@ def main(argv=None):
             data_ax = d
             break
     mesh = jax.make_mesh((data_ax, n_dev // data_ax), ("data", "model"))
-    print(f"{K} clients on mesh {dict(mesh.shape)}; modality={modality!r}")
+    print(f"{K} clients x {M} modalities on mesh {dict(mesh.shape)}")
 
-    feat = clients[0].modalities[modality].shape[1:]
-    enc = init_encoder(jax.random.key(0), feat, spec.num_classes)
-    stacked = jax.tree.map(lambda x: jnp.stack([x] * K), enc)
-    xs = jnp.stack([c.modalities[modality].reshape(
-        args.steps, args.batch, *feat) for c in clients])
-    ys = jnp.stack([c.labels.reshape(args.steps, args.batch)
-                    for c in clients])
-    weight = jnp.asarray([c.num_samples for c in clients], jnp.float32)
+    # ---- stack the federation: {modality: [K, ...]} pytrees/batches ----
+    params, batches, weight, sizes = {}, {}, {}, {}
+    for i, m in enumerate(modalities):
+        feat = clients[0].modalities[m].shape[1:]
+        enc = init_encoder(jax.random.key(i), feat, spec.num_classes)
+        sizes[m] = encoder_bytes(enc)
+        params[m] = jax.tree.map(lambda x: jnp.stack([x] * K), enc)
+        batches[m] = {
+            "x": jnp.stack([c.modalities[m].reshape(
+                args.steps, args.batch, *feat) for c in clients]),
+            "y": jnp.stack([c.labels.reshape(args.steps, args.batch)
+                            for c in clients]),
+        }
+        weight[m] = jnp.asarray([c.num_samples for c in clients],
+                                jnp.float32)
 
-    round_fn = jax.jit(make_federated_round(
+    round_fn = jax.jit(make_multimodal_federated_round(
         mesh, local_steps=args.steps, lr=0.1,
         hierarchical=args.hierarchical))
-    prev = jax.sharding.get_mesh()
-    jax.sharding.set_mesh(mesh)
-    try:
-        select = jnp.ones((K,), jnp.float32)
+    size_vec = np.array([sizes[m] for m in modalities], np.float64)
+    ledger = CommLedger()
+    with mesh:
+        # round 1 is the cold start: everyone uploads everything
+        select = {m: jnp.ones((K,), jnp.float32) for m in modalities}
+        last_upload = np.full((K, M), -1, np.int64)      # Eq. 11 state
+        prev_loss = None                                  # [K, M]
         for t in range(1, args.rounds + 1):
             t0 = time.time()
-            stacked, agg, losses = round_fn(stacked, {"x": xs, "y": ys},
-                                            select, weight)
-            # host-side client selection for the next round (Eqs. 17-19)
-            chosen = select_clients(
-                {i: float(l) for i, l in enumerate(np.asarray(losses))},
-                args.delta)
-            select = jnp.zeros((K,)).at[jnp.asarray(chosen)].set(1.0)
-            loss0, acc0 = encoder_eval(
-                agg, jnp.asarray(clients[0].modalities[modality]),
-                jnp.asarray(clients[0].labels))
-            print(f"[round {t}] mean-loss={float(jnp.mean(losses)):.4f} "
-                  f"global-enc acc(client0)={float(acc0):.3f} "
-                  f"selected={len(chosen)}/{K} ({time.time()-t0:.1f}s)")
-        assert bool(jnp.isfinite(losses).all())
-    finally:
-        jax.sharding.set_mesh(prev)
+            params, agg, losses = round_fn(params, batches, select, weight)
+
+            # ---- per-modality uplink accounting for THIS round's mask ----
+            # (recency marks the round a pair actually uploads, Eq. 11)
+            per_mod_bytes = {}
+            for i, m in enumerate(modalities):
+                mask = np.asarray(select[m])
+                n_up = int(mask.sum())
+                per_mod_bytes[m] = n_up * sizes[m]
+                ledger.record(per_mod_bytes[m], n_up)
+                last_upload[mask > 0, i] = t
+            ledger.rounds = t
+
+            # ---- joint selection for the next round (Eqs. 13-20) ----
+            cur = np.stack([np.asarray(losses[m]) for m in modalities],
+                           axis=1)                        # [K, M]
+            impact = (np.zeros_like(cur) if prev_loss is None
+                      else np.maximum(prev_loss - cur, 0.0))
+            choices = {}
+            for k in range(K):
+                rec = (t - last_upload[k] - 1).astype(np.float64)
+                prio = modality_priority(impact[k], size_vec, rec, t,
+                                         1 / 3, 1 / 3, 1 / 3)
+                choices[k] = select_top_gamma(prio, modalities, args.gamma)
+            rep_loss = {k: float(min(cur[k, modalities.index(m)]
+                                     for m in choices[k]))
+                        for k in range(K)}
+            chosen = select_clients(rep_loss, args.delta)
+            select = selection_masks(choices, chosen, K, modalities)
+            prev_loss = cur
+
+            mb = " ".join(f"{m}={per_mod_bytes[m] / 1e6:.2f}MB"
+                          for m in modalities)
+            accs = []
+            for m in modalities:
+                _, a = encoder_eval(agg[m],
+                                    jnp.asarray(clients[0].modalities[m]),
+                                    jnp.asarray(clients[0].labels))
+                accs.append(float(a))
+            print(f"[round {t}] mean-loss={float(np.mean(cur)):.4f} "
+                  f"global-enc acc(client0)={np.mean(accs):.3f} "
+                  f"selected={len(chosen)}/{K} uplink[{mb}] "
+                  f"cum={ledger.megabytes:.2f}MB ({time.time() - t0:.1f}s)")
+        for m in modalities:
+            assert bool(jnp.isfinite(losses[m]).all())
     print("done")
     return 0
 

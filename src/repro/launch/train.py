@@ -75,9 +75,7 @@ def main(argv=None):
                      out_shardings=(p_sh, None, None))
 
     rng = jax.random.key(1)
-    prev = jax.sharding.get_mesh()
-    jax.sharding.set_mesh(mesh)
-    try:
+    with mesh:
         t0 = time.time()
         for i in range(args.steps):
             rng, batch = synthetic_batch(rng, cfg, shape)
@@ -87,8 +85,6 @@ def main(argv=None):
                       f"({time.time() - t0:.1f}s)")
         loss = float(metrics["loss"])
         assert np.isfinite(loss), "training diverged"
-    finally:
-        jax.sharding.set_mesh(prev)
     if args.ckpt:
         save_pytree(args.ckpt, params, meta={"arch": args.arch,
                                              "steps": args.steps})

@@ -1,0 +1,112 @@
+"""The batched backend is a pure execution-strategy change: round-1 server
+encoders, comm-ledger bytes, uploads, and losses must match the Python-loop
+backend to float tolerance on the same federation."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.batched import plan_permutations
+from repro.core.rounds import MFedMCConfig, build_federation, run_federation
+
+TOL = 1e-5
+
+
+def _run(backend, dataset="ucihar", scenario="iid", n=24, **cfg_kw):
+    base = dict(rounds=1, local_epochs=2, batch_size=10, seed=0,
+                modality_strategy="random", gamma=1)
+    base.update(cfg_kw)
+    cfg = MFedMCConfig(**base)
+    clients, spec = build_federation(dataset, scenario, cfg=cfg, seed=0,
+                                     samples_per_client=n)
+    server = {}
+    hist = run_federation(clients, spec, cfg, server_encoders=server,
+                          backend=backend)
+    return server, hist, clients
+
+
+def _assert_server_match(se_loop, se_batched):
+    assert set(se_loop) == set(se_batched)
+    for m in se_loop:
+        for k in se_loop[m]:
+            np.testing.assert_allclose(np.asarray(se_batched[m][k]),
+                                       np.asarray(se_loop[m][k]),
+                                       atol=TOL, rtol=0,
+                                       err_msg=f"{m}/{k}")
+
+
+class TestLoopBatchedParity:
+    def test_round1_server_encoders_and_ledger(self):
+        se_l, h_l, _ = _run("loop")
+        se_b, h_b, _ = _run("batched")
+        _assert_server_match(se_l, se_b)
+        assert h_b.records[0].comm_mb == h_l.records[0].comm_mb
+        assert h_b.records[0].uploads == h_l.records[0].uploads
+
+    def test_parity_with_partial_batches(self):
+        # n=24, B=10 -> 2 full batches + a trailing partial batch of 4
+        se_l, h_l, _ = _run("loop", batch_size=10, n=24)
+        se_b, h_b, _ = _run("batched", batch_size=10, n=24)
+        _assert_server_match(se_l, se_b)
+        assert h_b.records[0].accuracy == pytest.approx(
+            h_l.records[0].accuracy, abs=1e-6)
+
+    def test_parity_on_ragged_federation(self):
+        # actionsense 'natural': structural missing modalities -> mixed
+        # signature groups; singletons fall back to the per-client loop
+        kw = dict(dataset="actionsense", scenario="natural", n=20,
+                  local_epochs=1, batch_size=8)
+        se_l, h_l, _ = _run("loop", **kw)
+        se_b, h_b, _ = _run("batched", **kw)
+        _assert_server_match(se_l, se_b)
+        assert h_b.records[0].comm_mb == h_l.records[0].comm_mb
+
+    def test_parity_full_paper_strategy(self):
+        # priority modality selection (Shapley) + low-loss client selection
+        kw = dict(modality_strategy="priority", client_strategy="low_loss",
+                  local_epochs=1, background_size=12, eval_size=12)
+        se_l, h_l, _ = _run("loop", **kw)
+        se_b, h_b, _ = _run("batched", **kw)
+        _assert_server_match(se_l, se_b)
+        assert h_b.records[0].uploads == h_l.records[0].uploads
+        assert h_b.records[0].shapley.keys() == h_l.records[0].shapley.keys()
+
+    def test_multi_round_losses_track(self):
+        _, h_l, cl_l = _run("loop", rounds=2, local_epochs=1)
+        _, h_b, cl_b = _run("batched", rounds=2, local_epochs=1)
+        for c_l, c_b in zip(cl_l, cl_b):
+            for m in c_l.modality_names:
+                assert c_b.losses[m] == pytest.approx(c_l.losses[m],
+                                                      abs=1e-5)
+        np.testing.assert_allclose(h_b.accuracies, h_l.accuracies, atol=1e-3)
+
+    def test_unknown_backend_rejected(self):
+        cfg = MFedMCConfig(rounds=1)
+        clients, spec = build_federation("ucihar", "iid", cfg=cfg, seed=0,
+                                         samples_per_client=16)
+        with pytest.raises(ValueError):
+            run_federation(clients, spec, cfg, backend="gpu")
+
+
+class TestPermutationPlan:
+    def test_plan_consumes_rng_like_loop(self):
+        cfg = MFedMCConfig(rounds=1, local_epochs=3)
+        clients, _ = build_federation("ucihar", "iid", cfg=cfg, seed=0,
+                                      samples_per_client=16)
+        rng_a = np.random.default_rng(7)
+        plans = plan_permutations(clients[:2], 3, rng_a)
+        rng_b = np.random.default_rng(7)
+        for c in clients[:2]:
+            n = c.train.num_samples
+            for m in c.modality_names:
+                for e in range(3):
+                    expect = rng_b.permutation(n)
+                    got = next(p for p in plans
+                               if p.client is c).encoder_perms[m][e]
+                    np.testing.assert_array_equal(got, expect)
+            for e in range(3):
+                expect = rng_b.permutation(n)
+                got = next(p for p in plans if p.client is c).fusion_perms[e]
+                np.testing.assert_array_equal(got, expect)
+        # both generators end in the same state
+        assert rng_a.integers(1 << 30) == rng_b.integers(1 << 30)

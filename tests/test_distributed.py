@@ -13,7 +13,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.distributed import make_federated_round
+from repro.core.distributed import (make_federated_round,
+                                    make_multimodal_federated_round,
+                                    selection_masks)
 from repro.core.encoders import encoder_loss, init_encoder
 
 
@@ -34,14 +36,10 @@ class TestFederatedRound:
     def _run(self, select, weight, K=4):
         stacked, batches = _inputs(K)
         rnd = make_federated_round(self.mesh, local_steps=2, lr=0.05)
-        prev = jax.sharding.get_mesh()
-        jax.sharding.set_mesh(self.mesh)
-        try:
+        with self.mesh:
             out = jax.jit(rnd)(stacked, batches,
                                jnp.asarray(select, jnp.float32),
                                jnp.asarray(weight, jnp.float32))
-        finally:
-            jax.sharding.set_mesh(prev)
         return stacked, batches, out
 
     def test_masked_aggregation_matches_numpy(self):
@@ -88,6 +86,105 @@ class TestFederatedRound:
         assert bool(jnp.isfinite(losses).all())
 
 
+class TestMultimodalRound:
+    """Batched multi-modality round: per-(client, modality) masks gate each
+    modality's Eq. 21 reduction independently inside one jit'd program."""
+
+    def setup_method(self):
+        self.mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    def _multimodal_inputs(self, K=4):
+        # two modalities with different feature shapes (LSTM encoders)
+        params, batches = {}, {}
+        for i, (m, t, f) in enumerate([("audio", 6, 4), ("imu", 5, 3)]):
+            stacked, b = _inputs(K=K, t=t, f=f, seed=10 + i)
+            params[m], batches[m] = stacked, b
+        return params, batches
+
+    def _run(self, params, batches, select, weight):
+        rnd = make_multimodal_federated_round(self.mesh, local_steps=2,
+                                              lr=0.05)
+        with self.mesh:
+            return jax.jit(rnd)(params, batches, select, weight)
+
+    def test_matches_per_modality_single_rounds(self):
+        params, batches = self._multimodal_inputs()
+        select = {"audio": jnp.asarray([1., 0., 1., 0.]),
+                  "imu": jnp.asarray([0., 1., 1., 1.])}
+        weight = {m: jnp.asarray([10., 20., 30., 40.]) for m in params}
+        deployed, agg, losses = self._run(params, batches, select, weight)
+
+        single = make_federated_round(self.mesh, local_steps=2, lr=0.05)
+        for m in params:
+            with self.mesh:
+                d1, a1, l1 = jax.jit(single)(params[m], batches[m],
+                                             select[m], weight[m])
+            for k in a1:
+                np.testing.assert_allclose(np.asarray(agg[m][k]),
+                                           np.asarray(a1[k]), rtol=1e-5)
+            np.testing.assert_allclose(np.asarray(losses[m]),
+                                       np.asarray(l1), rtol=1e-5)
+
+    def test_per_client_modality_mask_is_independent(self):
+        """Changing one modality's mask must not move the other's aggregate."""
+        params, batches = self._multimodal_inputs()
+        weight = {m: jnp.ones((4,)) for m in params}
+        base = {"audio": jnp.asarray([1., 1., 0., 0.]),
+                "imu": jnp.asarray([1., 1., 1., 1.])}
+        flipped = dict(base, imu=jnp.asarray([0., 0., 1., 1.]))
+        _, agg_a, _ = self._run(params, batches, base, weight)
+        _, agg_b, _ = self._run(params, batches, flipped, weight)
+        for k in agg_a["audio"]:
+            np.testing.assert_allclose(np.asarray(agg_a["audio"][k]),
+                                       np.asarray(agg_b["audio"][k]),
+                                       rtol=1e-5)
+        # while the flipped modality's aggregate does move
+        assert any(
+            float(jnp.max(jnp.abs(agg_a["imu"][k] - agg_b["imu"][k]))) > 1e-6
+            for k in agg_a["imu"])
+
+    def test_all_zero_mask_keeps_local_params(self):
+        """A modality nobody uploads keeps its per-client local updates."""
+        params, batches = self._multimodal_inputs()
+        weight = {m: jnp.ones((4,)) for m in params}
+        select = {"audio": jnp.zeros((4,)), "imu": jnp.ones((4,))}
+        deployed, _, _ = self._run(params, batches, select, weight)
+        # audio slots stay distinct (no broadcast happened)
+        leaf = deployed["audio"]["w_fc"]
+        assert float(jnp.max(jnp.abs(leaf[0] - leaf[1]))) > 1e-6
+        # imu slots all equal the aggregate
+        leaf = deployed["imu"]["w_fc"]
+        np.testing.assert_allclose(np.asarray(leaf[0]), np.asarray(leaf[3]),
+                                   rtol=1e-5)
+
+
+def test_selection_masks_encode_joint_selection():
+    choices = {0: ["audio"], 1: ["audio", "imu"], 2: ["imu"]}
+    masks = selection_masks(choices, selected_clients=[0, 1], num_clients=4,
+                            modality_names=["audio", "imu"])
+    np.testing.assert_array_equal(np.asarray(masks["audio"]), [1, 1, 0, 0])
+    # client 2 chose imu but was not server-selected; client 3 chose nothing
+    np.testing.assert_array_equal(np.asarray(masks["imu"]), [0, 1, 0, 0])
+
+
+def test_multimodal_input_specs_shapes():
+    from repro.core.distributed import multimodal_input_specs
+    enc = {m: init_encoder(jax.random.key(0), shape, 3)
+           for m, shape in [("audio", (6, 4)), ("imu", (5, 3))]}
+    param_specs = {m: jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), e)
+        for m, e in enc.items()}
+    specs = multimodal_input_specs(8, 2, 4,
+                                   {"audio": (6, 4), "imu": (5, 3)},
+                                   param_specs)
+    assert specs["batches"]["audio"]["x"].shape == (8, 2, 4, 6, 4)
+    assert specs["batches"]["imu"]["x"].shape == (8, 2, 4, 5, 3)
+    assert specs["select"]["imu"].shape == (8,)
+    for m in enc:
+        assert specs["params"][m]["w_fc"].shape == \
+            (8,) + enc[m]["w_fc"].shape
+
+
 @pytest.mark.slow
 def test_multi_device_mesh_subprocess():
     """8 forced host devices, clients sharded 4-way over 'data'."""
@@ -106,8 +203,8 @@ def test_multi_device_mesh_subprocess():
         sel = jnp.asarray([1, 0] * 4, jnp.float32)
         w = jnp.ones((K,))
         rnd = make_federated_round(mesh, local_steps=2, lr=0.05)
-        jax.sharding.set_mesh(mesh)
-        d, agg, losses = jax.jit(rnd)(stacked, {"x": x, "y": y}, sel, w)
+        with mesh:
+            d, agg, losses = jax.jit(rnd)(stacked, {"x": x, "y": y}, sel, w)
         assert all(bool(jnp.isfinite(v).all()) for v in jax.tree.leaves(agg))
         err = max(float(jnp.max(jnp.abs(v - a[None])))
                   for v, a in zip(jax.tree.leaves(d), jax.tree.leaves(agg)))

@@ -83,9 +83,9 @@ def test_shard_map_flash_decode_subprocess():
         v = jax.random.normal(ks[2], (b, t, kv, d))
         kv_pos = jnp.arange(t)
         pos = jnp.asarray(200)
-        jax.sharding.set_mesh(mesh)
         fd = make_flash_decode(mesh)
-        out = jax.jit(fd)(q, k, v, kv_pos, pos)
+        with mesh:
+            out = jax.jit(fd)(q, k, v, kv_pos, pos)
         exp = flash_decode_reference(q, k, v, kv_pos, pos)
         np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
                                    rtol=2e-4, atol=2e-4)

@@ -2,6 +2,8 @@
 values, plus hypothesis properties for the invariants."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
