@@ -2,15 +2,24 @@
 
     PYTHONPATH=src python -m benchmarks.bench_batched_round \
         [--full] [--out BENCH_batched_round.json]
+    PYTHONPATH=src python -m benchmarks.bench_batched_round --ragged \
+        [--out BENCH_ragged_round.json]
 
-Builds a homogeneous synthetic federation of K clients (two LSTM modalities,
-UCI-HAR shapes) and times one full ``run_federation`` round per backend —
-identical selection/aggregation phases, so the measured gap is the Local
-Learning phase: K·M·E per-batch jit dispatches (loop) vs. E vmapped
-scans over the stacked [K, ...] population (batched).
+Builds a synthetic federation of K clients (two LSTM modalities, UCI-HAR
+shapes) and times one full ``run_federation`` round per backend — identical
+selection/aggregation phases, so the measured gap is the Local Learning
+phase: K·M·E per-batch jit dispatches (loop) vs. E vmapped scans over the
+stacked [K, ...] population (batched).
 
-Emits ``BENCH_batched_round.json`` with per-K wall seconds and speedup, and
-supports the ``benchmarks.run`` Row contract.
+Two scenarios:
+- homogeneous (default): every client has both modalities and the same n —
+  writes ``BENCH_batched_round.json``;
+- ``--ragged``: three distinct modality sets ({acc}, {gyro}, {acc, gyro})
+  and sample counts skewed across clients — the paper's heterogeneous
+  setting, which runs entirely on the padded mask-weighted batched path —
+  writes ``BENCH_ragged_round.json``.
+
+Both support the ``benchmarks.run`` Row contract.
 """
 from __future__ import annotations
 
@@ -48,6 +57,32 @@ def synthetic_federation(K: int, n: int = 48, seed: int = 0):
     return clients, spec
 
 
+def ragged_federation(K: int, n: int = 48, seed: int = 0, min_n: int = 8):
+    """K heterogeneous clients: three distinct modality sets (cycling
+    {acc}, {gyro}, {acc, gyro}) and sample counts skewed from n down to
+    ~n/4 — the ragged population the padded batched path targets (also
+    the federation the loop-vs-batched parity tests pin)."""
+    spec = get_dataset_spec("ucihar")
+    mods_all = list(spec.modality_names)
+    sets = [mods_all[:1], mods_all[1:], mods_all]
+    rng = np.random.default_rng(seed)
+    clients = []
+    for k in range(K):
+        nk = max(min_n, int(n * (0.25 + 0.75 * (K - 1 - k) / max(K - 1, 1))))
+        labels = np.tile(np.arange(spec.num_classes),
+                         nk // spec.num_classes + 1)[:nk]
+        rng.shuffle(labels)
+        mods = {
+            m: rng.standard_normal(
+                (nk, *spec.modality(m).feature_shape(True))
+            ).astype(np.float32)
+            for m in sets[k % len(sets)]
+        }
+        data = ClientData(k, mods, labels.astype(np.int32), spec.num_classes)
+        clients.append(make_client(k, spec, data, seed=seed))
+    return clients, spec
+
+
 def _bench_cfg(**kw) -> MFedMCConfig:
     base = dict(rounds=1, local_epochs=2, batch_size=16, seed=0,
                 modality_strategy="random", client_strategy="random",
@@ -56,8 +91,8 @@ def _bench_cfg(**kw) -> MFedMCConfig:
     return MFedMCConfig(**base)
 
 
-def time_round(K: int, backend: str, *, n: int = 48,
-               warm: bool = True) -> float:
+def time_round(K: int, backend: str, *, n: int = 48, warm: bool = True,
+               federation=synthetic_federation) -> float:
     """Steady-state wall seconds for one federation round.
 
     The warm run uses the SAME K: the batched backend's compiled programs
@@ -66,9 +101,9 @@ def time_round(K: int, backend: str, *, n: int = 48,
     K-independent and warms either way).
     """
     if warm:
-        clients, spec = synthetic_federation(K, n=n)
+        clients, spec = federation(K, n=n)
         run_federation(clients, spec, _bench_cfg(), backend=backend)
-    clients, spec = synthetic_federation(K, n=n)
+    clients, spec = federation(K, n=n)
     with Timer() as t:
         run_federation(clients, spec, _bench_cfg(), backend=backend)
     return t.us / 1e6
@@ -84,6 +119,13 @@ def run(fast: bool = True) -> List[Row]:
                         f"round_s={loop_s:.2f}"))
         rows.append(Row(f"batched_round/K{K}/batched", batched_s * 1e6,
                         f"speedup={loop_s / batched_s:.2f}x"))
+    K = 8 if fast else 32
+    loop_s = time_round(K, "loop", federation=ragged_federation)
+    batched_s = time_round(K, "batched", federation=ragged_federation)
+    rows.append(Row(f"ragged_round/K{K}/loop", loop_s * 1e6,
+                    f"round_s={loop_s:.2f}"))
+    rows.append(Row(f"ragged_round/K{K}/batched", batched_s * 1e6,
+                    f"speedup={loop_s / batched_s:.2f}x"))
     return rows
 
 
@@ -94,19 +136,27 @@ def main(argv=None) -> int:
     ap.add_argument("--ks", default=None,
                     help="comma-separated client counts (overrides --full)")
     ap.add_argument("--samples", type=int, default=48)
-    ap.add_argument("--out", default="BENCH_batched_round.json")
+    ap.add_argument("--ragged", action="store_true",
+                    help="heterogeneous federation: 3 modality sets + "
+                         "skewed sample counts (paper's ragged setting)")
+    ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
 
     if args.ks:
         ks = [int(k) for k in args.ks.split(",")]
     else:
         ks = [8, 32, 128]
+    federation = ragged_federation if args.ragged else synthetic_federation
+    name = "ragged_round" if args.ragged else "batched_round"
+    out = args.out or f"BENCH_{name}.json"
 
     results = []
     for K in ks:
         t0 = time.time()
-        loop_s = time_round(K, "loop", n=args.samples)
-        batched_s = time_round(K, "batched", n=args.samples)
+        loop_s = time_round(K, "loop", n=args.samples,
+                            federation=federation)
+        batched_s = time_round(K, "batched", n=args.samples,
+                               federation=federation)
         results.append({
             "K": K,
             "loop_s": round(loop_s, 4),
@@ -118,21 +168,23 @@ def main(argv=None) -> int:
               f"(total {time.time() - t0:.0f}s)", flush=True)
 
     payload = {
-        "benchmark": "batched_round",
+        "benchmark": name,
         "config": {
             "dataset_shapes": "ucihar (reduced)",
             "modalities": 2,
-            "samples_per_client": args.samples,
+            "modality_sets": (3 if args.ragged else 1),
+            "samples_per_client": (f"8..{args.samples} (skewed)"
+                                   if args.ragged else args.samples),
             "local_epochs": 2,
             "batch_size": 16,
             "rounds_timed": 1,
         },
         "results": results,
     }
-    with open(args.out, "w") as f:
+    with open(out, "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")
-    print(f"wrote {args.out}")
+    print(f"wrote {out}")
     return 0
 
 

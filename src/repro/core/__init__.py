@@ -11,8 +11,9 @@ Layers:
     client.py      — client state + Algorithm 1 local phases
     rounds.py      — the federation loop with every §4 ablation knob
                      (backend='loop' reference / 'batched' fast path)
-    batched.py     — vmapped stacked local learning (the simulator's
-                     hot-path backend; same layout the mesh shards)
+    batched.py     — padded, mask-weighted vmapped local learning for
+                     ragged federations (the simulator's hot-path backend;
+                     same [K, M] population layout the mesh shards)
     baselines.py   — FL-FD / MMFed / FedMultimodal / FLASH / Harmony
     distributed.py — the datacenter mapping: clients on the mesh 'data'
                      axis, selective upload as masked sparse all-reduce,
@@ -20,7 +21,9 @@ Layers:
 """
 from repro.core.aggregation import (CommLedger, ICI_LINK, IOT_UPLINK,
                                     TransportModel, aggregate_modality)
-from repro.core.batched import batched_local_learning, plan_permutations
+from repro.core.batched import (batched_evaluate, batched_local_learning,
+                                batched_shapley_values,
+                                padded_population_batches, plan_permutations)
 from repro.core.client import Client, make_client
 from repro.core.encoders import (encoder_bytes, encoder_eval,
                                  encoder_forward, encoder_num_params,
@@ -36,12 +39,14 @@ from repro.core.selection import (RecencyTracker, SelectionResult,
                                   joint_select, minmax_normalize,
                                   modality_priority, select_clients,
                                   select_top_gamma)
-from repro.core.shapley import exact_shapley, sampled_shapley, subset_masks
+from repro.core.shapley import (exact_shapley, exact_shapley_population,
+                                sampled_shapley, subset_masks)
 
 __all__ = [
     "CommLedger", "ICI_LINK", "IOT_UPLINK", "TransportModel",
-    "aggregate_modality", "batched_local_learning", "plan_permutations",
-    "Client", "make_client", "encoder_bytes",
+    "aggregate_modality", "batched_evaluate", "batched_local_learning",
+    "batched_shapley_values", "padded_population_batches",
+    "plan_permutations", "Client", "make_client", "encoder_bytes",
     "encoder_eval", "encoder_forward", "encoder_num_params",
     "encoder_predict", "encoder_sgd_step", "init_encoder", "fusion_eval",
     "fusion_forward", "fusion_sgd_step", "init_fusion", "dequantize_encoder",
@@ -49,5 +54,6 @@ __all__ = [
     "RunHistory", "build_federation", "run_federation", "run_mfedmc",
     "RecencyTracker", "SelectionResult", "joint_select", "minmax_normalize",
     "modality_priority", "select_clients", "select_top_gamma",
-    "exact_shapley", "sampled_shapley", "subset_masks",
+    "exact_shapley", "exact_shapley_population", "sampled_shapley",
+    "subset_masks",
 ]

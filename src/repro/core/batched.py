@@ -1,31 +1,47 @@
-"""Batched local learning — the simulator's hot path as vmapped SGD.
+"""Batched local learning — padded, mask-weighted vmapped SGD for ragged
+federations.
 
 ``run_federation(backend="batched")`` replaces Algorithm 1's per-client
-Python loop (Local Learning) with a stacked computation: clients with the
-same *training signature* — modality set, per-modality array shapes (which
-include the sample count) — are packed onto a leading K axis and each
-modality's encoder population trains with one jit'd ``vmap(scan(sgd_step))``
-per epoch. This is exactly the client-stacked layout the mesh engine
-(``repro.core.distributed``) shards over the ``data`` axis, so the simulator
-fast path and the datacenter round are the same program at different scales.
+Python loop (Local Learning) with a stacked computation over the *whole*
+population, including the paper's defining setting: clients with diverse
+modality sets and non-IID sample counts (challenge (i)). There is no ragged
+fallback — heterogeneity is first-class:
 
-Clients whose signature nobody else shares (ragged federations: structural
-missing modalities, skewed sample counts) fall back to the per-client loop —
-semantics are identical either way.
+- **Bucket planner.** (client, modality) pairs bucket by *coarse shape
+  family* only — the modality's feature shape, the class count, and the
+  schedule length S = ⌈n/B⌉. Modality set, modality name, and exact sample
+  count never fragment a batch, so a federation with structurally missing
+  modalities and skewed n still packs into a handful of vmapped programs
+  (e.g. UCI-HAR's accelerometer and gyroscope encoders share one bucket),
+  while keying on S bounds padding waste at one batch per pair.
+- **Padded step schedule.** Within a bucket, every client runs the same
+  S steps per epoch. Client k's samples fill the first n_k slots of its
+  [S, B] schedule (so its full batches and trailing partial batch are
+  exactly the loop's); the rest carry an all-zero sample mask. The
+  mask-weighted loss Σ w·ce / max(Σ w, 1) reproduces the loop's per-batch
+  mean CE on real rows and is identically 0 — with zero gradient, hence a
+  no-op SGD update — on fully-padded steps.
+- **Presence masks.** Absent modalities are represented by per-(client,
+  modality) 0/1 presence masks (``Client.avail_mask`` stacked to [K, M]) —
+  the same population layout ``core.distributed`` uses for Eq. 21's masked
+  all-reduce — instead of by group membership. Fusion, evaluation, and the
+  vmapped exact-Shapley enumeration all consume that [K, M] layout.
 
 RNG parity: the loop backend draws one ``rng.permutation(n)`` per
 (client, modality, epoch) and per (client, fusion-epoch), interleaved in
 client order. :func:`plan_permutations` precomputes exactly that sequence up
-front, so both backends consume the shared generator identically — every
-downstream phase (Shapley subsampling, random strategies, availability) sees
-bit-identical randomness, and round-1 aggregates match the loop backend to
-float tolerance (the parity test pins this at 1e-5).
+front, and :func:`batched_shapley_values` draws each client's background /
+eval subsets in the same client order the loop would, so both backends
+consume the shared generator identically — every downstream phase (selection
+strategies, availability) sees bit-identical randomness, and round-1
+aggregates match the loop backend to float tolerance (the parity tests pin
+ragged federations, not just homogeneous ones, at 1e-5).
 """
 from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,9 +49,14 @@ import numpy as np
 
 from repro.core import encoders as enc
 from repro.core.client import Client
-from repro.core.encoders import encoder_loss
-from repro.core.fusion import fusion_loss
+from repro.core.encoders import masked_encoder_loss
+from repro.core.fusion import masked_fusion_eval, masked_fusion_loss
+from repro.core.shapley import exact_shapley_population
 
+
+# ---------------------------------------------------------------------------
+# permutation planning (loop-order RNG parity)
+# ---------------------------------------------------------------------------
 
 @dataclass
 class ClientPlan:
@@ -60,109 +81,206 @@ def plan_permutations(clients: Sequence[Client], epochs: int,
     return plans
 
 
-def _signature(c: Client) -> Tuple:
-    """Clients pack together iff every modality array has identical shape."""
-    return tuple((m, c.train.modalities[m].shape) for m in c.modality_names)
+# ---------------------------------------------------------------------------
+# padded step schedule (the shared ragged-population layout)
+# ---------------------------------------------------------------------------
 
+def num_steps(n: int, batch_size: int) -> int:
+    """Steps the loop backend runs for n samples: ⌊n/B⌋ full batches plus a
+    trailing partial batch when B does not divide n."""
+    return -(-n // batch_size)
+
+
+def padded_perm_indices(perms: Sequence[np.ndarray], ns: Sequence[int],
+                        steps: int, batch_size: int
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """Stack per-client epoch shuffles into one [K, S·B] gather + mask.
+
+    ``perms[k]`` permutes ``arange(ns[k])``; slots past n_k point at row 0
+    and carry zero weight, so padded rows never contribute loss or gradient
+    and fully-padded steps are exact no-ops."""
+    kg, L = len(perms), steps * batch_size
+    idx = np.zeros((kg, L), np.int64)
+    w = np.zeros((kg, L), np.float32)
+    for k, (p, n) in enumerate(zip(perms, ns)):
+        idx[k, :n] = p
+        w[k, :n] = 1.0
+    return idx, w
+
+
+def padded_population_batches(arrays: Sequence[Optional[np.ndarray]],
+                              labels: Sequence[np.ndarray], batch_size: int,
+                              *, steps: Optional[int] = None,
+                              feature_shape: Optional[Tuple[int, ...]] = None
+                              ) -> Dict[str, np.ndarray]:
+    """Ragged per-client samples -> the padded mesh layout shared by Tier 2
+    and Tier 3: ``{"x": [K, S, B, ...], "y": [K, S, B], "w": [K, S, B]}``.
+
+    ``arrays[k] = None`` marks an absent (client, modality) pair: its slot
+    carries an all-zero sample mask, so the mesh round trains a no-op dummy
+    and the pair contributes nothing (its Eq. 21 weight should also be 0).
+    When ``steps`` is given, clients with more than S·B samples are
+    truncated to the schedule; by default S fits the largest client."""
+    ns = [0 if x is None else len(x) for x in arrays]
+    S = steps if steps is not None else max(
+        num_steps(max(n, 1), batch_size) for n in ns)
+    L = S * batch_size
+    if feature_shape is not None:
+        feat = tuple(feature_shape)
+    else:
+        ref = next((x for x in arrays if x is not None), None)
+        if ref is None:
+            raise ValueError("every client's array is None; pass "
+                             "feature_shape to shape the dummy slots")
+        feat = tuple(np.asarray(ref).shape[1:])
+    K = len(arrays)
+    x_out = np.zeros((K, L) + feat, np.float32)
+    y_out = np.zeros((K, L), np.int32)
+    w_out = np.zeros((K, L), np.float32)
+    for k, (x, y) in enumerate(zip(arrays, labels)):
+        if x is None:
+            continue
+        n = min(ns[k], L)
+        x_out[k, :n] = np.asarray(x)[:n]
+        y_out[k, :n] = np.asarray(y)[:n]
+        w_out[k, :n] = 1.0
+    return {
+        "x": x_out.reshape(K, S, batch_size, *feat),
+        "y": y_out.reshape(K, S, batch_size),
+        "w": w_out.reshape(K, S, batch_size),
+    }
+
+
+# ---------------------------------------------------------------------------
+# masked vmapped SGD
+# ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("lr",))
-def batched_epoch(params, xs, ys, lr: float):
-    """One epoch of independent per-client SGD over stacked full batches.
+def masked_batched_epoch(params, xs, ys, ws, lr: float):
+    """One epoch of independent per-client SGD over a padded step schedule.
 
-    params: pytree with leading K axis; xs: [K, S, B, ...]; ys: [K, S, B]
-    -> (new params, per-step losses [K, S])
-    """
-    def client_epoch(p, bx, by):
-        def step(pp, xy):
-            x, y = xy
-            loss, g = jax.value_and_grad(encoder_loss)(pp, x, y)
+    params: pytree with leading K axis; xs: [K, S, B, ...]; ys: [K, S, B];
+    ws: [K, S, B] 0/1 sample masks -> (new params, per-step losses [K, S]).
+    Fully-padded steps produce zero gradients, i.e. no-op updates."""
+    def client_epoch(p, bx, by, bw):
+        def step(pp, xyw):
+            x, y, w = xyw
+            loss, g = jax.value_and_grad(masked_encoder_loss)(pp, x, y, w)
             return jax.tree.map(lambda a, b: a - lr * b, pp, g), loss
-        return jax.lax.scan(step, p, (bx, by))
+        return jax.lax.scan(step, p, (bx, by, bw))
 
-    return jax.vmap(client_epoch)(params, xs, ys)
-
-
-@functools.partial(jax.jit, static_argnames=("lr",))
-def batched_step(params, x, y, lr: float):
-    """One vmapped SGD step (the epoch's trailing partial batch).
-
-    params: pytree with leading K axis; x: [K, r, ...]; y: [K, r]
-    -> (new params, losses [K])
-    """
-    def one(p, xx, yy):
-        loss, g = jax.value_and_grad(encoder_loss)(p, xx, yy)
-        return jax.tree.map(lambda a, b: a - lr * b, p, g), loss
-
-    return jax.vmap(one)(params, x, y)
-
-
-def train_group_encoders(plans: Sequence[ClientPlan], *, epochs: int,
-                         lr: float, batch_size: int) -> None:
-    """Train one signature-group's encoders batched, per modality.
-
-    Mirrors ``Client.train_encoders`` exactly: E epochs, each a sequence of
-    ⌊n/B⌋ full batches plus one trailing partial batch, per-epoch shuffles
-    from the plan; caches the final-epoch mean loss ℓ_m^k per client.
-    """
-    clients = [p.client for p in plans]
-    for c in clients:
-        c.losses = {}
-    for m in clients[0].modality_names:
-        stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves),
-                               *[c.encoders[m] for c in clients])
-        x = np.stack([np.asarray(c.train.modalities[m]) for c in clients])
-        y = np.stack([np.asarray(c.train.labels) for c in clients])
-        kg, n = x.shape[0], x.shape[1]
-        full, rem = divmod(n, batch_size)
-        gather = np.arange(kg)[:, None]
-        last = np.zeros((kg, 1), np.float64)     # epochs == 0 -> loss 0.0
-        for e in range(epochs):
-            idx = np.stack([p.encoder_perms[m][e] for p in plans])
-            xe, ye = x[gather, idx], y[gather, idx]
-            step_losses = []
-            if full:
-                xf = jnp.asarray(xe[:, :full * batch_size].reshape(
-                    kg, full, batch_size, *x.shape[2:]))
-                yf = jnp.asarray(ye[:, :full * batch_size].reshape(
-                    kg, full, batch_size))
-                stacked, lf = batched_epoch(stacked, xf, yf, lr)
-                step_losses.append(np.asarray(lf, np.float64))
-            if rem:
-                xr = jnp.asarray(xe[:, full * batch_size:])
-                yr = jnp.asarray(ye[:, full * batch_size:])
-                stacked, lp = batched_step(stacked, xr, yr, lr)
-                step_losses.append(np.asarray(lp, np.float64)[:, None])
-            last = np.concatenate(step_losses, axis=1)
-        for k, c in enumerate(clients):
-            c.encoders[m] = jax.tree.map(lambda v: v[k], stacked)
-            c.losses[m] = float(np.mean(last[k]))
+    return jax.vmap(client_epoch)(params, xs, ys, ws)
 
 
 @functools.partial(jax.jit, static_argnames=("lr",))
-def batched_fusion_epoch(params, preds, mask, ys, lr: float):
-    """One epoch of per-client fusion SGD over stacked full batches.
+def masked_fusion_epoch(params, preds, mask, ys, ws, lr: float):
+    """One epoch of per-client fusion SGD over the padded schedule.
 
     params: pytree with leading K axis; preds: [K, S, B, M, C];
-    mask: [M] (identical within a signature group); ys: [K, S, B]
-    """
-    def client_epoch(p, bp, by):
-        def step(pp, xy):
-            x, y = xy
-            loss, g = jax.value_and_grad(fusion_loss)(pp, x, mask, y)
+    mask: [K, M] per-client presence; ys, ws: [K, S, B]."""
+    def client_epoch(p, bp, mk, by, bw):
+        def step(pp, xyw):
+            x, y, w = xyw
+            loss, g = jax.value_and_grad(masked_fusion_loss)(pp, x, mk, y, w)
             return jax.tree.map(lambda a, b: a - lr * b, pp, g), loss
-        return jax.lax.scan(step, p, (bp, by))
+        return jax.lax.scan(step, p, (bp, by, bw))
 
-    return jax.vmap(client_epoch)(params, preds, ys)
+    return jax.vmap(client_epoch)(params, preds, mask, ys, ws)
 
 
-@functools.partial(jax.jit, static_argnames=("lr",))
-def batched_fusion_step(params, preds, mask, y, lr: float):
-    def one(p, xx, yy):
-        loss, g = jax.value_and_grad(fusion_loss)(p, xx, mask, yy)
-        return jax.tree.map(lambda a, b: a - lr * b, p, g), loss
+# ---------------------------------------------------------------------------
+# bucket planner
+# ---------------------------------------------------------------------------
 
-    return jax.vmap(one)(params, preds, y)
+def _shape_family(c: Client, m: str, batch_size: int) -> Tuple:
+    """Coarse bucket key for one (client, modality) pair: feature shape,
+    class count, and schedule length S = ⌈n/B⌉ — never the modality set,
+    the modality name, or the exact sample count. Keying on S (instead of
+    padding every pair up to the largest client) bounds the padding waste
+    at one batch per pair while keeping buckets coarse: a skewed population
+    fragments into at most max(S) schedule groups, not K singletons."""
+    return (tuple(np.asarray(c.train.modalities[m]).shape[1:]),
+            c.spec.num_classes,
+            num_steps(c.train.num_samples, batch_size))
 
+
+def _fusion_key(c: Client, batch_size: Optional[int] = None) -> Tuple:
+    """Fusion modules stack iff their input layout matches; training
+    buckets additionally key on the schedule length (see _shape_family)."""
+    key = (tuple(c.all_modalities), c.spec.num_classes, c.fusion_input)
+    if batch_size is not None:
+        key += (num_steps(c.train.num_samples, batch_size),)
+    return key
+
+
+def _fusion_buckets(clients: Sequence[Client],
+                    batch_size: Optional[int] = None) -> List[List[int]]:
+    groups: Dict[Tuple, List[int]] = {}
+    for i, c in enumerate(clients):
+        groups.setdefault(_fusion_key(c, batch_size), []).append(i)
+    return [groups[k] for k in sorted(groups)]
+
+
+def _stack_trees(trees):
+    return jax.tree.map(lambda *leaves: jnp.stack(leaves), *trees)
+
+
+# ---------------------------------------------------------------------------
+# population encoder training
+# ---------------------------------------------------------------------------
+
+def train_population_encoders(plans: Sequence[ClientPlan], *, epochs: int,
+                              lr: float, batch_size: int) -> None:
+    """Local Learning's encoder phase for the whole (client, modality)
+    population, bucketed by coarse shape family.
+
+    Mirrors ``Client.train_encoders`` exactly on the real samples: E epochs,
+    each a padded [S, B] schedule whose real slots are the loop's ⌊n/B⌋ full
+    batches plus trailing partial batch, with per-epoch shuffles from the
+    plan; caches the final-epoch mean loss ℓ_m^k per (client, modality)."""
+    for p in plans:
+        p.client.losses = {}
+    buckets: Dict[Tuple, List[Tuple[ClientPlan, str]]] = {}
+    for p in plans:
+        for m in p.client.modality_names:
+            buckets.setdefault(_shape_family(p.client, m, batch_size),
+                               []).append((p, m))
+    for key in sorted(buckets, key=repr):
+        pairs = buckets[key]
+        clients = [p.client for p, _ in pairs]
+        mods = [m for _, m in pairs]
+        kg = len(pairs)
+        ns = [c.train.num_samples for c in clients]
+        n_max = max(ns)
+        steps = max(num_steps(n, batch_size) for n in ns)
+        stacked = _stack_trees([c.encoders[m]
+                                for c, m in zip(clients, mods)])
+        x = np.stack([c.padded_modality(c.train, m, n_max)
+                      for c, m in zip(clients, mods)])
+        y = np.stack([c.padded_labels(c.train, n_max) for c in clients])
+        gather = np.arange(kg)[:, None]
+        last = np.zeros((kg, steps), np.float64)     # epochs == 0 -> loss 0.0
+        valid = np.zeros((kg, steps), bool)
+        for e in range(epochs):
+            idx, w = padded_perm_indices(
+                [p.encoder_perms[m][e] for p, m in pairs], ns, steps,
+                batch_size)
+            xe = x[gather, idx].reshape(kg, steps, batch_size, *x.shape[2:])
+            ye = y[gather, idx].reshape(kg, steps, batch_size)
+            ws = w.reshape(kg, steps, batch_size)
+            valid = ws.sum(axis=-1) > 0
+            stacked, le = masked_batched_epoch(stacked, jnp.asarray(xe),
+                                               jnp.asarray(ye),
+                                               jnp.asarray(ws), lr)
+            last = np.asarray(le, np.float64)
+        for j, ((p, m), c) in enumerate(zip(pairs, clients)):
+            c.encoders[m] = jax.tree.map(lambda v: v[j], stacked)
+            c.losses[m] = float(last[j, valid[j]].mean()) if epochs else 0.0
+
+
+# ---------------------------------------------------------------------------
+# population predictions + fusion training
+# ---------------------------------------------------------------------------
 
 @jax.jit
 def _batched_predict(stacked_params, xs):
@@ -174,124 +292,184 @@ def _batched_predict_probs(stacked_params, xs):
     return jax.vmap(enc.encoder_predict_probs)(stacked_params, xs)
 
 
-def _group_predictions(clients: Sequence[Client]) -> np.ndarray:
-    """Stacked ``Client.predictions`` for one signature group: [K, n, M, C]
-    with zero columns at absent modalities (one-hot predictions are argmax
-    outputs, so the vmapped forward matches the per-client one bitwise up
-    to logit ties)."""
+def _population_predictions(clients: Sequence[Client], datas) -> np.ndarray:
+    """Stacked ``Client.predictions``: [K, n_pad, M, C] with zero columns at
+    absent (client, modality) pairs, padded over the sample axis.
+
+    Encoder forwards batch by shape family across clients, so structurally
+    missing modalities cost nothing — they are zeros by construction, exactly
+    the loop's convention (padded rows carry garbage predictions and are
+    excluded downstream by sample masks)."""
     c0 = clients[0]
-    n = c0.train.num_samples
-    nc = c0.spec.num_classes
-    cols = []
-    for m in c0.all_modalities:
-        if m in c0.encoders and m in c0.train.modalities:
-            stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves),
-                                   *[c.encoders[m] for c in clients])
-            xs = jnp.asarray(np.stack(
-                [np.asarray(c.train.modalities[m]) for c in clients]))
-            fn = (_batched_predict_probs if c0.fusion_input == "probs"
-                  else _batched_predict)
-            cols.append(np.asarray(fn(stacked, xs)))
-        else:
-            cols.append(np.zeros((len(clients), n, nc), np.float32))
-    return np.stack(cols, axis=2)                        # [K, n, M, C]
+    M, C = len(c0.all_modalities), c0.spec.num_classes
+    n_pad = max(d.num_samples for d in datas)
+    out = np.zeros((len(clients), n_pad, M, C), np.float32)
+    buckets: Dict[Tuple, List[Tuple[int, int, Client, object, str]]] = {}
+    for k, (c, d) in enumerate(zip(clients, datas)):
+        for mi, m in enumerate(c.all_modalities):
+            if m in c.encoders and m in d.modalities:
+                key = (tuple(np.asarray(d.modalities[m]).shape[1:]), C)
+                buckets.setdefault(key, []).append((k, mi, c, d, m))
+    fn = (_batched_predict_probs if c0.fusion_input == "probs"
+          else _batched_predict)
+    for key in sorted(buckets, key=repr):
+        entries = buckets[key]
+        stacked = _stack_trees([c.encoders[m] for _, _, c, _, m in entries])
+        xs = jnp.asarray(np.stack([c.padded_modality(d, m, n_pad)
+                                   for _, _, c, d, m in entries]))
+        pr = np.asarray(fn(stacked, xs))             # [Kg, n_pad, C]
+        for j, (k, mi, *_rest) in enumerate(entries):
+            out[k, :, mi] = pr[j]
+    return out
 
 
-def train_group_fusion(clients: Sequence[Client],
-                       perms: Sequence[Sequence[np.ndarray]], *,
-                       epochs: int, lr: float, batch_size: int) -> None:
-    """One signature-group's Stage-#1/#2 fusion training, batched.
+def train_population_fusion(clients: Sequence[Client],
+                            perms: Sequence[Sequence[np.ndarray]], *,
+                            epochs: int, lr: float, batch_size: int) -> None:
+    """Stage-#1/#2 fusion training for one fusion bucket, batched.
 
     Mirrors ``Client.train_fusion``: predictions computed once with frozen
-    encoders, then E epochs of planned-shuffle minibatch SGD.
-    """
-    preds = _group_predictions(clients)                  # [K, n, M, C]
-    y = np.stack([np.asarray(c.train.labels) for c in clients])
-    mask = jnp.asarray(clients[0].avail_mask())
-    stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves),
-                           *[c.fusion for c in clients])
-    kg, n = y.shape
-    full, rem = divmod(n, batch_size)
+    encoders, then E epochs of planned-shuffle minibatch SGD over the padded
+    schedule, each client gated by its own [M] presence mask."""
+    preds = _population_predictions(clients, [c.train for c in clients])
+    n_pad = preds.shape[1]
+    y = np.stack([c.padded_labels(c.train, n_pad) for c in clients])
+    presence = jnp.asarray(np.stack([c.avail_mask() for c in clients]))
+    ns = [c.train.num_samples for c in clients]
+    steps = max(num_steps(n, batch_size) for n in ns)
+    stacked = _stack_trees([c.fusion for c in clients])
+    kg = len(clients)
     gather = np.arange(kg)[:, None]
     for e in range(epochs):
-        idx = np.stack([p[e] for p in perms])
-        pe, ye = preds[gather, idx], y[gather, idx]
-        if full:
-            pf = jnp.asarray(pe[:, :full * batch_size].reshape(
-                kg, full, batch_size, *preds.shape[2:]))
-            yf = jnp.asarray(ye[:, :full * batch_size].reshape(
-                kg, full, batch_size))
-            stacked, _ = batched_fusion_epoch(stacked, pf, mask, yf, lr)
-        if rem:
-            pr = jnp.asarray(pe[:, full * batch_size:])
-            yr = jnp.asarray(ye[:, full * batch_size:])
-            stacked, _ = batched_fusion_step(stacked, pr, mask, yr, lr)
+        idx, w = padded_perm_indices([p[e] for p in perms], ns, steps,
+                                     batch_size)
+        pe = preds[gather, idx].reshape(kg, steps, batch_size,
+                                        *preds.shape[2:])
+        ye = y[gather, idx].reshape(kg, steps, batch_size)
+        ws = w.reshape(kg, steps, batch_size)
+        stacked, _ = masked_fusion_epoch(stacked, jnp.asarray(pe), presence,
+                                         jnp.asarray(ye), jnp.asarray(ws), lr)
     for k, c in enumerate(clients):
         c.fusion = jax.tree.map(lambda v: v[k], stacked)
 
 
-def _grouped(plans: Sequence[ClientPlan]) -> Dict[Tuple, List[ClientPlan]]:
-    groups: Dict[Tuple, List[ClientPlan]] = {}
-    for p in plans:
-        groups.setdefault(_signature(p.client), []).append(p)
-    return groups
-
+# ---------------------------------------------------------------------------
+# Algorithm 1 phases, batched
+# ---------------------------------------------------------------------------
 
 def batched_local_learning(clients: Sequence[Client], cfg,
-                           rng: np.random.Generator, *,
-                           min_group: int = 2) -> None:
-    """Algorithm 1's Local Learning phase, batched.
+                           rng: np.random.Generator) -> None:
+    """Algorithm 1's Local Learning phase, batched end-to-end.
 
     1. plan all shuffles (loop-order RNG parity);
-    2. group clients by training signature; groups of ≥ ``min_group`` train
-       encoders stacked, singletons fall back to the per-client loop;
-    3. Stage-#1 fusion, batched per group the same way.
-    """
+    2. encoder populations train per coarse shape family — ragged clients
+       included, no per-client fallback;
+    3. Stage-#1 fusion trains per fusion bucket with presence masks."""
     plans = plan_permutations(clients, cfg.local_epochs, rng)
-    groups = _grouped(plans)
-    for plist in groups.values():
-        if len(plist) < min_group:
-            for p in plist:
-                p.client.train_encoders(cfg.local_epochs, cfg.lr_encoder,
-                                        cfg.batch_size, None,
-                                        perms=p.encoder_perms)
-        else:
-            train_group_encoders(plist, epochs=cfg.local_epochs,
-                                 lr=cfg.lr_encoder,
-                                 batch_size=cfg.batch_size)
-    for plist in groups.values():
-        if len(plist) < min_group:
-            for p in plist:
-                p.client.train_fusion(cfg.local_epochs, cfg.lr_fusion,
-                                      cfg.batch_size, None,
-                                      perms=p.fusion_perms)
-        else:
-            train_group_fusion([p.client for p in plist],
-                               [p.fusion_perms for p in plist],
-                               epochs=cfg.local_epochs, lr=cfg.lr_fusion,
-                               batch_size=cfg.batch_size)
+    train_population_encoders(plans, epochs=cfg.local_epochs,
+                              lr=cfg.lr_encoder, batch_size=cfg.batch_size)
+    for idxs in _fusion_buckets(clients, cfg.batch_size):
+        train_population_fusion([clients[i] for i in idxs],
+                                [plans[i].fusion_perms for i in idxs],
+                                epochs=cfg.local_epochs, lr=cfg.lr_fusion,
+                                batch_size=cfg.batch_size)
 
 
 def batched_fusion_stage(clients: Sequence[Client], cfg,
-                         rng: np.random.Generator, *,
-                         min_group: int = 2) -> None:
+                         rng: np.random.Generator) -> None:
     """Stage-#2 fusion fine-tune (Local Deploying), batched.
 
     Draws the per-client epoch shuffles in client order first — the same
-    order the loop backend consumes ``rng`` — then trains signature groups
-    stacked."""
+    order the loop backend consumes ``rng`` — then trains fusion buckets
+    stacked with presence masks."""
     perms = [[rng.permutation(c.train.num_samples)
               for _ in range(cfg.local_epochs)] for c in clients]
-    groups: Dict[Tuple, List[int]] = {}
-    for i, c in enumerate(clients):
-        groups.setdefault(_signature(c), []).append(i)
-    for idxs in groups.values():
-        if len(idxs) < min_group:
-            for i in idxs:
-                clients[i].train_fusion(cfg.local_epochs, cfg.lr_fusion,
-                                        cfg.batch_size, None, perms=perms[i])
-        else:
-            train_group_fusion([clients[i] for i in idxs],
-                               [perms[i] for i in idxs],
-                               epochs=cfg.local_epochs, lr=cfg.lr_fusion,
-                               batch_size=cfg.batch_size)
+    for idxs in _fusion_buckets(clients, cfg.batch_size):
+        train_population_fusion([clients[i] for i in idxs],
+                                [perms[i] for i in idxs],
+                                epochs=cfg.local_epochs, lr=cfg.lr_fusion,
+                                batch_size=cfg.batch_size)
+
+
+# ---------------------------------------------------------------------------
+# population Shapley + evaluation
+# ---------------------------------------------------------------------------
+
+def batched_shapley_values(clients: Sequence[Client], background_size: int,
+                           eval_size: int, rng: np.random.Generator
+                           ) -> Dict[int, np.ndarray]:
+    """Exact interventional Shapley for a whole population: one vmapped 2^M
+    enumeration per fusion bucket instead of one per client per round.
+
+    Draws each client's background/eval subsets from ``rng`` in client order
+    — exactly the draws ``Client.shapley_values`` makes in the loop backend,
+    so both backends leave the generator in the same state. Returns
+    {client_id: φ over that client's modality_names}."""
+    draws = []
+    for c in clients:
+        n = c.train.num_samples
+        bg = np.asarray(rng.choice(n, size=min(background_size, n),
+                                   replace=False))
+        ev = np.asarray(rng.choice(n, size=min(eval_size, n), replace=False))
+        draws.append((bg, ev))
+    out: Dict[int, np.ndarray] = {}
+    for idxs in _fusion_buckets(clients):
+        cs = [clients[i] for i in idxs]
+        kg = len(cs)
+        M = len(cs[0].all_modalities)
+        preds = _population_predictions(cs, [c.train for c in cs])
+        n_pad = preds.shape[1]
+        g_max = max(len(draws[i][0]) for i in idxs)
+        b_max = max(len(draws[i][1]) for i in idxs)
+        bg_idx = np.zeros((kg, g_max), np.int64)
+        bg_w = np.zeros((kg, g_max), np.float32)
+        ev_idx = np.zeros((kg, b_max), np.int64)
+        ev_w = np.zeros((kg, b_max), np.float32)
+        for j, i in enumerate(idxs):
+            bg, ev = draws[i]
+            bg_idx[j, :len(bg)] = bg
+            bg_w[j, :len(bg)] = 1.0
+            ev_idx[j, :len(ev)] = ev
+            ev_w[j, :len(ev)] = 1.0
+        gather = np.arange(kg)[:, None]
+        y = np.stack([c.padded_labels(c.train, n_pad) for c in cs])
+        avail = np.stack([c.avail_mask() for c in cs])
+        phi = np.asarray(exact_shapley_population(
+            _stack_trees([c.fusion for c in cs]),
+            jnp.asarray(preds[gather, ev_idx]),
+            jnp.asarray(preds[gather, bg_idx]),
+            jnp.asarray(avail), jnp.asarray(y[gather, ev_idx]),
+            jnp.asarray(ev_w), jnp.asarray(bg_w), num_modalities=M))
+        for j, c in enumerate(cs):
+            out[c.client_id] = np.array(
+                [phi[j][c.all_modalities.index(m)]
+                 for m in c.modality_names])
+    return out
+
+
+@jax.jit
+def _batched_fusion_eval(params, preds, mask, y, w):
+    return jax.vmap(masked_fusion_eval)(params, preds, mask, y, w)
+
+
+def batched_evaluate(clients: Sequence[Client]) -> Tuple[float, float]:
+    """Sample-weighted (accuracy, loss) over every client's test split — the
+    batched replacement for the per-client ``Client.evaluate`` loop, padded
+    over test-set sizes and gated by presence masks."""
+    tot, acc_sum, loss_sum = 0.0, 0.0, 0.0
+    for idxs in _fusion_buckets(clients):
+        cs = [clients[i] for i in idxs]
+        datas = [c.test for c in cs]
+        preds = _population_predictions(cs, datas)
+        n_pad = preds.shape[1]
+        y = np.stack([c.padded_labels(d, n_pad) for c, d in zip(cs, datas)])
+        w = np.stack([c.sample_mask(d, n_pad) for c, d in zip(cs, datas)])
+        presence = np.stack([c.avail_mask() for c in cs])
+        loss, acc = _batched_fusion_eval(
+            _stack_trees([c.fusion for c in cs]), jnp.asarray(preds),
+            jnp.asarray(presence), jnp.asarray(y), jnp.asarray(w))
+        ns = np.array([d.num_samples for d in datas], np.float64)
+        tot += float(ns.sum())
+        acc_sum += float(np.asarray(acc, np.float64) @ ns)
+        loss_sum += float(np.asarray(loss, np.float64) @ ns)
+    return acc_sum / max(tot, 1.0), loss_sum / max(tot, 1.0)

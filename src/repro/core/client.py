@@ -55,6 +55,36 @@ class Client:
         return self.train.num_samples if modality in self.encoders else 0
 
     # ------------------------------------------------------------------
+    # padded population views — the ragged-federation layout shared by the
+    # batched simulator (repro.core.batched) and the mesh engine: clients
+    # stack on a leading K axis regardless of modality set or sample count,
+    # with zero-padding up to the population width plus 0/1 sample masks.
+    def padded_modality(self, data: ClientData, modality: str,
+                        n_pad: int) -> np.ndarray:
+        """[n_pad, ...] zero-padded view of one modality's samples."""
+        x = np.asarray(data.modalities[modality])
+        if x.shape[0] == n_pad:
+            return x
+        out = np.zeros((n_pad,) + x.shape[1:], x.dtype)
+        out[:x.shape[0]] = x
+        return out
+
+    def padded_labels(self, data: ClientData, n_pad: int) -> np.ndarray:
+        """[n_pad] labels, zero-filled past the client's real samples."""
+        y = np.asarray(data.labels)
+        if y.shape[0] == n_pad:
+            return y
+        out = np.zeros((n_pad,), y.dtype)
+        out[:y.shape[0]] = y
+        return out
+
+    def sample_mask(self, data: ClientData, n_pad: int) -> np.ndarray:
+        """[n_pad] float32 mask: 1 on real samples, 0 on padding."""
+        w = np.zeros((n_pad,), np.float32)
+        w[:data.num_samples] = 1.0
+        return w
+
+    # ------------------------------------------------------------------
     def _batches(self, data: ClientData, modality: str, batch_size: int,
                  rng: Optional[np.random.Generator], perm=None):
         x = data.modalities[modality]

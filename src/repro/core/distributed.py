@@ -30,7 +30,8 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.core.encoders import encoder_forward, encoder_loss
+from repro.core.encoders import (encoder_forward, encoder_loss,
+                                 masked_encoder_loss)
 
 
 def _client_axes(mesh) -> Tuple[str, ...]:
@@ -40,6 +41,7 @@ def _client_axes(mesh) -> Tuple[str, ...]:
 
 def make_federated_round(mesh, *, local_steps: int, lr: float = 0.1,
                          loss_fn: Callable = encoder_loss,
+                         masked_loss_fn: Optional[Callable] = None,
                          hierarchical: bool = False,
                          uplink_dtype=None):
     """Build the jit-able one-round function for one modality's encoders.
@@ -47,9 +49,19 @@ def make_federated_round(mesh, *, local_steps: int, lr: float = 0.1,
     Signature of the returned fn:
         (stacked_params,            # pytree with leading K axis
          batches,                   # {x: [K, S, B, ...], y: [K, S, B]}
+                                    #  + optional {w: [K, S, B]} sample mask
          select,                    # [K] float 0/1 — joint selection mask
          weight)                    # [K] float — |D_m^k| sample counts
         -> (new_stacked_params, aggregated_params, per_client_loss [K])
+
+    Ragged federations use the padded population layout shared with the
+    Tier-2 simulator (``repro.core.batched.padded_population_batches``):
+    when ``batches`` carries a 0/1 sample mask ``w``, each step's loss is
+    mask-weighted (``masked_loss_fn``, defaulting to the masked counterpart
+    of ``encoder_loss``), fully-padded steps are exact no-op updates, and
+    ``per_client_loss`` averages over real steps only — so clients with
+    diverse sample counts (and absent-modality dummies with all-zero masks
+    and zero Eq. 21 weight) ride the same mesh program.
 
     ``hierarchical=True`` (beyond-paper): a within-pod FedAvg runs after
     every local step over the cheap intra-pod ICI, and the selective
@@ -57,14 +69,8 @@ def make_federated_round(mesh, *, local_steps: int, lr: float = 0.1,
     """
     caxes = _client_axes(mesh)
     has_pod = "pod" in mesh.shape
-
-    def sgd_epoch(params, batch_x, batch_y):
-        def step(p, xy):
-            x, y = xy
-            loss, g = jax.value_and_grad(loss_fn)(p, x, y)
-            return jax.tree.map(lambda a, b: a - lr * b, p, g), loss
-
-        return jax.lax.scan(step, params, (batch_x, batch_y))
+    if masked_loss_fn is None and loss_fn is encoder_loss:
+        masked_loss_fn = masked_encoder_loss
 
     @functools.partial(
         shard_map, mesh=mesh,
@@ -72,23 +78,38 @@ def make_federated_round(mesh, *, local_steps: int, lr: float = 0.1,
         out_specs=(P(caxes), P(), P(caxes)),
         check_rep=False)
     def round_fn(params, batches, select, weight):
-        # ---- local learning: scan(E·steps) of vmapped per-client SGD ----
-        def one_client(p, bx, by):
-            if hierarchical and has_pod:
-                def step(pp, xy):
-                    x, y = xy
-                    loss, g = jax.value_and_grad(loss_fn)(pp, x, y)
-                    pp = jax.tree.map(lambda a, b: a - lr * b, pp, g)
-                    # within-pod sync every step (cheap ICI axis)
-                    pp = jax.tree.map(
-                        lambda a: jax.lax.pmean(a, "data"), pp)
-                    return pp, loss
-                return jax.lax.scan(step, p, (bx, by))
-            return sgd_epoch(p, bx, by)
+        has_w = "w" in batches
+        if has_w and masked_loss_fn is None:
+            raise ValueError("batches carry a sample mask 'w' but no "
+                             "masked_loss_fn was provided")
 
-        new_params, losses = jax.vmap(one_client)(
-            params, batches["x"], batches["y"])
-        per_client_loss = jnp.mean(losses, axis=-1)
+        # ---- local learning: scan(E·steps) of vmapped per-client SGD ----
+        def local_step(pp, xyw):
+            if has_w:
+                x, y, w = xyw
+                loss, g = jax.value_and_grad(masked_loss_fn)(pp, x, y, w)
+            else:
+                x, y = xyw
+                loss, g = jax.value_and_grad(loss_fn)(pp, x, y)
+            pp = jax.tree.map(lambda a, b: a - lr * b, pp, g)
+            if hierarchical and has_pod:
+                # within-pod sync every step (cheap ICI axis)
+                pp = jax.tree.map(lambda a: jax.lax.pmean(a, "data"), pp)
+            return pp, loss
+
+        def one_client(p, *xs):
+            return jax.lax.scan(local_step, p, xs)
+
+        args = (batches["x"], batches["y"])
+        if has_w:
+            args = args + (batches["w"],)
+        new_params, losses = jax.vmap(one_client)(params, *args)
+        if has_w:
+            sv = (jnp.sum(batches["w"], axis=-1) > 0).astype(losses.dtype)
+            per_client_loss = (jnp.sum(losses * sv, axis=-1)
+                               / jnp.maximum(jnp.sum(sv, axis=-1), 1.0))
+        else:
+            per_client_loss = jnp.mean(losses, axis=-1)
 
         # ---- Eq. 21 as a masked sparse all-reduce over client axes ----
         w = (select * weight)[:, None]                      # [K/shard, 1]
@@ -125,6 +146,7 @@ def make_federated_round(mesh, *, local_steps: int, lr: float = 0.1,
 def make_multimodal_federated_round(mesh, *, local_steps: int,
                                     lr: float = 0.1,
                                     loss_fn: Callable = encoder_loss,
+                                    masked_loss_fn: Optional[Callable] = None,
                                     hierarchical: bool = False,
                                     uplink_dtype=None):
     """The batched multi-modality round: every modality's encoder population
@@ -149,7 +171,9 @@ def make_multimodal_federated_round(mesh, *, local_steps: int,
     single-modality round).
     """
     single = make_federated_round(mesh, local_steps=local_steps, lr=lr,
-                                  loss_fn=loss_fn, hierarchical=hierarchical,
+                                  loss_fn=loss_fn,
+                                  masked_loss_fn=masked_loss_fn,
+                                  hierarchical=hierarchical,
                                   uplink_dtype=uplink_dtype)
 
     def round_fn(params: Dict, batches: Dict, select: Dict, weight: Dict):
@@ -185,10 +209,12 @@ def selection_masks(choices: Mapping[int, Sequence[str]],
 
 def multimodal_input_specs(num_clients: int, steps: int, batch: int,
                            feature_shapes: Mapping[str, Tuple[int, ...]],
-                           param_specs: Mapping[str, Dict]) -> Dict:
+                           param_specs: Mapping[str, Dict],
+                           with_mask: bool = False) -> Dict:
     """Per-modality ShapeDtypeStruct stand-ins for the dry-run."""
     specs = {m: federated_input_specs(num_clients, steps, batch,
-                                      feature_shapes[m], param_specs[m])
+                                      feature_shapes[m], param_specs[m],
+                                      with_mask=with_mask)
              for m in feature_shapes}
     return {
         "params": {m: s["params"] for m, s in specs.items()},
@@ -200,18 +226,24 @@ def multimodal_input_specs(num_clients: int, steps: int, batch: int,
 
 def federated_input_specs(num_clients: int, steps: int, batch: int,
                           feature_shape: Tuple[int, ...],
-                          param_spec) -> Dict:
-    """ShapeDtypeStruct stand-ins for the dry-run (no allocation)."""
+                          param_spec, with_mask: bool = False) -> Dict:
+    """ShapeDtypeStruct stand-ins for the dry-run (no allocation).
+
+    ``with_mask=True`` adds the ``w`` sample mask of the padded ragged
+    layout, so the lowered program is the masked variant."""
     S = jax.ShapeDtypeStruct
     stacked = jax.tree.map(
         lambda s: S((num_clients,) + s.shape, s.dtype), param_spec)
+    batches = {
+        "x": S((num_clients, steps, batch) + tuple(feature_shape),
+               jnp.float32),
+        "y": S((num_clients, steps, batch), jnp.int32),
+    }
+    if with_mask:
+        batches["w"] = S((num_clients, steps, batch), jnp.float32)
     return {
         "params": stacked,
-        "batches": {
-            "x": S((num_clients, steps, batch) + tuple(feature_shape),
-                   jnp.float32),
-            "y": S((num_clients, steps, batch), jnp.int32),
-        },
+        "batches": batches,
         "select": S((num_clients,), jnp.float32),
         "weight": S((num_clients,), jnp.float32),
     }

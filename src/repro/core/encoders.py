@@ -140,6 +140,19 @@ def encoder_loss(params, x, y):
     return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
 
 
+def masked_encoder_loss(params, x, y, w):
+    """Mask-weighted CE over a padded batch: Σ w·ce / max(Σ w, 1).
+
+    On real rows (w = 1) this equals :func:`encoder_loss` of the unpadded
+    batch; padded rows (w = 0) contribute neither loss nor gradient, and a
+    fully-padded batch yields exactly 0 with zero gradient — a no-op SGD
+    step. This is the per-step loss of the ragged-federation fast path."""
+    logits = encoder_forward(params, x)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    ce = -jnp.take_along_axis(logp, y[:, None], axis=1)[:, 0]
+    return jnp.sum(w * ce) / jnp.maximum(jnp.sum(w), 1.0)
+
+
 @functools.partial(jax.jit, static_argnames=("lr",))
 def encoder_sgd_step(params, x, y, lr: float = 0.1):
     loss, grads = jax.value_and_grad(encoder_loss)(params, x, y)

@@ -59,6 +59,17 @@ def fusion_loss(params, preds, mask, y):
     return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
 
 
+def masked_fusion_loss(params, preds, mask, y, w):
+    """Mask-weighted fusion CE: Σ w·ce / max(Σ w, 1) over a padded batch.
+
+    Equals :func:`fusion_loss` on the real rows; padded rows (w = 0) carry
+    neither loss nor gradient, so fully-padded steps are no-op updates."""
+    logits = fusion_forward(params, preds, mask)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    ce = -jnp.take_along_axis(logp, y[:, None], axis=1)[:, 0]
+    return jnp.sum(w * ce) / jnp.maximum(jnp.sum(w), 1.0)
+
+
 @functools.partial(jax.jit, static_argnames=("lr",))
 def fusion_sgd_step(params, preds, mask, y, lr: float = 0.1):
     loss, grads = jax.value_and_grad(fusion_loss)(params, preds, mask, y)
@@ -72,6 +83,18 @@ def fusion_eval(params, preds, mask, y):
     loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
     acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
     return loss, acc
+
+
+def masked_fusion_eval(params, preds, mask, y, w):
+    """Mask-weighted (loss, accuracy) over a padded sample axis — the
+    batched-population counterpart of :func:`fusion_eval`."""
+    logits = fusion_forward(params, preds, mask)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    ce = -jnp.take_along_axis(logp, y[:, None], axis=1)[:, 0]
+    denom = jnp.maximum(jnp.sum(w), 1.0)
+    loss = jnp.sum(w * ce) / denom
+    hit = (jnp.argmax(logits, -1) == y).astype(jnp.float32)
+    return loss, jnp.sum(w * hit) / denom
 
 
 def fusion_value(params, preds, mask, y):

@@ -134,13 +134,15 @@ def run_federation(clients: List[Client], spec: DatasetSpec,
                    backend: str = "loop") -> RunHistory:
     """Run T rounds of Algorithm 1.
 
-    ``backend`` selects how the Local Learning phase executes:
+    ``backend`` selects how the per-client hot phases execute:
       - ``"loop"``    — per-client Python loop (paper-faithful reference);
-      - ``"batched"`` — clients with homogeneous modality sets/shapes are
-        stacked on a leading K axis and trained with vmapped SGD
-        (``repro.core.batched``); ragged clients fall back to the loop.
-        Both backends consume the round RNG identically, so selection,
-        aggregation and the comm ledger match the loop to float tolerance.
+      - ``"batched"`` — the whole population (including ragged federations:
+        diverse modality sets, skewed sample counts) is stacked on a leading
+        K axis and trained with padded, mask-weighted vmapped SGD
+        (``repro.core.batched``); exact Shapley and evaluation run vmapped
+        over the same stacked layout. Both backends consume the round RNG
+        identically, so selection, aggregation and the comm ledger match the
+        loop to float tolerance.
     """
     if backend not in ("loop", "batched"):
         raise ValueError(f"unknown backend {backend!r}")
@@ -173,14 +175,30 @@ def run_federation(clients: List[Client], spec: DatasetSpec,
         # -- modality selection (§3.2) ----------------------------------
         round_shapley: Dict[str, List[float]] = {}
         choices: Dict[int, List[str]] = {}
+        names_by_cid: Dict[int, List[str]] = {}
         for c in avail:
             names = list(c.modality_names)
-            allowed = None
             if cfg.allowed_modalities is not None:
                 allowed = cfg.allowed_modalities.get(c.client_id)
                 names = [m for m in names if allowed is None or m in allowed]
-            if not names:
+            if names:
+                names_by_cid[c.client_id] = names
+        phi_by_cid = None
+        if cfg.modality_strategy not in ("all", "random") and \
+                backend == "batched":
+            # one vmapped 2^M Shapley enumeration for the whole population;
+            # draws the per-client eval/background subsets in the exact
+            # client order the loop backend would (RNG parity)
+            from repro.core.batched import batched_shapley_values
+            shap_clients = [c for c in avail
+                            if c.client_id in names_by_cid]
+            if shap_clients:
+                phi_by_cid = batched_shapley_values(
+                    shap_clients, cfg.background_size, cfg.eval_size, rng)
+        for c in avail:
+            if c.client_id not in names_by_cid:
                 continue
+            names = names_by_cid[c.client_id]
             if cfg.modality_strategy == "all":
                 choices[c.client_id] = names
             elif cfg.modality_strategy == "random":
@@ -188,7 +206,9 @@ def run_federation(clients: List[Client], spec: DatasetSpec,
                 choices[c.client_id] = sorted(
                     rng.choice(names, size=g, replace=False).tolist())
             else:  # priority (paper)
-                phi = c.shapley_values(cfg.background_size, cfg.eval_size, rng)
+                phi = (phi_by_cid[c.client_id] if phi_by_cid is not None
+                       else c.shapley_values(cfg.background_size,
+                                             cfg.eval_size, rng))
                 phi_named = dict(zip(c.modality_names, phi))
                 for m, p in phi_named.items():
                     round_shapley.setdefault(m, []).append(abs(float(p)))
@@ -202,7 +222,13 @@ def run_federation(clients: List[Client], spec: DatasetSpec,
 
         # -- client selection (§3.3) ------------------------------------
         cands = [c for c in avail if c.client_id in choices]
-        if cfg.client_strategy == "all":
+        if not cands:
+            # No client has a selectable modality this round (e.g. an
+            # allowed_modalities config that bars every candidate): record
+            # an explicit empty-upload round instead of selecting from an
+            # empty candidate set.
+            selected = []
+        elif cfg.client_strategy == "all":
             selected = [c.client_id for c in cands]
         else:
             # representative loss = min over the client's selected modalities
@@ -251,7 +277,11 @@ def run_federation(clients: List[Client], spec: DatasetSpec,
                                cfg.batch_size, rng)  # Stage #2
 
         # -- evaluate -----------------------------------------------------
-        acc, loss = _weighted_accuracy(clients)
+        if backend == "batched":
+            from repro.core.batched import batched_evaluate
+            acc, loss = batched_evaluate(clients)
+        else:
+            acc, loss = _weighted_accuracy(clients)
         ledger.rounds = t
         history.records.append(RoundRecord(
             t, acc, loss, ledger.megabytes, uploads,

@@ -71,9 +71,10 @@ def modality_priority(shapley: np.ndarray, sizes: np.ndarray,
 def select_top_gamma(priority: np.ndarray, names: Sequence[str],
                      gamma: int) -> List[str]:
     """Top-γ priority modalities (Eqs. 14–15). Deterministic tie-break by
-    descending priority then name order."""
+    descending priority then name order (not input order)."""
     gamma = min(gamma, len(names))
-    order = np.argsort(-priority, kind="stable")
+    order = sorted(range(len(names)),
+                   key=lambda i: (-float(priority[i]), names[i]))
     return [names[i] for i in order[:gamma]]
 
 

@@ -52,14 +52,33 @@ def exact_shapley(fusion_params, preds, background, avail_mask, y,
     avail_mask: [M]         1.0 where the modality exists on this client
     y:          [B]         true labels
     Returns φ [M] (float32); Σφ = v(full) − v(∅) and φ_m = 0 for absent m.
+
+    The unpadded case of :func:`_masked_exact_shapley` (unit sample masks),
+    so the loop and batched backends share one Shapley implementation.
     """
+    return _masked_exact_shapley(
+        fusion_params, preds, background, avail_mask, y,
+        jnp.ones((preds.shape[0],), jnp.float32),
+        jnp.ones((background.shape[0],), jnp.float32),
+        num_modalities=num_modalities)
+
+
+def _masked_exact_shapley(fusion_params, preds, background, avail_mask, y,
+                          eval_w, bg_w, *, num_modalities: int):
+    """Single-client exact Shapley with weighted (padding-aware) means.
+
+    ``eval_w`` [B] / ``bg_w`` [G] are 0/1 sample masks; v(S) becomes the
+    mask-weighted mean of p(y|·), so clients whose eval/background subsets
+    are padded up to a population-wide (B, G) compute the same values as the
+    unpadded per-client enumeration."""
     m = num_modalities
     masks = jnp.asarray(subset_masks(m), jnp.float32)          # [2^m, M]
     b, _, c = preds.shape
     g = background.shape[0]
+    wmat = eval_w[:, None] * bg_w[None, :]                     # [B, G]
+    denom = jnp.maximum(jnp.sum(wmat), 1.0)
 
     def value(smask):
-        # mixed[b, g, M, C] = S ? preds : background
         mixed = (smask[None, None, :, None] * preds[:, None] +
                  (1 - smask)[None, None, :, None] * background[None])
         mixed = mixed.reshape(b * g, m, c)
@@ -68,8 +87,8 @@ def exact_shapley(fusion_params, preds, background, avail_mask, y,
         p = jax.nn.softmax(logits.astype(jnp.float32))
         p_true = jnp.take_along_axis(
             p.reshape(b, g, c), jnp.broadcast_to(y[:, None, None], (b, g, 1)),
-            axis=2)
-        return jnp.mean(p_true)
+            axis=2)[..., 0]
+        return jnp.sum(wmat * p_true) / denom
 
     vals = jax.lax.map(value, masks)                           # [2^m]
 
@@ -78,7 +97,6 @@ def exact_shapley(fusion_params, preds, background, avail_mask, y,
 
     def phi(mi):
         has_m = masks[:, mi] > 0
-        # pair subset S∪{m} (has_m) with S = same index minus bit mi
         pair = jnp.arange(2 ** m) - (1 << mi)
         contrib = jnp.where(has_m,
                             w_table[jnp.clip(sizes - 1, 0, m - 1).astype(int)]
@@ -89,15 +107,41 @@ def exact_shapley(fusion_params, preds, background, avail_mask, y,
     return jax.vmap(phi)(jnp.arange(m))
 
 
+@functools.partial(jax.jit, static_argnames=("num_modalities",))
+def exact_shapley_population(fusion_params, preds, background, avail_mask, y,
+                             eval_w, bg_w, *, num_modalities: int):
+    """Exact interventional Shapley for a stacked client population.
+
+    One vmapped 2^M enumeration replaces the per-client Python loop:
+
+    fusion_params: pytree with leading K axis (each client's local fusion)
+    preds:      [K, B, M, C]  eval predictions, padded over B
+    background: [K, G, M, C]  background predictions, padded over G
+    avail_mask: [K, M]        per-(client, modality) presence
+    y:          [K, B]        true labels (padded rows arbitrary)
+    eval_w/bg_w:[K, B]/[K, G] 0/1 sample masks for the padded rows
+    Returns φ [K, M]; rows reproduce :func:`exact_shapley` per client."""
+    fn = functools.partial(_masked_exact_shapley,
+                           num_modalities=num_modalities)
+    return jax.vmap(fn)(fusion_params, preds, background, avail_mask, y,
+                        eval_w, bg_w)
+
+
 def sampled_shapley(fusion_params, preds, background, avail_mask, y,
                     *, num_modalities: int, num_permutations: int = 64,
                     rng: Optional[np.random.Generator] = None):
-    """Permutation-sampling estimator for large M (unbiased, O(P·M) values)."""
+    """Permutation-sampling estimator for large M (unbiased, O(P·M) values).
+
+    The coalition value is jit-compiled once per call (the eager op-by-op
+    forward used to pay dispatch on every marginal), and v(∅) — identical
+    for every permutation — is hoisted out of the permutation loop."""
     m = num_modalities
     rng = rng or np.random.default_rng(0)
     b, _, c = preds.shape
     g = background.shape[0]
+    yj = jnp.asarray(y)
 
+    @jax.jit
     def value(smask):
         mixed = (smask[None, None, :, None] * preds[:, None] +
                  (1 - smask)[None, None, :, None] * background[None])
@@ -106,18 +150,19 @@ def sampled_shapley(fusion_params, preds, background, avail_mask, y,
                                 jnp.broadcast_to(avail_mask[None], (b * g, m)))
         p = jax.nn.softmax(logits.astype(jnp.float32))
         p_true = jnp.take_along_axis(
-            p.reshape(b, g, c), np.broadcast_to(np.asarray(y)[:, None, None],
-                                                (b, g, 1)), axis=2)
-        return float(jnp.mean(p_true))
+            p.reshape(b, g, c), jnp.broadcast_to(yj[:, None, None], (b, g, 1)),
+            axis=2)
+        return jnp.mean(p_true)
 
+    v_empty = float(value(jnp.zeros((m,), jnp.float32)))
     phi = np.zeros(m)
     for _ in range(num_permutations):
         perm = rng.permutation(m)
         smask = np.zeros(m, np.float32)
-        v_prev = value(jnp.asarray(smask))
+        v_prev = v_empty
         for mi in perm:
             smask[mi] = 1.0
-            v_new = value(jnp.asarray(smask))
+            v_new = float(value(jnp.asarray(smask)))
             phi[mi] += v_new - v_prev
             v_prev = v_new
     return jnp.asarray(phi / num_permutations, jnp.float32)

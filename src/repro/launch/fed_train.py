@@ -2,7 +2,8 @@
 jit'd mesh program.
 
     PYTHONPATH=src python -m repro.launch.fed_train --dataset ucihar \
-        --rounds 3 [--devices 8] [--gamma 1] [--hierarchical]
+        --rounds 3 [--devices 8] [--gamma 1] [--scenario natural] \
+        [--hierarchical]
 
 The K-client population is stacked and sharded over the mesh 'data' axis,
 *per modality*: every modality's encoder population trains E·steps of
@@ -12,6 +13,15 @@ vmapped local SGD and aggregates through its own masked weighted all-reduce
 per-(client, modality) selection mask is the joint modality-and-client
 selection (Eq. 20), so the collectives' useful traffic shrinks by the
 paper's γ/M̄·δ factor per modality.
+
+Ragged federations (``--scenario natural | longtail | modality_noniid``)
+use the padded population layout shared with the Tier-2 simulator
+(``repro.core.batched.padded_population_batches``): each client's samples
+fill the head of a common [S, B] step schedule under a 0/1 sample mask, a
+client that lacks a modality trains a no-op dummy slot with an all-zero
+mask and zero Eq. 21 weight, and host-side selection only ranks the
+modalities a client actually owns. Heterogeneous populations therefore run
+the same mesh program as the homogeneous case — no per-client path.
 
 Selection itself stays host-side — it consumes K·M scalars, not tensors.
 The modality-impact criterion uses the per-round loss improvement as a
@@ -34,6 +44,13 @@ import time
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="ucihar")
+    ap.add_argument("--scenario", default="iid",
+                    help="client partition: iid | natural | class_noniid | "
+                         "modality_noniid | longtail")
+    ap.add_argument("--missing-rate", type=float, default=0.5,
+                    help="modality_noniid: per-modality drop rate")
+    ap.add_argument("--imbalance-factor", type=float, default=10.0,
+                    help="longtail: n_max / n_min")
     ap.add_argument("--rounds", type=int, default=3)
     ap.add_argument("--steps", type=int, default=6)
     ap.add_argument("--batch", type=int, default=16)
@@ -58,16 +75,29 @@ def main(argv=None):
     import numpy as np
 
     from repro.core.aggregation import CommLedger
+    from repro.core.batched import padded_population_batches
     from repro.core.distributed import (make_multimodal_federated_round,
                                         selection_masks)
     from repro.core.encoders import encoder_bytes, encoder_eval, init_encoder
     from repro.core.selection import (modality_priority, select_clients,
                                       select_top_gamma)
     from repro.data import get_dataset_spec, make_federation
+    from repro.data.partition import PARTITIONERS
 
+    if args.scenario not in PARTITIONERS:
+        raise SystemExit(f"unknown scenario {args.scenario!r}; choose from "
+                         f"{sorted(PARTITIONERS)}")
     spec = get_dataset_spec(args.dataset)
-    clients = make_federation(args.dataset, "iid",
-                              samples_per_client=args.batch * args.steps)
+    n_base = args.batch * args.steps
+    if args.scenario == "longtail":
+        part_kw = {"max_samples": n_base,
+                   "imbalance_factor": args.imbalance_factor}
+    elif args.scenario == "modality_noniid":
+        part_kw = {"samples_per_client": n_base,
+                   "missing_rate": args.missing_rate}
+    else:
+        part_kw = {"samples_per_client": n_base}
+    clients = make_federation(args.dataset, args.scenario, **part_kw)
     if args.modalities == "all":
         modalities = list(spec.modality_names)
     else:
@@ -84,23 +114,26 @@ def main(argv=None):
             data_ax = d
             break
     mesh = jax.make_mesh((data_ax, n_dev // data_ax), ("data", "model"))
-    print(f"{K} clients x {M} modalities on mesh {dict(mesh.shape)}")
+    print(f"{K} clients x {M} modalities on mesh {dict(mesh.shape)} "
+          f"(scenario={args.scenario})")
 
-    # ---- stack the federation: {modality: [K, ...]} pytrees/batches ----
+    # ---- stack the federation: the shared padded population layout -----
+    # per-(client, modality) presence — Eq. 20/21's [K, M] mask layout
+    presence = np.array([[1.0 if m in c.modalities else 0.0
+                          for m in modalities] for c in clients], np.float32)
     params, batches, weight, sizes = {}, {}, {}, {}
     for i, m in enumerate(modalities):
-        feat = clients[0].modalities[m].shape[1:]
+        feat = spec.modality(m).feature_shape(True)
         enc = init_encoder(jax.random.key(i), feat, spec.num_classes)
         sizes[m] = encoder_bytes(enc)
         params[m] = jax.tree.map(lambda x: jnp.stack([x] * K), enc)
-        batches[m] = {
-            "x": jnp.stack([c.modalities[m].reshape(
-                args.steps, args.batch, *feat) for c in clients]),
-            "y": jnp.stack([c.labels.reshape(args.steps, args.batch)
-                            for c in clients]),
-        }
-        weight[m] = jnp.asarray([c.num_samples for c in clients],
-                                jnp.float32)
+        b = padded_population_batches(
+            [c.modalities.get(m) for c in clients],
+            [c.labels for c in clients], args.batch, feature_shape=feat)
+        batches[m] = {k: jnp.asarray(v) for k, v in b.items()}
+        weight[m] = jnp.asarray(
+            [c.num_samples if m in c.modalities else 0 for c in clients],
+            jnp.float32)
 
     round_fn = jax.jit(make_multimodal_federated_round(
         mesh, local_steps=args.steps, lr=0.1,
@@ -108,8 +141,9 @@ def main(argv=None):
     size_vec = np.array([sizes[m] for m in modalities], np.float64)
     ledger = CommLedger()
     with mesh:
-        # round 1 is the cold start: everyone uploads everything
-        select = {m: jnp.ones((K,), jnp.float32) for m in modalities}
+        # round 1 is the cold start: everyone uploads everything they own
+        select = {m: jnp.asarray(presence[:, i])
+                  for i, m in enumerate(modalities)}
         last_upload = np.full((K, M), -1, np.int64)      # Eq. 11 state
         prev_loss = None                                  # [K, M]
         for t in range(1, args.rounds + 1):
@@ -134,13 +168,18 @@ def main(argv=None):
                       else np.maximum(prev_loss - cur, 0.0))
             choices = {}
             for k in range(K):
-                rec = (t - last_upload[k] - 1).astype(np.float64)
-                prio = modality_priority(impact[k], size_vec, rec, t,
-                                         1 / 3, 1 / 3, 1 / 3)
-                choices[k] = select_top_gamma(prio, modalities, args.gamma)
+                # rank only the modalities client k actually owns
+                own = [i for i in range(M) if presence[k, i] > 0]
+                if not own:
+                    continue
+                names = [modalities[i] for i in own]
+                rec = (t - last_upload[k, own] - 1).astype(np.float64)
+                prio = modality_priority(impact[k, own], size_vec[own], rec,
+                                         t, 1 / 3, 1 / 3, 1 / 3)
+                choices[k] = select_top_gamma(prio, names, args.gamma)
             rep_loss = {k: float(min(cur[k, modalities.index(m)]
                                      for m in choices[k]))
-                        for k in range(K)}
+                        for k in choices}
             chosen = select_clients(rep_loss, args.delta)
             select = selection_masks(choices, chosen, K, modalities)
             prev_loss = cur
@@ -149,12 +188,14 @@ def main(argv=None):
                           for m in modalities)
             accs = []
             for m in modalities:
+                ref = next(c for c in clients if m in c.modalities)
                 _, a = encoder_eval(agg[m],
-                                    jnp.asarray(clients[0].modalities[m]),
-                                    jnp.asarray(clients[0].labels))
+                                    jnp.asarray(ref.modalities[m]),
+                                    jnp.asarray(ref.labels))
                 accs.append(float(a))
-            print(f"[round {t}] mean-loss={float(np.mean(cur)):.4f} "
-                  f"global-enc acc(client0)={np.mean(accs):.3f} "
+            mean_loss = float(cur[presence > 0].mean())   # real pairs only
+            print(f"[round {t}] mean-loss={mean_loss:.4f} "
+                  f"global-enc acc(ref)={np.mean(accs):.3f} "
                   f"selected={len(chosen)}/{K} uplink[{mb}] "
                   f"cum={ledger.megabytes:.2f}MB ({time.time() - t0:.1f}s)")
         for m in modalities:

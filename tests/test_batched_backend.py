@@ -52,8 +52,8 @@ class TestLoopBatchedParity:
             h_l.records[0].accuracy, abs=1e-6)
 
     def test_parity_on_ragged_federation(self):
-        # actionsense 'natural': structural missing modalities -> mixed
-        # signature groups; singletons fall back to the per-client loop
+        # actionsense 'natural': structural missing modalities + skewed
+        # sample counts all run on the padded mask-weighted batched path
         kw = dict(dataset="actionsense", scenario="natural", n=20,
                   local_epochs=1, batch_size=8)
         se_l, h_l, _ = _run("loop", **kw)

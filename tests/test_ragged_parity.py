@@ -1,0 +1,218 @@
+"""Ragged-federation fast path: loop-vs-batched parity on populations with
+structurally missing modalities and skewed sample counts, the padded-SGD
+property (mask-weighted padded SGD == unpadded SGD), the masked mesh round,
+the empty-candidate guard, and the top-γ tie-break regression."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.bench_batched_round import ragged_federation
+from repro.core import encoders as enc
+from repro.core.batched import (masked_batched_epoch, num_steps,
+                                padded_perm_indices,
+                                padded_population_batches)
+from repro.core.rounds import (MFedMCConfig, _weighted_accuracy,
+                               build_federation, run_federation)
+from repro.core.selection import select_top_gamma
+
+TOL = 1e-5
+
+
+def ragged_clients(K=9, n_max=22, seed=0):
+    """The benchmark's heterogeneous federation at test scale: three
+    distinct modality sets ({acc}, {gyro}, {acc, gyro}) and sample counts
+    skewed from n_max down to min_n — every schedule length and presence
+    pattern differs."""
+    return ragged_federation(K, n=n_max, seed=seed, min_n=6)
+
+
+def _run(backend, **cfg_kw):
+    base = dict(rounds=1, local_epochs=2, batch_size=8, seed=0,
+                modality_strategy="random", gamma=1)
+    base.update(cfg_kw)
+    cfg = MFedMCConfig(**base)
+    clients, spec = ragged_clients()
+    server = {}
+    hist = run_federation(clients, spec, cfg, server_encoders=server,
+                          backend=backend)
+    return server, hist, clients
+
+
+def _assert_server_match(se_loop, se_batched):
+    assert set(se_loop) == set(se_batched)
+    for m in se_loop:
+        for k in se_loop[m]:
+            np.testing.assert_allclose(np.asarray(se_batched[m][k]),
+                                       np.asarray(se_loop[m][k]),
+                                       atol=TOL, rtol=0,
+                                       err_msg=f"{m}/{k}")
+
+
+class TestRaggedParity:
+    """Round-1 aggregates, ledger bytes, and selection decisions pinned to
+    the loop backend on a federation no signature grouping could stack."""
+
+    def test_random_strategy(self):
+        se_l, h_l, _ = _run("loop")
+        se_b, h_b, _ = _run("batched")
+        _assert_server_match(se_l, se_b)
+        assert h_b.records[0].comm_mb == h_l.records[0].comm_mb
+        assert h_b.records[0].uploads == h_l.records[0].uploads
+        assert h_b.records[0].accuracy == pytest.approx(
+            h_l.records[0].accuracy, abs=1e-6)
+
+    def test_priority_strategy_vmapped_shapley(self):
+        # exercises batched_shapley_values (one vmapped 2^M enumeration)
+        kw = dict(modality_strategy="priority", client_strategy="low_loss",
+                  background_size=10, eval_size=8)
+        se_l, h_l, _ = _run("loop", **kw)
+        se_b, h_b, _ = _run("batched", **kw)
+        _assert_server_match(se_l, se_b)
+        assert h_b.records[0].uploads == h_l.records[0].uploads
+        for m in h_l.records[0].shapley:
+            assert h_b.records[0].shapley[m] == pytest.approx(
+                h_l.records[0].shapley[m], abs=1e-4)
+
+    def test_per_client_losses_track(self):
+        _, h_l, cl_l = _run("loop", local_epochs=1)
+        _, h_b, cl_b = _run("batched", local_epochs=1)
+        for c_l, c_b in zip(cl_l, cl_b):
+            assert c_l.modality_names == c_b.modality_names
+            for m in c_l.modality_names:
+                assert c_b.losses[m] == pytest.approx(c_l.losses[m],
+                                                      abs=1e-5)
+
+    def test_batched_evaluate_matches_loop(self):
+        _, _, cl = _run("batched", local_epochs=1)
+        from repro.core.batched import batched_evaluate
+        acc_b, loss_b = batched_evaluate(cl)
+        acc_l, loss_l = _weighted_accuracy(cl)
+        assert acc_b == pytest.approx(acc_l, abs=1e-6)
+        assert loss_b == pytest.approx(loss_l, abs=1e-5)
+
+
+class TestPaddedSgdProperty:
+    """Mask-weighted padded SGD must reproduce unpadded SGD: same params,
+    same per-batch losses, across random (n, B) schedule shapes."""
+
+    @pytest.mark.parametrize("seed", range(6))
+    def test_matches_unpadded(self, seed):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(3, 40))
+        bsz = int(rng.integers(2, 12))
+        t, f, c = 5, int(rng.integers(2, 6)), 4
+        params = enc.init_encoder(jax.random.key(seed), (t, f), c)
+        x = rng.standard_normal((n, t, f)).astype(np.float32)
+        y = rng.integers(0, c, n).astype(np.int32)
+        perm = rng.permutation(n)
+
+        # reference: the loop backend's batch semantics
+        ref = params
+        ref_losses = []
+        for i in range(0, n, bsz):
+            sel = perm[i:i + bsz]
+            ref, loss = enc.encoder_sgd_step(ref, jnp.asarray(x[sel]),
+                                             jnp.asarray(y[sel]), lr=0.1)
+            ref_losses.append(float(loss))
+
+        # padded: pad the schedule with 2 extra fully-masked steps
+        steps = num_steps(n, bsz) + 2
+        idx, w = padded_perm_indices([perm], [n], steps, bsz)
+        xe = x[idx[0]].reshape(1, steps, bsz, t, f)
+        ye = y[idx[0]].reshape(1, steps, bsz)
+        ws = w.reshape(1, steps, bsz)
+        stacked = jax.tree.map(lambda v: v[None], params)
+        out, losses = masked_batched_epoch(stacked, jnp.asarray(xe),
+                                           jnp.asarray(ye),
+                                           jnp.asarray(ws), 0.1)
+        got = jax.tree.map(lambda v: np.asarray(v[0]), out)
+        for key in got:
+            np.testing.assert_allclose(got[key], np.asarray(ref[key]),
+                                       atol=TOL, rtol=0, err_msg=key)
+        real = num_steps(n, bsz)
+        np.testing.assert_allclose(np.asarray(losses)[0, :real],
+                                   ref_losses, atol=TOL, rtol=0)
+        # fully-padded steps: zero loss, and (already checked) no-op updates
+        np.testing.assert_array_equal(np.asarray(losses)[0, real:], 0.0)
+
+
+class TestMaskedMeshRound:
+    """The mesh round consumes the same padded layout: ragged sample counts
+    and absent-modality dummy slots inside one jit'd program."""
+
+    def test_matches_per_client_loop(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        from repro.core.distributed import make_federated_round
+        t, f, c, bsz = 6, 4, 3, 4
+        ns = [5, 0, 11]                      # client 1 lacks the modality
+        rng = np.random.default_rng(0)
+        xs = [None if n == 0 else
+              rng.standard_normal((n, t, f)).astype(np.float32) for n in ns]
+        ys = [np.zeros((0,), np.int32) if x is None else
+              rng.integers(0, c, len(x)).astype(np.int32) for x in xs]
+        batches = padded_population_batches(xs, ys, bsz)
+        params = enc.init_encoder(jax.random.key(1), (t, f), c)
+        stacked = jax.tree.map(lambda v: jnp.stack([v] * 3), params)
+        select = jnp.asarray([1.0, 0.0, 1.0])
+        weight = jnp.asarray([float(n) for n in ns])
+        rnd = make_federated_round(mesh, local_steps=3, lr=0.05)
+        with mesh:
+            deployed, agg, losses = jax.jit(rnd)(stacked, batches, select,
+                                                 weight)
+
+        # hand-rolled reference: per-client loop over the real batches
+        def local(x, y):
+            p = params
+            for i in range(0, len(x), bsz):
+                g = jax.grad(enc.encoder_loss)(p, jnp.asarray(x[i:i + bsz]),
+                                               jnp.asarray(y[i:i + bsz]))
+                p = jax.tree.map(lambda a, b: a - 0.05 * b, p, g)
+            return p
+        ref = {k: local(xs[k], ys[k]) for k in (0, 2)}
+        wsum = float(ns[0] + ns[2])
+        for key in agg:
+            expect = (ns[0] * np.asarray(ref[0][key])
+                      + ns[2] * np.asarray(ref[2][key])) / wsum
+            np.testing.assert_allclose(np.asarray(agg[key]), expect,
+                                       atol=1e-5, rtol=1e-4, err_msg=key)
+        # the dummy slot trains nothing and reports zero loss
+        assert float(losses[1]) == 0.0
+        np.testing.assert_allclose(
+            np.asarray(deployed["w_fc"][1]), np.asarray(agg["w_fc"]),
+            rtol=1e-5)
+
+
+class TestEmptyCandidateRound:
+    """No client has a selectable modality -> an explicit empty-upload
+    round, not incidental behavior (random client selection used to raise
+    on the empty candidate set)."""
+
+    @pytest.mark.parametrize("strategy", ["low_loss", "random"])
+    def test_records_empty_round(self, strategy):
+        cfg = MFedMCConfig(rounds=1, local_epochs=1, batch_size=8, seed=0,
+                           client_strategy=strategy,
+                           allowed_modalities={})
+        clients, spec = build_federation("ucihar", "iid", cfg=cfg, seed=0,
+                                         samples_per_client=16)
+        cfg = dataclasses.replace(
+            cfg, allowed_modalities={c.client_id: set() for c in clients})
+        hist = run_federation(clients, spec, cfg)
+        assert hist.records[0].uploads == []
+        assert hist.records[0].comm_mb == 0.0
+
+
+class TestSelectTopGammaTieBreak:
+    def test_ties_break_by_name_not_input_order(self):
+        # equal priorities: the docstring promises name order, but the old
+        # stable argsort kept input order ("b" before "a")
+        names = ["b", "a", "c"]
+        prio = np.array([1.0, 1.0, 0.5])
+        assert select_top_gamma(prio, names, 2) == ["a", "b"]
+        assert select_top_gamma(prio, names, 3) == ["a", "b", "c"]
+
+    def test_priority_still_dominates_name(self):
+        names = ["a", "b"]
+        assert select_top_gamma(np.array([0.1, 0.9]), names, 1) == ["b"]
