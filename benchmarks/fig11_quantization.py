@@ -1,5 +1,5 @@
-"""Fig. 11 — uplink quantization (32/8/4-bit) composed with joint
-selection."""
+"""Fig. 11 — uplink quantization (32/16/8/4-bit) composed with joint
+selection; bytes are exact wire counts (packed codes + metadata)."""
 from __future__ import annotations
 
 from typing import List
@@ -11,7 +11,7 @@ from repro.core.rounds import run_mfedmc
 def run(fast: bool = True) -> List[Row]:
     rows: List[Row] = []
     n = samples_for(fast)
-    for bits in (32, 8, 4):
+    for bits in (32, 16, 8, 4):
         cfg = cfg_for(fast, quantize_bits=bits)
         with Timer() as t:
             h = run_mfedmc("ucihar", "iid", cfg, samples_per_client=n)

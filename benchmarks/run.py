@@ -26,6 +26,7 @@ MODULES = [
     "table7_runtime",
     "fig12_shapley_runtime",
     "bench_batched_round",
+    "bench_quantized_round",
     "roofline",
     "roofline_federated",
     "roofline_flash_decode",

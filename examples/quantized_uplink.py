@@ -1,10 +1,14 @@
 """Fig. 11 scenario: MFedMC composed with 4/8-bit uplink quantization.
 
-    PYTHONPATH=src python examples/quantized_uplink.py [--rounds 8]
+    PYTHONPATH=src python examples/quantized_uplink.py [--rounds 8] \
+        [--backend batched] [--error-feedback]
 
-Runs the same federation at 32/8/4-bit encoder uploads and reports
-accuracy + bytes — the decoupled local fusion module absorbs quantization
-error that would propagate through a holistic model's task head.
+Runs the same federation at 32/16/8/4-bit encoder uploads and reports
+accuracy + exact wire bytes (bit-packed codes + per-tensor scale/zero
+metadata) — the decoupled local fusion module absorbs quantization error
+that would propagate through a holistic model's task head, and
+``--error-feedback`` adds client-held residual accumulators so the lowest
+precisions stay unbiased across rounds.
 """
 import argparse
 import dataclasses
@@ -16,14 +20,20 @@ from repro.core.rounds import run_mfedmc
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--backend", default="loop",
+                    choices=("loop", "batched"))
+    ap.add_argument("--error-feedback", action="store_true",
+                    help="client-held §4.10 residual accumulators")
     args = ap.parse_args()
 
     base = MFedMCConfig(rounds=args.rounds, local_epochs=2,
-                        background_size=32, eval_size=32, seed=0)
+                        background_size=32, eval_size=32, seed=0,
+                        error_feedback=args.error_feedback)
     print(f"{'bits':>5} {'final-acc':>10} {'uplink-MB':>10}")
-    for bits in (32, 8, 4):
+    for bits in (32, 16, 8, 4):
         cfg = dataclasses.replace(base, quantize_bits=bits)
-        h = run_mfedmc("ucihar", "iid", cfg, samples_per_client=48)
+        h = run_mfedmc("ucihar", "iid", cfg, samples_per_client=48,
+                       backend=args.backend)
         print(f"{bits:>5} {h.final_accuracy():>10.4f} {h.comm_mb[-1]:>10.3f}")
 
 

@@ -6,8 +6,12 @@ Layers:
     fusion.py      — strictly-local fusion module (ω^k)
     shapley.py     — exact interventional Shapley modality impact (Eq. 8)
     selection.py   — priority + top-γ modality / top-δ client selection
-    aggregation.py — per-modality weighted FedAvg (Eq. 21) + comm ledger
-    quantize.py    — 4/8-bit uplink quantization (§4.10)
+    aggregation.py — per-modality weighted FedAvg (Eq. 21) as a stacked
+                     device-resident reduction (+ fused quantized form),
+                     comm ledger with exact wire accounting
+    quantize.py    — §4.10 uplink quantization as a subsystem: jit'd,
+                     vmap-able pytree quantizer, bit-packed wire format,
+                     exact byte accounting, error-feedback residuals
     client.py      — client state + Algorithm 1 local phases
     rounds.py      — the federation loop with every §4 ablation knob
                      (backend='loop' reference / 'batched' fast path)
@@ -20,7 +24,9 @@ Layers:
                      single- and multi-modality jit'd rounds
 """
 from repro.core.aggregation import (CommLedger, ICI_LINK, IOT_UPLINK,
-                                    TransportModel, aggregate_modality)
+                                    TransportModel, aggregate_modality,
+                                    aggregate_quantized, aggregate_stacked,
+                                    stack_uploads)
 from repro.core.batched import (batched_evaluate, batched_local_learning,
                                 batched_shapley_values,
                                 padded_population_batches, plan_permutations)
@@ -31,10 +37,17 @@ from repro.core.encoders import (encoder_bytes, encoder_eval,
                                  init_encoder)
 from repro.core.fusion import (fusion_eval, fusion_forward, fusion_sgd_step,
                                init_fusion)
-from repro.core.quantize import (dequantize_encoder, quantize_encoder,
-                                 quantized_roundtrip)
+from repro.core.quantize import (dequantize_encoder, dequantize_pytree,
+                                 fake_quantize_pytree, pytree_wire_bytes,
+                                 quantize_encoder, quantize_population,
+                                 quantize_population_with_error_feedback,
+                                 quantize_pytree,
+                                 quantize_with_error_feedback,
+                                 quantized_roundtrip, tensor_wire_bytes,
+                                 zero_residual)
 from repro.core.rounds import (MFedMCConfig, RoundRecord, RunHistory,
-                               build_federation, run_federation, run_mfedmc)
+                               aggregate_uploads, build_federation,
+                               run_federation, run_mfedmc)
 from repro.core.selection import (RecencyTracker, SelectionResult,
                                   joint_select, minmax_normalize,
                                   modality_priority, select_clients,
@@ -44,16 +57,21 @@ from repro.core.shapley import (exact_shapley, exact_shapley_population,
 
 __all__ = [
     "CommLedger", "ICI_LINK", "IOT_UPLINK", "TransportModel",
-    "aggregate_modality", "batched_evaluate", "batched_local_learning",
-    "batched_shapley_values", "padded_population_batches",
-    "plan_permutations", "Client", "make_client", "encoder_bytes",
-    "encoder_eval", "encoder_forward", "encoder_num_params",
-    "encoder_predict", "encoder_sgd_step", "init_encoder", "fusion_eval",
-    "fusion_forward", "fusion_sgd_step", "init_fusion", "dequantize_encoder",
-    "quantize_encoder", "quantized_roundtrip", "MFedMCConfig", "RoundRecord",
-    "RunHistory", "build_federation", "run_federation", "run_mfedmc",
-    "RecencyTracker", "SelectionResult", "joint_select", "minmax_normalize",
-    "modality_priority", "select_clients", "select_top_gamma",
-    "exact_shapley", "exact_shapley_population", "sampled_shapley",
-    "subset_masks",
+    "aggregate_modality", "aggregate_quantized", "aggregate_stacked",
+    "aggregate_uploads", "stack_uploads", "batched_evaluate",
+    "batched_local_learning", "batched_shapley_values",
+    "padded_population_batches", "plan_permutations", "Client",
+    "make_client", "encoder_bytes", "encoder_eval", "encoder_forward",
+    "encoder_num_params", "encoder_predict", "encoder_sgd_step",
+    "init_encoder", "fusion_eval", "fusion_forward", "fusion_sgd_step",
+    "init_fusion", "dequantize_encoder", "dequantize_pytree",
+    "fake_quantize_pytree", "pytree_wire_bytes", "quantize_encoder",
+    "quantize_population", "quantize_population_with_error_feedback",
+    "quantize_pytree", "quantize_with_error_feedback",
+    "quantized_roundtrip", "tensor_wire_bytes", "zero_residual",
+    "MFedMCConfig", "RoundRecord", "RunHistory", "build_federation",
+    "run_federation", "run_mfedmc", "RecencyTracker", "SelectionResult",
+    "joint_select", "minmax_normalize", "modality_priority",
+    "select_clients", "select_top_gamma", "exact_shapley",
+    "exact_shapley_population", "sampled_shapley", "subset_masks",
 ]

@@ -5,31 +5,69 @@ Aggregation is sample-weighted FedAvg over the encoders actually received:
 
     θ_m ← Σ_k (|D_m^k| / Σ_j |D_m^j|) θ_m^k        (Eq. 21)
 
-``aggregate_modality`` is a plain pytree convex combination; the sparse
-cross-pod formulation used on the production mesh lives in
-``repro.core.distributed``.
+The reduction is device-resident: uploads stack on a leading K axis and one
+jit'd ``einsum``-weighted contraction produces the aggregate — no per-key
+Python loop, no per-leaf host round-trips. ``aggregate_quantized`` consumes
+§4.10 quantized payloads (codes + per-client per-tensor scale/zero from
+``repro.core.quantize``) directly, fusing dequantization into the same
+program. The sparse cross-pod formulation used on the production mesh lives
+in ``repro.core.distributed``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.encoders import encoder_param_arrays
+from repro.core.quantize import dequantize_tensor
+
+
+def stack_uploads(encoders: Sequence[Dict]) -> Dict:
+    """Stack upload pytrees on a leading K axis (the population layout)."""
+    return jax.tree.map(lambda *leaves: jnp.stack(leaves), *encoders)
+
+
+@jax.jit
+def aggregate_stacked(stacked, weights: jnp.ndarray):
+    """Eq. 21 as one jit'd weighted contraction over stacked ``[K, ...]``
+    uploads: every leaf reduces with ``einsum('k,k...->...')`` under
+    sum-normalized weights, preserving the leaf dtype."""
+    w = weights.astype(jnp.float32)
+    w = w / jnp.maximum(jnp.sum(w), 1e-12)
+    return jax.tree.map(
+        lambda x: jnp.einsum("k,k...->...", w,
+                             x.astype(jnp.float32)).astype(x.dtype),
+        stacked)
+
+
+@jax.jit
+def aggregate_quantized(codes, scales, zeros, weights: jnp.ndarray):
+    """Eq. 21 directly over a quantized population payload
+    (``repro.core.quantize.quantize_population`` output: codes ``[K, ...]``,
+    per-client per-tensor scales/zeros ``[K]``): dequantization and the
+    weighted reduction fuse into one program, so the server never
+    materializes K dequantized encoder copies."""
+    w = weights.astype(jnp.float32)
+    w = w / jnp.maximum(jnp.sum(w), 1e-12)
+
+    def leaf(c, s, z):
+        deq = jax.vmap(dequantize_tensor)(c, s, z)
+        return jnp.einsum("k,k...->...", w, deq)
+
+    return jax.tree.map(leaf, codes, scales, zeros)
 
 
 def aggregate_modality(encoders: Sequence[Dict],
                        sample_counts: Sequence[int]) -> Dict:
     """Weighted average of encoder pytrees (weights ∝ sample counts)."""
     assert encoders, "aggregate_modality needs at least one upload"
-    w = np.asarray(sample_counts, np.float64)
-    w = w / w.sum()
     arrays = [encoder_param_arrays(e) for e in encoders]
-    return {k: jnp.asarray(sum(wi * a[k] for wi, a in zip(w, arrays)))
-            for k in arrays[0]}
+    return aggregate_stacked(stack_uploads(arrays),
+                             jnp.asarray(sample_counts, jnp.float32))
 
 
 # ---------------------------------------------------------------------------
@@ -56,14 +94,25 @@ ICI_LINK = TransportModel(bandwidth_bps=50e9 * 8, protocol_overhead=1.0,
 
 @dataclass
 class CommLedger:
-    """Cumulative upload accounting for one federation run."""
+    """Cumulative upload accounting for one federation run.
+
+    Byte counts are exact-to-the-wire: callers record what actually ships
+    (``repro.core.quantize.tensor_wire_bytes`` semantics — bit-packed code
+    buffers in their smallest sufficient dtype plus per-tensor scale/zero
+    metadata), and the optional ``modality`` tag keeps a per-modality
+    compressed-uplink breakdown."""
     uploaded_bytes: float = 0.0
     uploads: int = 0
     rounds: int = 0
+    by_modality: Dict[str, float] = field(default_factory=dict)
 
-    def record(self, n_bytes: float, n_uploads: int = 1) -> None:
+    def record(self, n_bytes: float, n_uploads: int = 1,
+               modality: Optional[str] = None) -> None:
         self.uploaded_bytes += n_bytes
         self.uploads += n_uploads
+        if modality is not None:
+            self.by_modality[modality] = \
+                self.by_modality.get(modality, 0.0) + n_bytes
 
     @property
     def megabytes(self) -> float:

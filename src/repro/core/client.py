@@ -37,6 +37,11 @@ class Client:
     recency: RecencyTracker
     losses: Dict[str, float] = field(default_factory=dict)
     fusion_input: str = "onehot"          # onehot | probs
+    # §4.10 error-feedback residuals: modality -> client-held accumulator of
+    # the quantization error its low-bit uplinks could not carry (strictly
+    # local, like the fusion module; populated only when error feedback is
+    # enabled in the round config)
+    residuals: Dict[str, Dict] = field(default_factory=dict)
 
     # ------------------------------------------------------------------
     @property

@@ -32,6 +32,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.encoders import (encoder_forward, encoder_loss,
                                  masked_encoder_loss)
+from repro.core.quantize import code_dtype, fake_quantize_pytree
 
 
 def _client_axes(mesh) -> Tuple[str, ...]:
@@ -43,7 +44,8 @@ def make_federated_round(mesh, *, local_steps: int, lr: float = 0.1,
                          loss_fn: Callable = encoder_loss,
                          masked_loss_fn: Optional[Callable] = None,
                          hierarchical: bool = False,
-                         uplink_dtype=None):
+                         uplink_dtype=None,
+                         quantize_bits: Optional[int] = None):
     """Build the jit-able one-round function for one modality's encoders.
 
     Signature of the returned fn:
@@ -53,6 +55,17 @@ def make_federated_round(mesh, *, local_steps: int, lr: float = 0.1,
          select,                    # [K] float 0/1 — joint selection mask
          weight)                    # [K] float — |D_m^k| sample counts
         -> (new_stacked_params, aggregated_params, per_client_loss [K])
+
+    ``quantize_bits`` (1–16) is §4.10's quantized uplink composed into the
+    mesh round: each client's payload is affine-quantized *per client, per
+    tensor* on device (vmapped fake-quant over the local shard) before
+    Eq. 21's masked weighted all-reduce, so the server aggregate is built
+    from exactly what a ``bits``-bit wire would deliver. Local training
+    itself runs at full precision — quantization touches only the payload
+    entering the reduction (deployment then broadcasts the aggregate into
+    every slot, exactly as at full precision). ``uplink_dtype`` (e.g.
+    bfloat16) remains the cheaper reduced-precision-collective variant
+    applied to the summed numerator.
 
     Ragged federations use the padded population layout shared with the
     Tier-2 simulator (``repro.core.batched.padded_population_batches``):
@@ -71,6 +84,10 @@ def make_federated_round(mesh, *, local_steps: int, lr: float = 0.1,
     has_pod = "pod" in mesh.shape
     if masked_loss_fn is None and loss_fn is encoder_loss:
         masked_loss_fn = masked_encoder_loss
+    if quantize_bits is not None and quantize_bits < 32:
+        code_dtype(quantize_bits)       # validate early: 1..16 only
+    else:
+        quantize_bits = None            # >= 32 -> full-precision uplink
 
     @functools.partial(
         shard_map, mesh=mesh,
@@ -111,6 +128,18 @@ def make_federated_round(mesh, *, local_steps: int, lr: float = 0.1,
         else:
             per_client_loss = jnp.mean(losses, axis=-1)
 
+        # ---- §4.10 uplink: per-client on-device quantized payload ----
+        if quantize_bits is not None:
+            # vmapped fake-quant over the local K/shard axis: per-client
+            # per-tensor affine codes — the server reduction below consumes
+            # exactly what a quantize_bits-bit wire would deliver; local
+            # training above ran at full precision, only this payload copy
+            # is quantized
+            upload = jax.vmap(
+                lambda t: fake_quantize_pytree(t, quantize_bits))(new_params)
+        else:
+            upload = new_params
+
         # ---- Eq. 21 as a masked sparse all-reduce over client axes ----
         w = (select * weight)[:, None]                      # [K/shard, 1]
         axes = caxes if not (hierarchical and has_pod) else ("pod",)
@@ -119,8 +148,8 @@ def make_federated_round(mesh, *, local_steps: int, lr: float = 0.1,
             num = jnp.sum(w.reshape(w.shape[:1] + (1,) * (x.ndim - 1)) * x,
                           axis=0, keepdims=False)
             if uplink_dtype is not None:
-                # §4.10 composition: quantize the uplink payload (the paper's
-                # 4/8-bit upload becomes a reduced-precision all-reduce)
+                # reduced-precision collective: the numerator itself ships
+                # in uplink_dtype (cheaper than per-client codes, coarser)
                 num = num.astype(uplink_dtype)
             for a in axes:
                 num = jax.lax.psum(num, a)
@@ -130,7 +159,7 @@ def make_federated_round(mesh, *, local_steps: int, lr: float = 0.1,
         for a in axes:
             denom = jax.lax.psum(denom, a)
         agg = jax.tree.map(lambda x: allreduce(x) / jnp.maximum(denom, 1e-8),
-                           new_params)
+                           upload)
 
         # ---- deployment: selected aggregate broadcast into every slot ----
         deployed = jax.tree.map(
@@ -148,7 +177,8 @@ def make_multimodal_federated_round(mesh, *, local_steps: int,
                                     loss_fn: Callable = encoder_loss,
                                     masked_loss_fn: Optional[Callable] = None,
                                     hierarchical: bool = False,
-                                    uplink_dtype=None):
+                                    uplink_dtype=None,
+                                    quantize_bits: Optional[int] = None):
     """The batched multi-modality round: every modality's encoder population
     trains and aggregates inside ONE jit'd mesh program.
 
@@ -168,13 +198,16 @@ def make_multimodal_federated_round(mesh, *, local_steps: int,
     program with M independent masked reductions and can overlap their
     collectives. A modality whose mask is all-zero skips the broadcast and
     keeps each client's locally-trained params (denominator guard in the
-    single-modality round).
+    single-modality round). ``quantize_bits`` applies §4.10's per-client
+    uplink quantization to every modality's payload (see
+    :func:`make_federated_round`).
     """
     single = make_federated_round(mesh, local_steps=local_steps, lr=lr,
                                   loss_fn=loss_fn,
                                   masked_loss_fn=masked_loss_fn,
                                   hierarchical=hierarchical,
-                                  uplink_dtype=uplink_dtype)
+                                  uplink_dtype=uplink_dtype,
+                                  quantize_bits=quantize_bits)
 
     def round_fn(params: Dict, batches: Dict, select: Dict, weight: Dict):
         deployed: Dict = {}

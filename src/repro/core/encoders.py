@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.quantize import pytree_wire_bytes
+
 LSTM_HIDDEN = 128
 CNN_CHANNELS = 32
 
@@ -120,9 +122,14 @@ def encoder_param_arrays(params) -> Dict:
 
 
 def encoder_bytes(params, bits: int = 32) -> int:
-    """Upload size in bytes at the given quantization precision (Eq. 10)."""
-    n = sum(int(np.prod(v.shape)) for v in encoder_param_arrays(params).values())
-    return -((n * bits) // -8)          # ceil division
+    """Exact upload size in bytes at the given precision (Eq. 10).
+
+    Delegates to ``repro.core.quantize.tensor_wire_bytes``: full precision
+    ships the raw parameter dtype; quantized uplinks ship bit-packed codes
+    in their smallest sufficient dtype *plus* the per-tensor scale/zero
+    metadata — so 16-bit codes cost 2 bytes/param (not an int32's 4) and
+    the ledger no longer undercounts the metadata."""
+    return pytree_wire_bytes(encoder_param_arrays(params), bits)
 
 
 def encoder_num_params(params) -> int:

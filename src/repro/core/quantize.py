@@ -1,49 +1,281 @@
-"""Uplink quantization (§4.10): uniform affine per-tensor quantization of
-encoder parameters to 4 or 8 bits, applied on upload and dequantized at the
-server before aggregation. Composes with modality/client selection — the
-ledger then counts ``bits/8`` bytes per parameter.
+"""Uplink quantization (§4.10) as a device-resident communication subsystem.
+
+Every §4.10 upload is uniform *asymmetric min-max affine* per-tensor
+quantization: codes in [0, 2^bits − 1] plus one (scale, zero) float32 pair
+per tensor. The same code path serves all three execution tiers:
+
+- :func:`quantize_pytree` / :func:`dequantize_pytree` are pure traceable
+  pytree transforms — jit them, ``vmap`` them over the stacked ``[K, ...]``
+  population layout of ``repro.core.batched``, or call them per client.
+  Scale/zero stay on device (0-d arrays): quantizing a whole population is
+  one XLA program with no per-leaf host syncs.
+- :func:`quantize_population` / :func:`quantized_roundtrip_population` are
+  the jit'd vmapped forms used by ``run_federation``'s upload path and the
+  benchmarks.
+- :func:`quantize_with_error_feedback` adds client-held residual
+  accumulators (EF14/EF21-style): the client quantizes ``params + residual``
+  and keeps the quantization error for the next round, so low-bit uplinks
+  average out their rounding error across rounds instead of accumulating it.
+- Wire accounting is *exact*: codes ship in the smallest sufficient
+  unsigned dtype (uint8 for ≤8 bits, uint16 for ≤16), sub-byte codes
+  count as bit-packed (:func:`pack_codes` / :func:`unpack_codes` realize
+  that format — 8//bits codes per byte — and pin its size in tests; the
+  in-process simulator skips the physical pack since both endpoints share
+  memory), and every tensor's (scale, zero) metadata is counted.
+  :func:`tensor_wire_bytes` / :func:`pytree_wire_bytes` are the single
+  source of truth the comm ledger
+  (``repro.core.encoders.encoder_bytes``) delegates to.
+
+``bits >= 32`` means "no quantization" and only the passthrough entry
+points (:func:`quantized_roundtrip`, the accounting helpers) accept it;
+the quantizers themselves require ``1 <= bits <= 16`` — float32 rounding is
+exact there, whereas 17–31-bit codes would overflow the float32 mantissa.
 """
 from __future__ import annotations
 
+import functools
 from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.encoders import encoder_param_arrays
+SCALE_BYTES = 4     # per-tensor float32 scale shipped with the codes
+ZERO_BYTES = 4      # per-tensor float32 zero-point (range minimum)
+TENSOR_METADATA_BYTES = SCALE_BYTES + ZERO_BYTES
 
 
-def quantize_tensor(x: jnp.ndarray, bits: int) -> Tuple[jnp.ndarray, float, float]:
-    """Symmetric-range affine quantization. Returns (codes, scale, zero)."""
-    levels = 2 ** bits - 1
-    lo = jnp.min(x)
-    hi = jnp.max(x)
+def _check_bits(bits: int) -> None:
+    if not 1 <= int(bits) <= 16:
+        raise ValueError(
+            f"quantization requires 1 <= bits <= 16 (got {bits}); "
+            "bits >= 32 means full precision — use quantized_roundtrip "
+            "or the accounting helpers, which pass it through")
+
+
+def code_dtype(bits: int):
+    """Smallest unsigned dtype that holds 2^bits − 1 codes on the wire."""
+    _check_bits(bits)
+    return jnp.uint8 if bits <= 8 else jnp.uint16
+
+
+# ---------------------------------------------------------------------------
+# per-tensor transform (traceable; scale/zero are 0-d device arrays)
+# ---------------------------------------------------------------------------
+
+def quantize_tensor(x: jnp.ndarray, bits: int
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Asymmetric min-max affine quantization. Returns (codes, scale, zero):
+    ``x ≈ codes · scale + zero`` with codes in [0, 2^bits − 1] and
+    ``zero = min(x)``. Scale/zero are 0-d float32 device arrays — no host
+    sync — so the transform jits and vmaps over stacked populations."""
+    levels = 2 ** int(bits) - 1
+    xf = jnp.asarray(x).astype(jnp.float32)
+    lo = jnp.min(xf)
+    hi = jnp.max(xf)
     scale = jnp.maximum((hi - lo) / levels, 1e-12)
-    codes = jnp.clip(jnp.round((x - lo) / scale), 0, levels)
-    return codes.astype(jnp.uint8 if bits <= 8 else jnp.int32), \
-        float(scale), float(lo)
+    codes = jnp.clip(jnp.round((xf - lo) / scale), 0, levels)
+    return codes.astype(code_dtype(bits)), scale, lo
 
 
-def dequantize_tensor(codes: jnp.ndarray, scale: float, zero: float):
-    return codes.astype(jnp.float32) * scale + zero
+def dequantize_tensor(codes: jnp.ndarray, scale, zero,
+                      dtype=None) -> jnp.ndarray:
+    """Inverse transform; restores ``dtype`` (default float32) so quantized
+    aggregation composes with non-f32 encoders."""
+    out = codes.astype(jnp.float32) * scale + zero
+    return out if dtype is None else out.astype(dtype)
 
+
+# ---------------------------------------------------------------------------
+# sub-byte packing (what actually ships for bits < 8)
+# ---------------------------------------------------------------------------
+
+def pack_codes(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Pack ``bits``-bit codes into a flat uint8/uint16 wire buffer.
+
+    For bits ∈ {1, 2, 4} (divisors of 8), 8//bits codes share each byte —
+    the buffer's ``nbytes`` is exactly ``ceil(n·bits/8)``. 8- and ≤16-bit
+    codes already occupy their smallest dtype and pass through flattened."""
+    _check_bits(bits)
+    dt = code_dtype(bits)
+    flat = codes.reshape(-1).astype(dt)
+    per = 8 // bits if 8 % bits == 0 else 1
+    if per <= 1:
+        return flat
+    pad = (-flat.shape[0]) % per
+    flat = jnp.concatenate([flat, jnp.zeros((pad,), dt)])
+    lanes = flat.reshape(-1, per).astype(jnp.uint32)
+    shifts = jnp.arange(per, dtype=jnp.uint32) * bits
+    return jnp.sum(lanes << shifts[None, :], axis=1).astype(jnp.uint8)
+
+
+def unpack_codes(packed: jnp.ndarray, bits: int, n: int,
+                 shape: Tuple[int, ...]) -> jnp.ndarray:
+    """Inverse of :func:`pack_codes`: recover ``n`` codes shaped ``shape``."""
+    _check_bits(bits)
+    per = 8 // bits if 8 % bits == 0 else 1
+    if per <= 1:
+        return packed.reshape(shape)
+    shifts = jnp.arange(per, dtype=jnp.uint32) * bits
+    mask = jnp.uint32(2 ** bits - 1)
+    lanes = (packed.astype(jnp.uint32)[:, None] >> shifts[None, :]) & mask
+    return lanes.reshape(-1)[:n].astype(code_dtype(bits)).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# exact wire accounting (the ledger's single source of truth)
+# ---------------------------------------------------------------------------
+
+def tensor_wire_bytes(shape, bits: int, dtype=np.float32) -> int:
+    """Exact uplink bytes for one tensor at the given precision.
+
+    - ``bits >= 32``: raw parameters, ``n × itemsize`` — no metadata.
+    - otherwise: the bit-packed code buffer (``ceil(n·bits/8)`` when bits
+      divides 8, else ``n × itemsize(code_dtype)``) **plus** the per-tensor
+      float32 (scale, zero) pair. 16-bit codes therefore cost 2 bytes per
+      parameter — not the 4 an int32 container would ship."""
+    n = int(np.prod(shape, dtype=np.int64)) if len(tuple(shape)) else 1
+    if bits >= 32:
+        return n * np.dtype(dtype).itemsize
+    _check_bits(bits)
+    if 8 % bits == 0:
+        code = -((n * bits) // -8)                      # packed, ceil
+    else:
+        code = n * np.dtype(code_dtype(bits)).itemsize  # unpacked container
+    return code + TENSOR_METADATA_BYTES
+
+
+def pytree_wire_bytes(params, bits: int) -> int:
+    """Exact uplink bytes for a whole parameter pytree (Eq. 10's cost)."""
+    return sum(tensor_wire_bytes(np.shape(leaf), bits,
+                                 getattr(leaf, "dtype", np.float32))
+               for leaf in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# pytree transforms (vmap-able over the stacked [K, ...] population)
+# ---------------------------------------------------------------------------
+
+def quantize_pytree(params, bits: int):
+    """Quantize every leaf. Returns ``(codes, scales, zeros)`` — three
+    pytrees with the input's structure; scales/zeros hold 0-d device
+    scalars. Pure and traceable: ``jax.vmap`` over a stacked ``[K, ...]``
+    tree yields per-client per-tensor ranges with ``[K]``-shaped scales."""
+    _check_bits(bits)
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    cs, ss, zs = [], [], []
+    for leaf in flat:
+        c, s, z = quantize_tensor(leaf, bits)
+        cs.append(c)
+        ss.append(s)
+        zs.append(z)
+    return (jax.tree_util.tree_unflatten(treedef, cs),
+            jax.tree_util.tree_unflatten(treedef, ss),
+            jax.tree_util.tree_unflatten(treedef, zs))
+
+
+def dequantize_pytree(codes, scales, zeros, like=None):
+    """Inverse of :func:`quantize_pytree`; ``like`` (a pytree of arrays or
+    dtypes) restores each leaf's original dtype."""
+    if like is None:
+        return jax.tree.map(dequantize_tensor, codes, scales, zeros)
+    return jax.tree.map(
+        lambda c, s, z, ref: dequantize_tensor(
+            c, s, z, getattr(ref, "dtype", ref)),
+        codes, scales, zeros, like)
+
+
+def fake_quantize_pytree(params, bits: int):
+    """Quantize → dequantize in one traceable transform: what the server
+    sees after a ``bits``-bit uplink, with the original dtypes restored.
+    This is the §4.10 composition the mesh round applies to each client's
+    payload before Eq. 21's masked all-reduce."""
+    return dequantize_pytree(*quantize_pytree(params, bits), like=params)
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def quantize_population(stacked, *, bits: int):
+    """Vmapped :func:`quantize_pytree` over a stacked ``[K, ...]`` pytree:
+    one jit'd program quantizes every client's upload with per-client
+    per-tensor ranges (scales/zeros shaped ``[K]``)."""
+    return jax.vmap(lambda t: quantize_pytree(t, bits))(stacked)
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def quantized_roundtrip_population(stacked, *, bits: int):
+    """Vmapped fake-quant of a stacked population — the device-resident
+    replacement for K host-side ``quantized_roundtrip`` calls."""
+    return jax.vmap(lambda t: fake_quantize_pytree(t, bits))(stacked)
+
+
+# ---------------------------------------------------------------------------
+# error feedback (client-held residual accumulators)
+# ---------------------------------------------------------------------------
+
+def _ef_step(params, residual, bits: int):
+    compensated = jax.tree.map(
+        lambda a, b: a.astype(jnp.float32) + b, params, residual)
+    codes, scales, zeros = quantize_pytree(compensated, bits)
+    sent = dequantize_pytree(codes, scales, zeros)
+    new_r = jax.tree.map(lambda a, b: a - b, compensated, sent)
+    return codes, scales, zeros, new_r
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def quantize_with_error_feedback(params, residual, *, bits: int):
+    """Quantize ``params + residual`` for ONE client and return
+    ``(codes, scales, zeros, new_residual)``.
+
+    The residual is the quantization error the uplink could not carry this
+    round; adding it back before the next quantization makes the *average*
+    transmitted encoder unbiased, so low-bit (e.g. 4-bit) federations
+    converge where plain quantization stalls."""
+    return _ef_step(params, residual, bits)
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def quantize_population_with_error_feedback(stacked, residuals, *,
+                                            bits: int):
+    """Vmapped :func:`quantize_with_error_feedback` over stacked ``[K, ...]``
+    params and residuals: per-client per-tensor ranges, one jit'd program."""
+    return jax.vmap(lambda p, r: _ef_step(p, r, bits))(stacked, residuals)
+
+
+def zero_residual(params):
+    """A zeroed float32 residual accumulator shaped like ``params``."""
+    return jax.tree.map(lambda x: jnp.zeros(jnp.shape(x), jnp.float32),
+                        params)
+
+
+# ---------------------------------------------------------------------------
+# dict-payload API (kept for Tier-1 / external callers)
+# ---------------------------------------------------------------------------
 
 def quantize_encoder(params: Dict, bits: int) -> Dict:
-    """Quantize every numeric leaf."""
-    out: Dict = {"bits": bits}
-    for k, v in encoder_param_arrays(params).items():
+    """Quantize every leaf of one encoder into a wire-payload dict:
+    ``{name: {codes, scale, zero, dtype}, "bits": bits}``. Guarded: full
+    precision (bits >= 32) is not a quantization — callers wanting the
+    passthrough use :func:`quantized_roundtrip`."""
+    _check_bits(bits)
+    out: Dict = {"bits": int(bits)}
+    for k, v in params.items():
         codes, scale, zero = quantize_tensor(v, bits)
-        out[k] = {"codes": codes, "scale": scale, "zero": zero}
+        out[k] = {"codes": codes, "scale": scale, "zero": zero,
+                  "dtype": jnp.asarray(v).dtype}
     return out
 
 
 def dequantize_encoder(q: Dict) -> Dict:
-    return {k: dequantize_tensor(v["codes"], v["scale"], v["zero"])
+    """Decode a :func:`quantize_encoder` payload, restoring each leaf's
+    original dtype when the payload carries one."""
+    return {k: dequantize_tensor(v["codes"], v["scale"], v["zero"],
+                                 v.get("dtype"))
             for k, v in q.items() if k != "bits"}
 
 
 def quantized_roundtrip(params: Dict, bits: int) -> Dict:
-    """What the server receives after a ``bits``-bit uplink."""
+    """What the server receives after a ``bits``-bit uplink (identity at
+    full precision)."""
     if bits >= 32:
         return params
     return dequantize_encoder(quantize_encoder(params, bits))

@@ -10,8 +10,11 @@
      ablation), 'fixed:<name>' (heterogeneous-network tiers).
   3. Client selection (§3.3): server keeps ⌈δK⌉ clients by
      'low_loss' (paper) | 'high_loss' | 'random' | 'all' | 'loss_recency'.
-  4. Server aggregation (Eq. 21) per modality; ledger records uplink bytes
-     (optionally 4/8-bit quantized, §4.10).
+  4. Server aggregation (Eq. 21) per modality as a stacked, device-resident
+     reduction; the §4.10 uplink (1–16 bit, optionally with error-feedback
+     residuals) quantizes the whole upload population in one vmapped
+     program, and the ledger records exact wire bytes (packed codes +
+     per-tensor scale/zero metadata).
   5. Local deploying: global encoders installed, Stage-#2 fusion fine-tune.
 
 Returns a :class:`RunHistory` with per-round accuracy, cumulative MB, and
@@ -23,12 +26,17 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import encoders as enc
-from repro.core.aggregation import CommLedger, aggregate_modality
+from repro.core.aggregation import (CommLedger, aggregate_quantized,
+                                    aggregate_stacked, stack_uploads)
 from repro.core.client import Client, make_client
-from repro.core.quantize import quantized_roundtrip
+from repro.core.quantize import (quantize_population,
+                                 quantize_population_with_error_feedback,
+                                 zero_residual)
 from repro.core.selection import (RecencyTracker, joint_select,
                                   modality_priority, select_clients,
                                   select_top_gamma)
@@ -54,7 +62,8 @@ class MFedMCConfig:
     loss_weight: float = 1.0               # loss_recency blend (§4.8)
     background_size: int = 50              # |D'| for Shapley
     eval_size: int = 32
-    quantize_bits: int = 32                # 32 = no quantization
+    quantize_bits: int = 32                # 32 = no quantization (§4.10)
+    error_feedback: bool = False           # client-held EF residuals
     availability: float = 1.0              # client availability rate (§4.9)
     # per-client uplink restriction: client id -> allowed modality names
     allowed_modalities: Optional[Dict[int, Set[str]]] = None
@@ -101,6 +110,54 @@ class RunHistory:
         return self.records[-1].accuracy if self.records else float("nan")
 
 
+def aggregate_uploads(clients: Sequence[Client], modality: str,
+                      sample_counts: Sequence[int], bits: int, *,
+                      error_feedback: bool = False) -> Dict:
+    """One modality's §4.10 uplink + Eq. 21 aggregation, device-resident.
+
+    The selected clients' encoders stack on a leading K axis; at reduced
+    precision one jit'd program quantizes the population (per-client
+    per-tensor ranges) and fuses dequantization into the weighted
+    reduction — the server never materializes K dequantized copies and no
+    per-leaf scale/zero ever syncs to the host. With ``error_feedback``
+    each client's residual accumulator is folded into its payload and the
+    new residual written back (strictly client-held state)."""
+    stacked = stack_uploads([c.encoders[modality] for c in clients])
+    w = jnp.asarray(np.asarray(sample_counts, np.float32))
+    # pad the upload axis to the next power of two with zero-weight slots:
+    # the jit'd programs below then see O(log K) distinct shapes across a
+    # whole run instead of recompiling for every distinct upload count
+    # (zero weights contribute exactly 0 to the normalized reduction)
+    kpad = 1 << max(len(clients) - 1, 0).bit_length()
+    pad = kpad - len(clients)
+
+    def _pad_axis0(tree):
+        return jax.tree.map(
+            lambda v: jnp.concatenate(
+                [v, jnp.zeros((pad,) + v.shape[1:], v.dtype)]), tree)
+
+    if pad:
+        stacked = _pad_axis0(stacked)
+        w = jnp.concatenate([w, jnp.zeros((pad,), w.dtype)])
+    if bits >= 32:
+        return aggregate_stacked(stacked, w)
+    if error_feedback:
+        res = stack_uploads([
+            c.residuals[modality] if modality in c.residuals
+            else zero_residual(c.encoders[modality]) for c in clients])
+        if pad:
+            res = _pad_axis0(res)
+        codes, scales, zeros, new_res = \
+            quantize_population_with_error_feedback(stacked, res, bits=bits)
+        for j, c in enumerate(clients):    # padded slots are discarded
+            c.residuals[modality] = jax.tree.map(lambda v: v[j], new_res)
+    else:
+        codes, scales, zeros = quantize_population(stacked, bits=bits)
+    agg = aggregate_quantized(codes, scales, zeros, w)
+    ref = clients[0].encoders[modality]
+    return jax.tree.map(lambda a, r: a.astype(r.dtype), agg, ref)
+
+
 def _weighted_accuracy(clients: Sequence[Client]) -> Tuple[float, float]:
     tot, acc_sum, loss_sum = 0, 0.0, 0.0
     for c in clients:
@@ -131,7 +188,8 @@ def build_federation(dataset: str, scenario: str = "natural", *,
 def run_federation(clients: List[Client], spec: DatasetSpec,
                    cfg: MFedMCConfig, *, verbose: bool = False,
                    server_encoders: Optional[Dict[str, Dict]] = None,
-                   backend: str = "loop") -> RunHistory:
+                   backend: str = "loop",
+                   quantize_bits: Optional[int] = None) -> RunHistory:
     """Run T rounds of Algorithm 1.
 
     ``backend`` selects how the per-client hot phases execute:
@@ -143,9 +201,20 @@ def run_federation(clients: List[Client], spec: DatasetSpec,
         over the same stacked layout. Both backends consume the round RNG
         identically, so selection, aggregation and the comm ledger match the
         loop to float tolerance.
+
+    The §4.10 uplink (``quantize_bits`` — overrides ``cfg.quantize_bits``
+    when given) runs device-resident for both backends: per modality, the
+    selected uploads stack on a K axis, quantize vmapped, and aggregate
+    through one fused dequantize-and-reduce program
+    (:func:`aggregate_uploads`); the ledger records exact wire bytes
+    (bit-packed codes + per-tensor scale/zero metadata).
     """
     if backend not in ("loop", "batched"):
         raise ValueError(f"unknown backend {backend!r}")
+    qbits = cfg.quantize_bits if quantize_bits is None else quantize_bits
+    if qbits < 32 and not 1 <= qbits <= 16:
+        raise ValueError(f"quantize_bits={qbits} unsupported: use 1..16 "
+                         "(quantized) or >= 32 (full precision)")
     rng = np.random.default_rng(cfg.seed)
     ledger = CommLedger()
     history = RunHistory()
@@ -212,7 +281,9 @@ def run_federation(clients: List[Client], spec: DatasetSpec,
                 phi_named = dict(zip(c.modality_names, phi))
                 for m, p in phi_named.items():
                     round_shapley.setdefault(m, []).append(abs(float(p)))
-                sizes = c.encoder_sizes()
+                # Eq. 10's cost criterion ranks what the uplink actually
+                # ships: exact compressed wire bytes at the round's precision
+                sizes = c.encoder_sizes(qbits)
                 idx = [list(c.modality_names).index(m) for m in names]
                 rec = c.recency.recency_vector(names, t)
                 prio = modality_priority(
@@ -245,23 +316,22 @@ def run_federation(clients: List[Client], spec: DatasetSpec,
                 losses, cfg.delta, criterion=crit, recency=client_rec,
                 loss_weight=cfg.loss_weight, rng=rng)
 
-        # -- upload + server aggregation (Eq. 21) ------------------------
+        # -- upload + server aggregation (Eq. 21, §4.10 uplink) ----------
         by_id = {c.client_id: c for c in clients}
         uploads: List[Tuple[int, str]] = []
-        per_modality: Dict[str, List[Tuple[Dict, int]]] = {}
+        per_modality: Dict[str, List[Client]] = {}
         for cid in selected:
             c = by_id[cid]
             for m in choices[cid]:
-                payload = quantized_roundtrip(c.encoders[m], cfg.quantize_bits)
-                per_modality.setdefault(m, []).append(
-                    (payload, c.train.num_samples))
-                ledger.record(enc.encoder_bytes(c.encoders[m],
-                                                cfg.quantize_bits))
+                per_modality.setdefault(m, []).append(c)
+                ledger.record(enc.encoder_bytes(c.encoders[m], qbits),
+                              modality=m)
                 uploads.append((cid, m))
             c.recency.mark_uploaded(choices[cid], t)
-        for m, items in per_modality.items():
-            server_encoders[m] = aggregate_modality(
-                [p for p, _ in items], [n for _, n in items])
+        for m, ups in per_modality.items():
+            server_encoders[m] = aggregate_uploads(
+                ups, m, [c.train.num_samples for c in ups], qbits,
+                error_feedback=cfg.error_feedback)
 
         # -- local deploying + Stage #2 ----------------------------------
         for c in avail:

@@ -3,7 +3,7 @@ jit'd mesh program.
 
     PYTHONPATH=src python -m repro.launch.fed_train --dataset ucihar \
         --rounds 3 [--devices 8] [--gamma 1] [--scenario natural] \
-        [--hierarchical]
+        [--hierarchical] [--quantize-bits 8]
 
 The K-client population is stacked and sharded over the mesh 'data' axis,
 *per modality*: every modality's encoder population trains E·steps of
@@ -62,9 +62,15 @@ def main(argv=None):
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host devices (0 = use what exists)")
     ap.add_argument("--hierarchical", action="store_true")
+    ap.add_argument("--quantize-bits", type=int, default=32,
+                    help="§4.10 uplink precision: 1..16 quantize every "
+                         "client payload on device before Eq. 21's masked "
+                         "all-reduce; 32 = full precision")
     args = ap.parse_args(argv)
     if args.gamma < 1:
         ap.error("--gamma must be >= 1")
+    if args.quantize_bits < 32 and not 1 <= args.quantize_bits <= 16:
+        ap.error("--quantize-bits must be 1..16 or 32")
 
     if args.devices:
         os.environ["XLA_FLAGS"] = (
@@ -115,7 +121,8 @@ def main(argv=None):
             break
     mesh = jax.make_mesh((data_ax, n_dev // data_ax), ("data", "model"))
     print(f"{K} clients x {M} modalities on mesh {dict(mesh.shape)} "
-          f"(scenario={args.scenario})")
+          f"(scenario={args.scenario}, uplink="
+          f"{'f32' if args.quantize_bits >= 32 else f'{args.quantize_bits}b'})")
 
     # ---- stack the federation: the shared padded population layout -----
     # per-(client, modality) presence — Eq. 20/21's [K, M] mask layout
@@ -125,7 +132,10 @@ def main(argv=None):
     for i, m in enumerate(modalities):
         feat = spec.modality(m).feature_shape(True)
         enc = init_encoder(jax.random.key(i), feat, spec.num_classes)
-        sizes[m] = encoder_bytes(enc)
+        # exact compressed-uplink size: what a --quantize-bits wire ships
+        # (bit-packed codes + per-tensor scale/zero metadata); this is also
+        # Eq. 10's communication-cost criterion for the joint selection
+        sizes[m] = encoder_bytes(enc, args.quantize_bits)
         params[m] = jax.tree.map(lambda x: jnp.stack([x] * K), enc)
         b = padded_population_batches(
             [c.modalities.get(m) for c in clients],
@@ -137,7 +147,8 @@ def main(argv=None):
 
     round_fn = jax.jit(make_multimodal_federated_round(
         mesh, local_steps=args.steps, lr=0.1,
-        hierarchical=args.hierarchical))
+        hierarchical=args.hierarchical,
+        quantize_bits=args.quantize_bits))
     size_vec = np.array([sizes[m] for m in modalities], np.float64)
     ledger = CommLedger()
     with mesh:
@@ -157,7 +168,7 @@ def main(argv=None):
                 mask = np.asarray(select[m])
                 n_up = int(mask.sum())
                 per_mod_bytes[m] = n_up * sizes[m]
-                ledger.record(per_mod_bytes[m], n_up)
+                ledger.record(per_mod_bytes[m], n_up, modality=m)
                 last_upload[mask > 0, i] = t
             ledger.rounds = t
 

@@ -84,7 +84,14 @@ class TestQuantize:
         assert quantized_roundtrip(e, 32) is e
 
     def test_encoder_bytes_scaling(self):
+        # exact wire accounting: packed codes + 8B scale/zero per tensor
         (e,) = _encs(1)
-        assert encoder_bytes(e, 8) * 4 == encoder_bytes(e, 32)
-        # 4-bit may round up to a whole byte
-        assert abs(encoder_bytes(e, 4) * 8 - encoder_bytes(e, 32)) <= 8
+        n = sum(int(np.prod(v.shape)) for v in e.values())
+        meta = 8 * len(e)
+        assert encoder_bytes(e, 32) == 4 * n            # raw f32, no meta
+        assert encoder_bytes(e, 16) == 2 * n + meta     # uint16, not int32
+        assert encoder_bytes(e, 8) == n + meta
+        # 4-bit packs two codes per byte (per-tensor ceil)
+        assert encoder_bytes(e, 4) == \
+            sum(-((int(np.prod(v.shape)) * 4) // -8) for v in e.values()) \
+            + meta
