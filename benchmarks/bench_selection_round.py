@@ -1,0 +1,165 @@
+"""Selection-layer benchmark: loop vs batched (pre-engine path) vs the
+device-resident engine backend, with measured host-syncs per round.
+
+    PYTHONPATH=src python -m benchmarks.bench_selection_round \
+        [--ks 8,32,128] [--out BENCH_selection_round.json]
+
+One full ``run_federation`` round per path under the paper's strategy
+(priority modality selection + low-loss client selection), so the measured
+gap covers everything the engine refactor touches: the joint-selection
+decision layer (per-client numpy loops vs two [K, M] device programs) and
+the population residency (per-phase restack/unstack of Client pytrees vs
+gather/scatter on the resident FederationState buckets).
+
+Paths:
+- ``loop``    — ``backend="loop"``, ``selection_impl="host"``: the tier-1
+  per-client reference.
+- ``batched`` — ``backend="batched"``, ``selection_impl="host"``: the
+  pre-engine Tier-2 path (vmapped training, host-side per-client selection,
+  population restacked every phase).
+- ``engine``  — ``backend="engine"``, ``selection_impl="engine"``: resident
+  stacked population + device selection engine.
+
+Host-syncs are counted at the device→host boundary by
+``repro.core.hostsync`` (per-batch loss scalars, per-bucket loss arrays,
+prediction/Shapley/eval fetches, the engine's decision fetches) — the
+number the README backend table reports. Writes
+``BENCH_selection_round.json``; supports the ``benchmarks.run`` Row
+contract.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import List, Tuple
+
+from benchmarks.bench_batched_round import synthetic_federation
+from benchmarks.common import Row, Timer
+from repro.core import hostsync
+from repro.core.rounds import MFedMCConfig, run_federation
+
+PATHS = {
+    "loop": dict(backend="loop", selection_impl="host"),
+    "batched": dict(backend="batched", selection_impl="host"),
+    "engine": dict(backend="engine", selection_impl="engine"),
+}
+
+
+ROUNDS_TIMED = 2
+
+
+def _cfg(selection_impl: str) -> MFedMCConfig:
+    return MFedMCConfig(rounds=ROUNDS_TIMED, local_epochs=2, batch_size=16,
+                        seed=0, modality_strategy="priority",
+                        client_strategy="low_loss", gamma=1,
+                        background_size=24, eval_size=24,
+                        selection_impl=selection_impl)
+
+
+def _one_run(K: int, path: str, n: int) -> Tuple[float, int]:
+    spec_of = PATHS[path]
+    clients, spec = synthetic_federation(K, n=n)
+    hostsync.reset()
+    with Timer() as t:
+        run_federation(clients, spec, _cfg(spec_of["selection_impl"]),
+                       backend=spec_of["backend"])
+    return t.us / 1e6 / ROUNDS_TIMED, hostsync.count() // ROUNDS_TIMED
+
+
+def time_paths(K: int, *, n: int = 48, repeats: int = 1) -> dict:
+    """Steady-state wall seconds per round (min over ``repeats``) and
+    host-syncs per round, for every path.
+
+    The warm run uses the SAME K (the compiled programs are K-shaped), and
+    the measured repeats INTERLEAVE the paths so box-level noise (shared
+    CPU, throttling windows) hits every path alike instead of biasing
+    whichever ran during the slow window."""
+    for path in PATHS:
+        _one_run(K, path, n)                       # warm/compile
+    out = {p: {"seconds": float("inf"), "host_syncs": 0} for p in PATHS}
+    for _ in range(max(repeats, 1)):
+        for path in PATHS:
+            sec, syncs = _one_run(K, path, n)
+            out[path]["seconds"] = min(out[path]["seconds"], sec)
+            out[path]["host_syncs"] = syncs
+    return out
+
+
+def run(fast: bool = True) -> List[Row]:
+    ks = [8] if fast else [8, 32]
+    rows = []
+    for K in ks:
+        res = time_paths(K)
+        for p, r in res.items():
+            rows.append(Row(
+                f"selection_round/K{K}/{p}", r["seconds"] * 1e6,
+                f"host_syncs={r['host_syncs']}"))
+        rows.append(Row(
+            f"selection_round/K{K}/engine_vs_batched",
+            res["engine"]["seconds"] * 1e6,
+            f"speedup={res['batched']['seconds'] / res['engine']['seconds']:.2f}x"))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ks", default="8,32,128",
+                    help="comma-separated client counts")
+    ap.add_argument("--samples", type=int, default=48)
+    ap.add_argument("--repeats", type=int, default=2,
+                    help="measured repetitions per path (min is reported)")
+    ap.add_argument("--out", default="BENCH_selection_round.json")
+    args = ap.parse_args(argv)
+    ks = [int(k) for k in args.ks.split(",")]
+
+    results = []
+    for K in ks:
+        t0 = time.time()
+        res = time_paths(K, n=args.samples, repeats=args.repeats)
+        entry = {"K": K}
+        for p, r in res.items():
+            entry[f"{p}_s"] = round(r["seconds"], 4)
+            entry[f"{p}_host_syncs"] = r["host_syncs"]
+        entry["engine_vs_loop"] = round(
+            res["loop"]["seconds"] / res["engine"]["seconds"], 3)
+        entry["engine_vs_batched"] = round(
+            res["batched"]["seconds"] / res["engine"]["seconds"], 3)
+        results.append(entry)
+        print(f"K={K:4d} "
+              f"loop={res['loop']['seconds']:7.2f}s"
+              f"/{res['loop']['host_syncs']:5d}sync "
+              f"batched={res['batched']['seconds']:7.2f}s"
+              f"/{res['batched']['host_syncs']:4d}sync "
+              f"engine={res['engine']['seconds']:7.2f}s"
+              f"/{res['engine']['host_syncs']:4d}sync "
+              f"engine-vs-batched={entry['engine_vs_batched']:5.2f}x "
+              f"(total {time.time() - t0:.0f}s)", flush=True)
+
+    payload = {
+        "benchmark": "selection_round",
+        "config": {
+            "dataset_shapes": "ucihar (reduced)",
+            "modalities": 2,
+            "samples_per_client": args.samples,
+            "local_epochs": 2,
+            "batch_size": 16,
+            "rounds_timed": ROUNDS_TIMED,
+            "seconds_are": "per round, min over interleaved repeats",
+            "repeats": args.repeats,
+            "modality_strategy": "priority",
+            "client_strategy": "low_loss",
+            "host_syncs": "measured device->host transfers per round "
+                          "(repro.core.hostsync)",
+        },
+        "results": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -16,6 +16,11 @@ def main():
     ap.add_argument("--rounds", type=int, default=5)
     ap.add_argument("--dataset", default="actionsense")
     ap.add_argument("--scenario", default="natural")
+    ap.add_argument("--backend", default="loop",
+                    choices=["loop", "batched", "engine"],
+                    help="loop: per-client reference; batched: vmapped "
+                         "local learning; engine: device-resident "
+                         "population + selection engine")
     args = ap.parse_args()
 
     cfg = MFedMCConfig(
@@ -27,7 +32,7 @@ def main():
         seed=0,
     )
     history = run_mfedmc(args.dataset, args.scenario, cfg, verbose=True,
-                         samples_per_client=48)
+                         backend=args.backend, samples_per_client=48)
 
     print("\nround  accuracy  cumulative-MB")
     for r in history.records:

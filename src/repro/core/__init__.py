@@ -6,6 +6,12 @@ Layers:
     fusion.py      — strictly-local fusion module (ω^k)
     shapley.py     — exact interventional Shapley modality impact (Eq. 8)
     selection.py   — priority + top-γ modality / top-δ client selection
+                     (per-client numpy reference)
+    selection_engine.py — the same Eqs. 9–20 as device [K, M] programs,
+                     bit-identical to the reference on outcomes
+    federation_state.py — arrayized population state (resident stacked
+                     encoders/fusion, Eq. 11 recency matrix, wire sizes)
+                     + the ClientStore/StateStore param-store protocol
     aggregation.py — per-modality weighted FedAvg (Eq. 21) as a stacked
                      device-resident reduction (+ fused quantized form),
                      comm ledger with exact wire accounting
@@ -31,6 +37,8 @@ from repro.core.batched import (batched_evaluate, batched_local_learning,
                                 batched_shapley_values,
                                 padded_population_batches, plan_permutations)
 from repro.core.client import Client, make_client
+from repro.core.federation_state import (ClientStore, FederationState,
+                                         StateStore)
 from repro.core.encoders import (encoder_bytes, encoder_eval,
                                  encoder_forward, encoder_num_params,
                                  encoder_predict, encoder_sgd_step,
@@ -52,6 +60,11 @@ from repro.core.selection import (RecencyTracker, SelectionResult,
                                   joint_select, minmax_normalize,
                                   modality_priority, select_clients,
                                   select_top_gamma)
+from repro.core.selection_engine import (EngineDecision, ModalityDecision,
+                                         joint_select_arrays,
+                                         lexicographic_rank,
+                                         select_clients_arrays,
+                                         select_modalities_arrays)
 from repro.core.shapley import (exact_shapley, exact_shapley_population,
                                 sampled_shapley, subset_masks)
 
@@ -74,4 +87,7 @@ __all__ = [
     "joint_select", "minmax_normalize", "modality_priority",
     "select_clients", "select_top_gamma", "exact_shapley",
     "exact_shapley_population", "sampled_shapley", "subset_masks",
+    "ClientStore", "FederationState", "StateStore", "EngineDecision",
+    "ModalityDecision", "joint_select_arrays", "lexicographic_rank",
+    "select_clients_arrays", "select_modalities_arrays",
 ]

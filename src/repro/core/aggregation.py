@@ -31,6 +31,33 @@ def stack_uploads(encoders: Sequence[Dict]) -> Dict:
     return jax.tree.map(lambda *leaves: jnp.stack(leaves), *encoders)
 
 
+def pad_uploads_pow2(stacked, weights: jnp.ndarray, n: int):
+    """Pad a stacked upload population (and its weight vector) to the next
+    power of two with zero-weight slots.
+
+    The jit'd aggregation/quantization programs then see O(log K) distinct
+    shapes across a whole run instead of recompiling for every distinct
+    upload count; zero weights contribute exactly 0 to the normalized
+    reduction. Returns ``(stacked, weights, pad)`` where ``pad`` is the
+    number of dummy slots appended (0 = unchanged) — callers that carry
+    extra per-upload state (e.g. error-feedback residuals) pad it the same
+    way with :func:`pad_axis0`."""
+    kpad = 1 << max(n - 1, 0).bit_length()
+    pad = kpad - n
+    if pad:
+        stacked = pad_axis0(stacked, pad)
+        weights = jnp.concatenate(
+            [weights, jnp.zeros((pad,), weights.dtype)])
+    return stacked, weights, pad
+
+
+def pad_axis0(tree, pad: int):
+    """Append ``pad`` zero rows along axis 0 of every leaf."""
+    return jax.tree.map(
+        lambda v: jnp.concatenate(
+            [v, jnp.zeros((pad,) + v.shape[1:], v.dtype)]), tree)
+
+
 @jax.jit
 def aggregate_stacked(stacked, weights: jnp.ndarray):
     """Eq. 21 as one jit'd weighted contraction over stacked ``[K, ...]``

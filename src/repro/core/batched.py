@@ -36,6 +36,16 @@ consume the shared generator identically — every downstream phase (selection
 strategies, availability) sees bit-identical randomness, and round-1
 aggregates match the loop backend to float tolerance (the parity tests pin
 ragged federations, not just homogeneous ones, at 1e-5).
+
+Parameter storage is pluggable: every phase reads/writes encoder and fusion
+pytrees through a *param store* (``repro.core.federation_state``). The
+default :class:`~repro.core.federation_state.ClientStore` stacks from and
+unstacks to ``Client`` objects each call — Tier 2's historical behavior.
+``run_federation(backend="engine")`` passes a
+:class:`~repro.core.federation_state.StateStore` instead, so the same
+training code gathers/scatters rows of the resident
+:class:`~repro.core.federation_state.FederationState` buckets and the round
+never restacks the population.
 """
 from __future__ import annotations
 
@@ -48,10 +58,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import encoders as enc
+from repro.core import hostsync
 from repro.core.client import Client
 from repro.core.encoders import masked_encoder_loss
 from repro.core.fusion import masked_fusion_eval, masked_fusion_loss
 from repro.core.shapley import exact_shapley_population
+
+
+def _default_store():
+    from repro.core.federation_state import ClientStore
+    return ClientStore()
 
 
 # ---------------------------------------------------------------------------
@@ -221,16 +237,13 @@ def _fusion_buckets(clients: Sequence[Client],
     return [groups[k] for k in sorted(groups)]
 
 
-def _stack_trees(trees):
-    return jax.tree.map(lambda *leaves: jnp.stack(leaves), *trees)
-
-
 # ---------------------------------------------------------------------------
 # population encoder training
 # ---------------------------------------------------------------------------
 
 def train_population_encoders(plans: Sequence[ClientPlan], *, epochs: int,
-                              lr: float, batch_size: int) -> None:
+                              lr: float, batch_size: int,
+                              store=None) -> None:
     """Local Learning's encoder phase for the whole (client, modality)
     population, bucketed by coarse shape family.
 
@@ -238,6 +251,7 @@ def train_population_encoders(plans: Sequence[ClientPlan], *, epochs: int,
     each a padded [S, B] schedule whose real slots are the loop's ⌊n/B⌋ full
     batches plus trailing partial batch, with per-epoch shuffles from the
     plan; caches the final-epoch mean loss ℓ_m^k per (client, modality)."""
+    store = store or _default_store()
     for p in plans:
         p.client.losses = {}
     buckets: Dict[Tuple, List[Tuple[ClientPlan, str]]] = {}
@@ -253,14 +267,14 @@ def train_population_encoders(plans: Sequence[ClientPlan], *, epochs: int,
         ns = [c.train.num_samples for c in clients]
         n_max = max(ns)
         steps = max(num_steps(n, batch_size) for n in ns)
-        stacked = _stack_trees([c.encoders[m]
-                                for c, m in zip(clients, mods)])
+        stacked = store.gather_encoders(list(zip(clients, mods)))
         x = np.stack([c.padded_modality(c.train, m, n_max)
                       for c, m in zip(clients, mods)])
         y = np.stack([c.padded_labels(c.train, n_max) for c in clients])
         gather = np.arange(kg)[:, None]
         last = np.zeros((kg, steps), np.float64)     # epochs == 0 -> loss 0.0
         valid = np.zeros((kg, steps), bool)
+        le = None
         for e in range(epochs):
             idx, w = padded_perm_indices(
                 [p.encoder_perms[m][e] for p, m in pairs], ns, steps,
@@ -272,9 +286,12 @@ def train_population_encoders(plans: Sequence[ClientPlan], *, epochs: int,
             stacked, le = masked_batched_epoch(stacked, jnp.asarray(xe),
                                                jnp.asarray(ye),
                                                jnp.asarray(ws), lr)
-            last = np.asarray(le, np.float64)
+        if le is not None:
+            # ℓ_m^k is the FINAL epoch's losses: one fetch after the loop,
+            # not one blocking sync per epoch
+            last = hostsync.fetch(le).astype(np.float64)
+        store.scatter_encoders(list(zip(clients, mods)), stacked)
         for j, ((p, m), c) in enumerate(zip(pairs, clients)):
-            c.encoders[m] = jax.tree.map(lambda v: v[j], stacked)
             c.losses[m] = float(last[j, valid[j]].mean()) if epochs else 0.0
 
 
@@ -292,7 +309,8 @@ def _batched_predict_probs(stacked_params, xs):
     return jax.vmap(enc.encoder_predict_probs)(stacked_params, xs)
 
 
-def _population_predictions(clients: Sequence[Client], datas) -> np.ndarray:
+def _population_predictions(clients: Sequence[Client], datas,
+                            store=None) -> np.ndarray:
     """Stacked ``Client.predictions``: [K, n_pad, M, C] with zero columns at
     absent (client, modality) pairs, padded over the sample axis.
 
@@ -300,6 +318,7 @@ def _population_predictions(clients: Sequence[Client], datas) -> np.ndarray:
     missing modalities cost nothing — they are zeros by construction, exactly
     the loop's convention (padded rows carry garbage predictions and are
     excluded downstream by sample masks)."""
+    store = store or _default_store()
     c0 = clients[0]
     M, C = len(c0.all_modalities), c0.spec.num_classes
     n_pad = max(d.num_samples for d in datas)
@@ -314,10 +333,10 @@ def _population_predictions(clients: Sequence[Client], datas) -> np.ndarray:
           else _batched_predict)
     for key in sorted(buckets, key=repr):
         entries = buckets[key]
-        stacked = _stack_trees([c.encoders[m] for _, _, c, _, m in entries])
+        stacked = store.gather_encoders([(c, m) for _, _, c, _, m in entries])
         xs = jnp.asarray(np.stack([c.padded_modality(d, m, n_pad)
                                    for _, _, c, d, m in entries]))
-        pr = np.asarray(fn(stacked, xs))             # [Kg, n_pad, C]
+        pr = hostsync.fetch(fn(stacked, xs))         # [Kg, n_pad, C]
         for j, (k, mi, *_rest) in enumerate(entries):
             out[k, :, mi] = pr[j]
     return out
@@ -325,19 +344,22 @@ def _population_predictions(clients: Sequence[Client], datas) -> np.ndarray:
 
 def train_population_fusion(clients: Sequence[Client],
                             perms: Sequence[Sequence[np.ndarray]], *,
-                            epochs: int, lr: float, batch_size: int) -> None:
+                            epochs: int, lr: float, batch_size: int,
+                            store=None) -> None:
     """Stage-#1/#2 fusion training for one fusion bucket, batched.
 
     Mirrors ``Client.train_fusion``: predictions computed once with frozen
     encoders, then E epochs of planned-shuffle minibatch SGD over the padded
     schedule, each client gated by its own [M] presence mask."""
-    preds = _population_predictions(clients, [c.train for c in clients])
+    store = store or _default_store()
+    preds = _population_predictions(clients, [c.train for c in clients],
+                                    store)
     n_pad = preds.shape[1]
     y = np.stack([c.padded_labels(c.train, n_pad) for c in clients])
     presence = jnp.asarray(np.stack([c.avail_mask() for c in clients]))
     ns = [c.train.num_samples for c in clients]
     steps = max(num_steps(n, batch_size) for n in ns)
-    stacked = _stack_trees([c.fusion for c in clients])
+    stacked = store.gather_fusion(clients)
     kg = len(clients)
     gather = np.arange(kg)[:, None]
     for e in range(epochs):
@@ -349,8 +371,7 @@ def train_population_fusion(clients: Sequence[Client],
         ws = w.reshape(kg, steps, batch_size)
         stacked, _ = masked_fusion_epoch(stacked, jnp.asarray(pe), presence,
                                          jnp.asarray(ye), jnp.asarray(ws), lr)
-    for k, c in enumerate(clients):
-        c.fusion = jax.tree.map(lambda v: v[k], stacked)
+    store.scatter_fusion(clients, stacked)
 
 
 # ---------------------------------------------------------------------------
@@ -358,37 +379,40 @@ def train_population_fusion(clients: Sequence[Client],
 # ---------------------------------------------------------------------------
 
 def batched_local_learning(clients: Sequence[Client], cfg,
-                           rng: np.random.Generator) -> None:
+                           rng: np.random.Generator, store=None) -> None:
     """Algorithm 1's Local Learning phase, batched end-to-end.
 
     1. plan all shuffles (loop-order RNG parity);
     2. encoder populations train per coarse shape family — ragged clients
        included, no per-client fallback;
     3. Stage-#1 fusion trains per fusion bucket with presence masks."""
+    store = store or _default_store()
     plans = plan_permutations(clients, cfg.local_epochs, rng)
     train_population_encoders(plans, epochs=cfg.local_epochs,
-                              lr=cfg.lr_encoder, batch_size=cfg.batch_size)
+                              lr=cfg.lr_encoder, batch_size=cfg.batch_size,
+                              store=store)
     for idxs in _fusion_buckets(clients, cfg.batch_size):
         train_population_fusion([clients[i] for i in idxs],
                                 [plans[i].fusion_perms for i in idxs],
                                 epochs=cfg.local_epochs, lr=cfg.lr_fusion,
-                                batch_size=cfg.batch_size)
+                                batch_size=cfg.batch_size, store=store)
 
 
 def batched_fusion_stage(clients: Sequence[Client], cfg,
-                         rng: np.random.Generator) -> None:
+                         rng: np.random.Generator, store=None) -> None:
     """Stage-#2 fusion fine-tune (Local Deploying), batched.
 
     Draws the per-client epoch shuffles in client order first — the same
     order the loop backend consumes ``rng`` — then trains fusion buckets
     stacked with presence masks."""
+    store = store or _default_store()
     perms = [[rng.permutation(c.train.num_samples)
               for _ in range(cfg.local_epochs)] for c in clients]
     for idxs in _fusion_buckets(clients, cfg.batch_size):
         train_population_fusion([clients[i] for i in idxs],
                                 [perms[i] for i in idxs],
                                 epochs=cfg.local_epochs, lr=cfg.lr_fusion,
-                                batch_size=cfg.batch_size)
+                                batch_size=cfg.batch_size, store=store)
 
 
 # ---------------------------------------------------------------------------
@@ -396,8 +420,8 @@ def batched_fusion_stage(clients: Sequence[Client], cfg,
 # ---------------------------------------------------------------------------
 
 def batched_shapley_values(clients: Sequence[Client], background_size: int,
-                           eval_size: int, rng: np.random.Generator
-                           ) -> Dict[int, np.ndarray]:
+                           eval_size: int, rng: np.random.Generator,
+                           store=None) -> Dict[int, np.ndarray]:
     """Exact interventional Shapley for a whole population: one vmapped 2^M
     enumeration per fusion bucket instead of one per client per round.
 
@@ -405,6 +429,7 @@ def batched_shapley_values(clients: Sequence[Client], background_size: int,
     — exactly the draws ``Client.shapley_values`` makes in the loop backend,
     so both backends leave the generator in the same state. Returns
     {client_id: φ over that client's modality_names}."""
+    store = store or _default_store()
     draws = []
     for c in clients:
         n = c.train.num_samples
@@ -417,7 +442,7 @@ def batched_shapley_values(clients: Sequence[Client], background_size: int,
         cs = [clients[i] for i in idxs]
         kg = len(cs)
         M = len(cs[0].all_modalities)
-        preds = _population_predictions(cs, [c.train for c in cs])
+        preds = _population_predictions(cs, [c.train for c in cs], store)
         n_pad = preds.shape[1]
         g_max = max(len(draws[i][0]) for i in idxs)
         b_max = max(len(draws[i][1]) for i in idxs)
@@ -434,8 +459,8 @@ def batched_shapley_values(clients: Sequence[Client], background_size: int,
         gather = np.arange(kg)[:, None]
         y = np.stack([c.padded_labels(c.train, n_pad) for c in cs])
         avail = np.stack([c.avail_mask() for c in cs])
-        phi = np.asarray(exact_shapley_population(
-            _stack_trees([c.fusion for c in cs]),
+        phi = hostsync.fetch(exact_shapley_population(
+            store.gather_fusion(cs),
             jnp.asarray(preds[gather, ev_idx]),
             jnp.asarray(preds[gather, bg_idx]),
             jnp.asarray(avail), jnp.asarray(y[gather, ev_idx]),
@@ -452,24 +477,26 @@ def _batched_fusion_eval(params, preds, mask, y, w):
     return jax.vmap(masked_fusion_eval)(params, preds, mask, y, w)
 
 
-def batched_evaluate(clients: Sequence[Client]) -> Tuple[float, float]:
+def batched_evaluate(clients: Sequence[Client],
+                     store=None) -> Tuple[float, float]:
     """Sample-weighted (accuracy, loss) over every client's test split — the
     batched replacement for the per-client ``Client.evaluate`` loop, padded
     over test-set sizes and gated by presence masks."""
+    store = store or _default_store()
     tot, acc_sum, loss_sum = 0.0, 0.0, 0.0
     for idxs in _fusion_buckets(clients):
         cs = [clients[i] for i in idxs]
         datas = [c.test for c in cs]
-        preds = _population_predictions(cs, datas)
+        preds = _population_predictions(cs, datas, store)
         n_pad = preds.shape[1]
         y = np.stack([c.padded_labels(d, n_pad) for c, d in zip(cs, datas)])
         w = np.stack([c.sample_mask(d, n_pad) for c, d in zip(cs, datas)])
         presence = np.stack([c.avail_mask() for c in cs])
         loss, acc = _batched_fusion_eval(
-            _stack_trees([c.fusion for c in cs]), jnp.asarray(preds),
+            store.gather_fusion(cs), jnp.asarray(preds),
             jnp.asarray(presence), jnp.asarray(y), jnp.asarray(w))
         ns = np.array([d.num_samples for d in datas], np.float64)
         tot += float(ns.sum())
-        acc_sum += float(np.asarray(acc, np.float64) @ ns)
-        loss_sum += float(np.asarray(loss, np.float64) @ ns)
+        acc_sum += float(hostsync.fetch(acc).astype(np.float64) @ ns)
+        loss_sum += float(hostsync.fetch(loss).astype(np.float64) @ ns)
     return acc_sum / max(tot, 1.0), loss_sum / max(tot, 1.0)

@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.core import encoders as enc
 from repro.core import fusion as fus
+from repro.core import hostsync
 from repro.core.selection import RecencyTracker
 from repro.core.shapley import exact_shapley
 from repro.data.registry import DatasetSpec
@@ -123,7 +124,7 @@ class Client:
                 for xb, yb in self._batches(self.train, m, batch_size, rng,
                                             perm=perm):
                     params, loss = enc.encoder_sgd_step(params, xb, yb, lr=lr)
-                    losses.append(float(loss))
+                    losses.append(hostsync.fetch_scalar(loss))
                 last = float(np.mean(losses)) if losses else 0.0
             self.encoders[m] = params
             out[m] = last
@@ -168,7 +169,7 @@ class Client:
                 sel = jnp.asarray(idx[i:i + batch_size])
                 self.fusion, loss = fus.fusion_sgd_step(
                     self.fusion, preds[sel], mask, y[sel], lr=lr)
-                losses.append(float(loss))
+                losses.append(hostsync.fetch_scalar(loss))
             last = float(np.mean(losses)) if losses else 0.0
         return last
 
@@ -189,7 +190,7 @@ class Client:
             self.fusion, preds[ev_idx], preds[bg_idx],
             jnp.asarray(self.avail_mask()), y[ev_idx],
             num_modalities=len(self.all_modalities))
-        full = np.asarray(phi)
+        full = hostsync.fetch(phi)
         # report only over available modalities, in name order
         return np.array([full[self.all_modalities.index(m)]
                          for m in self.modality_names])
@@ -204,7 +205,8 @@ class Client:
         preds, y = self.predictions(self.test)
         loss, acc = fus.fusion_eval(self.fusion, preds,
                                     jnp.asarray(self.avail_mask()), y)
-        return float(loss), float(acc), int(y.shape[0])
+        return (hostsync.fetch_scalar(loss), hostsync.fetch_scalar(acc),
+                int(y.shape[0]))
 
     def evaluate_encoder(self, modality: str) -> Tuple[float, float]:
         x = jnp.asarray(self.test.modalities[modality])

@@ -26,6 +26,7 @@ from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
@@ -238,6 +239,17 @@ def selection_masks(choices: Mapping[int, Sequence[str]],
                for k in range(num_clients)]
         masks[m] = jnp.asarray(row, jnp.float32)
     return masks
+
+
+def selection_masks_from_matrix(upload_mask,
+                                modality_names: Sequence[str]
+                                ) -> Dict[str, jnp.ndarray]:
+    """[K, M] joint-selection matrix (Eq. 20 — e.g.
+    ``selection_engine.EngineDecision.upload_mask``) -> the per-modality
+    ``{m: [K]}`` dict the multimodal mesh round consumes. Column order must
+    match ``modality_names``."""
+    m_arr = jnp.asarray(np.asarray(upload_mask, np.float32))
+    return {m: m_arr[:, i] for i, m in enumerate(modality_names)}
 
 
 def multimodal_input_specs(num_clients: int, steps: int, batch: int,

@@ -1,0 +1,250 @@
+"""Arrayized federation state — the population's round-persistent tensors.
+
+Pre-refactor, the batched backend restacked and unstacked ``Client`` pytrees
+every phase of every round: encoder stacks for training, fresh stacks for
+predictions, fusion stacks for Stage-#1/#2, upload stacks for Eq. 21 — each
+a flurry of per-client device ops and host dict churn. ``FederationState``
+keeps the population **resident**:
+
+- encoders live in per-shape-family stacked pytrees (one ``[G, ...]`` array
+  per leaf per bucket); training/prediction/aggregation *gather* rows and
+  training/deployment *scatter* them back — device-side index ops, never a
+  per-client restack;
+- fusion modules live in per-fusion-bucket stacks the same way;
+- recency is the ``[K, M]`` last-upload matrix (Eq. 11) updated functionally
+  each round (mirrored into the per-client ``RecencyTracker``s so
+  checkpointing keeps working);
+- per-modality losses, exact wire sizes at the run's uplink precision, the
+  presence mask, and the lexicographic name-rank vector are ``[K, M]`` /
+  ``[M]`` arrays feeding ``repro.core.selection_engine`` directly.
+
+The **param-store** protocol (:class:`ClientStore` / :class:`StateStore`)
+lets ``repro.core.batched`` run one training codepath against either layout:
+``ClientStore`` reads/writes ``Client`` objects (Tier 2's historical
+behavior, kept as the benchmark baseline), ``StateStore`` gathers/scatters
+the resident buckets (``backend="engine"``). ``Client`` objects go stale
+during an engine run; :meth:`FederationState.write_back` restores them once
+at the end (encoders, fusion, recency already mirrored).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import encoders as enc
+from repro.core.aggregation import stack_uploads
+from repro.core.client import Client
+from repro.core.selection_engine import lexicographic_rank
+
+
+class ClientStore:
+    """Param store over ``Client`` objects — Tier 2's stacking behavior."""
+
+    def gather_encoders(self, pairs: Sequence[Tuple[Client, str]]):
+        return stack_uploads([c.encoders[m] for c, m in pairs])
+
+    def scatter_encoders(self, pairs: Sequence[Tuple[Client, str]],
+                         stacked) -> None:
+        for j, (c, m) in enumerate(pairs):
+            c.encoders[m] = jax.tree.map(lambda v: v[j], stacked)
+
+    def gather_fusion(self, clients: Sequence[Client]):
+        return stack_uploads([c.fusion for c in clients])
+
+    def scatter_fusion(self, clients: Sequence[Client], stacked) -> None:
+        for j, c in enumerate(clients):
+            c.fusion = jax.tree.map(lambda v: v[j], stacked)
+
+
+@dataclass
+class _EncoderBucket:
+    """One shape family's resident stack: every (client, modality) pair with
+    this (feature shape, class count) occupies one row of each leaf."""
+    key: Tuple
+    pairs: List[Tuple[int, str]]            # (row, modality name) per slot
+    params: Dict                            # pytree, leaves [G, ...]
+
+
+@dataclass
+class _FusionBucket:
+    key: Tuple
+    rows: List[int]
+    params: Dict                            # pytree, leaves [G, ...]
+
+
+class StateStore(ClientStore):
+    """Param store over a :class:`FederationState` — device gather/scatter
+    against the resident buckets instead of per-client restacks."""
+
+    def __init__(self, state: "FederationState"):
+        self.state = state
+
+    @staticmethod
+    def _is_identity(idx: np.ndarray, bucket_size: int) -> bool:
+        return len(idx) == bucket_size and \
+            np.array_equal(idx, np.arange(bucket_size, dtype=idx.dtype))
+
+    def _encoder_slots(self, pairs):
+        st = self.state
+        locs = [st.enc_slot[(st.row_of[c.client_id], m)] for c, m in pairs]
+        bids = {b for b, _ in locs}
+        assert len(bids) == 1, "pairs span shape-family buckets"
+        bucket = st.enc_buckets[bids.pop()]
+        return bucket, np.array([i for _, i in locs], np.int32)
+
+    def gather_encoders(self, pairs):
+        bucket, idx = self._encoder_slots(pairs)
+        if self._is_identity(idx, len(bucket.pairs)):
+            return bucket.params        # whole bucket, in order: no copy
+        return jax.tree.map(lambda v: v[idx], bucket.params)
+
+    def scatter_encoders(self, pairs, stacked):
+        bucket, idx = self._encoder_slots(pairs)
+        if self._is_identity(idx, len(bucket.pairs)):
+            bucket.params = stacked
+            return
+        bucket.params = jax.tree.map(lambda v, s: v.at[idx].set(s),
+                                     bucket.params, stacked)
+
+    def _fusion_slots(self, clients):
+        st = self.state
+        locs = [st.fusion_slot[st.row_of[c.client_id]] for c in clients]
+        bids = {b for b, _ in locs}
+        assert len(bids) == 1, "clients span fusion buckets"
+        bucket = st.fusion_buckets[bids.pop()]
+        return bucket, np.array([i for _, i in locs], np.int32)
+
+    def gather_fusion(self, clients):
+        bucket, idx = self._fusion_slots(clients)
+        if self._is_identity(idx, len(bucket.rows)):
+            return bucket.params
+        return jax.tree.map(lambda v: v[idx], bucket.params)
+
+    def scatter_fusion(self, clients, stacked):
+        bucket, idx = self._fusion_slots(clients)
+        if self._is_identity(idx, len(bucket.rows)):
+            bucket.params = stacked
+            return
+        bucket.params = jax.tree.map(lambda v, s: v.at[idx].set(s),
+                                     bucket.params, stacked)
+
+
+@dataclass
+class FederationState:
+    """The population's round-persistent arrays (see module docstring)."""
+    clients: List[Client]
+    modalities: Tuple[str, ...]             # global M axis, name-sorted
+    row_of: Dict[int, int]                  # client id -> row
+    mod_index: Dict[str, int]               # modality name -> column
+    name_rank: np.ndarray                   # [M] lexicographic ranks
+    presence: np.ndarray                    # [K, M] bool — owned modalities
+    sizes: np.ndarray                       # [K, M] f64 wire bytes @ qbits
+    last_upload: np.ndarray                 # [K, M] i64, Eq. 11 (-1 = never)
+    losses: np.ndarray                      # [K, M] f64 per-modality ℓ_m^k
+    enc_buckets: Dict[int, _EncoderBucket] = field(default_factory=dict)
+    enc_slot: Dict[Tuple[int, str], Tuple[int, int]] = field(
+        default_factory=dict)               # (row, m) -> (bucket, slot)
+    fusion_buckets: Dict[int, _FusionBucket] = field(default_factory=dict)
+    fusion_slot: Dict[int, Tuple[int, int]] = field(default_factory=dict)
+    store: StateStore = field(init=False)
+
+    def __post_init__(self):
+        self.store = StateStore(self)
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def build(cls, clients: Sequence[Client], spec, qbits: int,
+              stack: bool = True) -> "FederationState":
+        """``stack=False`` builds only the decision-layer arrays (recency,
+        sizes, presence, losses) — what the loop/batched backends need —
+        and skips making the parameters resident."""
+        modalities = tuple(sorted(spec.modality_names))
+        mod_index = {m: i for i, m in enumerate(modalities)}
+        K, M = len(clients), len(modalities)
+        presence = np.zeros((K, M), bool)
+        sizes = np.zeros((K, M), np.float64)
+        last_upload = np.full((K, M), -1, np.int64)
+        losses = np.full((K, M), np.inf, np.float64)
+        for k, c in enumerate(clients):
+            for m in c.modality_names:
+                mi = mod_index[m]
+                presence[k, mi] = True
+                # Eq. 10's cost criterion: exact compressed wire bytes at
+                # the run's uplink precision (shape-only -> constant per run)
+                sizes[k, mi] = enc.encoder_bytes(c.encoders[m], qbits)
+                last_upload[k, mi] = c.recency.last_upload.get(m, -1)
+        state = cls(list(clients), modalities, {c.client_id: k
+                    for k, c in enumerate(clients)}, mod_index,
+                    lexicographic_rank(modalities), presence, sizes,
+                    last_upload, losses)
+        if stack:
+            state._stack_population()
+        return state
+
+    def _stack_population(self) -> None:
+        from repro.core.batched import _fusion_key
+        enc_groups: Dict[Tuple, List[Tuple[int, str]]] = {}
+        for k, c in enumerate(self.clients):
+            for m in c.modality_names:
+                key = (tuple(np.asarray(c.train.modalities[m]).shape[1:]),
+                       c.spec.num_classes)
+                enc_groups.setdefault(key, []).append((k, m))
+        for b, key in enumerate(sorted(enc_groups, key=repr)):
+            pairs = enc_groups[key]
+            params = stack_uploads(
+                [self.clients[k].encoders[m] for k, m in pairs])
+            self.enc_buckets[b] = _EncoderBucket(key, pairs, params)
+            for i, (k, m) in enumerate(pairs):
+                self.enc_slot[(k, m)] = (b, i)
+        fus_groups: Dict[Tuple, List[int]] = {}
+        for k, c in enumerate(self.clients):
+            fus_groups.setdefault(_fusion_key(c), []).append(k)
+        for b, key in enumerate(sorted(fus_groups, key=repr)):
+            rows = fus_groups[key]
+            params = stack_uploads([self.clients[k].fusion for k in rows])
+            self.fusion_buckets[b] = _FusionBucket(key, rows, params)
+            for i, k in enumerate(rows):
+                self.fusion_slot[k] = (b, i)
+
+    # ------------------------------------------------------------------
+    def recency_matrix(self, t: int) -> np.ndarray:
+        """T_m^k = t − t_m^k − 1 (Eq. 11) for the whole population."""
+        return (t - self.last_upload - 1).astype(np.float64)
+
+    def mark_uploaded(self, upload_mask: np.ndarray, t: int) -> None:
+        """Functional Eq. 11 update from this round's [K, M] upload mask."""
+        self.last_upload = np.where(upload_mask, t, self.last_upload)
+
+    def client_staleness(self, t: int) -> np.ndarray:
+        """[K] rounds since each client's last upload of *any* modality —
+        the §4.8 loss_recency criterion's per-client staleness."""
+        last = np.where(self.presence, self.last_upload, -1).max(axis=1)
+        return (t - 1 - last).astype(np.float64)
+
+    def deploy_global(self, modality: str, rows: Sequence[int],
+                      agg: Dict) -> None:
+        """Local Deploying: broadcast one aggregated encoder into every
+        given row's resident slot (device scatter)."""
+        pairs = [(self.clients[k], modality) for k in rows]
+        if not pairs:
+            return
+        n = len(pairs)
+        stacked = jax.tree.map(
+            lambda g: jnp.broadcast_to(g, (n,) + g.shape), agg)
+        self.store.scatter_encoders(pairs, stacked)
+
+    def write_back(self) -> None:
+        """Unstack the resident population into the ``Client`` objects —
+        once per run, not once per round."""
+        for bucket in self.enc_buckets.values():
+            for i, (k, m) in enumerate(bucket.pairs):
+                self.clients[k].encoders[m] = jax.tree.map(
+                    lambda v: v[i], bucket.params)
+        for bucket in self.fusion_buckets.values():
+            for i, k in enumerate(bucket.rows):
+                self.clients[k].fusion = jax.tree.map(
+                    lambda v: v[i], bucket.params)

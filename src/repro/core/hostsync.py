@@ -1,0 +1,37 @@
+"""Host-sync accounting for the federation round's device→host boundary.
+
+Every place the round loop moves data off the accelerator — per-batch loss
+scalars in the loop backend, per-bucket loss arrays in the batched backend,
+the selection engine's decision fetch — funnels through :func:`fetch` /
+:func:`fetch_scalar`, so ``benchmarks/bench_selection_round.py`` can report
+*measured* host-syncs-per-round instead of an estimate. The counter is
+process-global and costs one integer increment when nobody is measuring.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_count = 0
+
+
+def fetch(x) -> np.ndarray:
+    """Device→host transfer of an array (counted)."""
+    global _count
+    _count += 1
+    return np.asarray(x)
+
+
+def fetch_scalar(x) -> float:
+    """Device→host transfer of a scalar (counted)."""
+    global _count
+    _count += 1
+    return float(x)
+
+
+def reset() -> None:
+    global _count
+    _count = 0
+
+
+def count() -> int:
+    return _count

@@ -17,12 +17,25 @@
      per-tensor scale/zero metadata).
   5. Local deploying: global encoders installed, Stage-#2 fusion fine-tune.
 
+Joint selection (steps 2–3) runs through ONE decision layer shared by every
+tier: the deterministic criteria execute on device over the ``[K, M]``
+population matrices (``repro.core.selection_engine`` — bit-identical
+outcomes to the numpy reference by construction), while the RNG-owning
+strategies ('random' modality/client draws) stay host-side in the round's
+generator order. ``cfg.selection_impl="host"`` keeps the pre-engine
+per-client numpy block as the reference/benchmark path.
+
+Round-persistent population arrays (recency matrix, wire sizes, losses,
+presence) live in a :class:`~repro.core.federation_state.FederationState`;
+``backend="engine"`` additionally keeps the *parameters* resident — stacked
+per shape family, gathered/scattered per phase — so a round never restacks
+or unstacks ``Client`` pytrees (see ``docs/ARCHITECTURE.md``).
+
 Returns a :class:`RunHistory` with per-round accuracy, cumulative MB, and
 mean Shapley per modality (Fig. 5's data).
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
@@ -30,16 +43,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import encoders as enc
 from repro.core.aggregation import (CommLedger, aggregate_quantized,
-                                    aggregate_stacked, stack_uploads)
+                                    aggregate_stacked, pad_axis0,
+                                    pad_uploads_pow2, stack_uploads)
 from repro.core.client import Client, make_client
+from repro.core.federation_state import ClientStore, FederationState
 from repro.core.quantize import (quantize_population,
                                  quantize_population_with_error_feedback,
                                  zero_residual)
-from repro.core.selection import (RecencyTracker, joint_select,
-                                  modality_priority, select_clients,
+from repro.core.selection import (modality_priority, select_clients,
                                   select_top_gamma)
+from repro.core.selection_engine import (select_clients_arrays,
+                                         select_modalities_arrays)
 from repro.data.registry import DatasetSpec, get_dataset_spec
 from repro.data.synthetic import ClientData
 
@@ -60,6 +75,8 @@ class MFedMCConfig:
     client_strategy: str = "low_loss"      # low_loss | high_loss | random |
                                            # all | loss_recency
     loss_weight: float = 1.0               # loss_recency blend (§4.8)
+    selection_impl: str = "engine"         # engine (device [K, M] programs)
+                                           # | host (per-client numpy ref)
     background_size: int = 50              # |D'| for Shapley
     eval_size: int = 32
     quantize_bits: int = 32                # 32 = no quantization (§4.10)
@@ -112,7 +129,7 @@ class RunHistory:
 
 def aggregate_uploads(clients: Sequence[Client], modality: str,
                       sample_counts: Sequence[int], bits: int, *,
-                      error_feedback: bool = False) -> Dict:
+                      error_feedback: bool = False, store=None) -> Dict:
     """One modality's §4.10 uplink + Eq. 21 aggregation, device-resident.
 
     The selected clients' encoders stack on a leading K axis; at reduced
@@ -121,24 +138,16 @@ def aggregate_uploads(clients: Sequence[Client], modality: str,
     reduction — the server never materializes K dequantized copies and no
     per-leaf scale/zero ever syncs to the host. With ``error_feedback``
     each client's residual accumulator is folded into its payload and the
-    new residual written back (strictly client-held state)."""
-    stacked = stack_uploads([c.encoders[modality] for c in clients])
+    new residual written back (strictly client-held state).
+
+    ``store`` selects where the upload population lives: the default
+    :class:`ClientStore` stacks from ``Client.encoders`` (loop/batched
+    backends); a :class:`~repro.core.federation_state.StateStore` gathers
+    rows of the resident stacked buckets instead (engine backend)."""
+    store = store or ClientStore()
+    stacked = store.gather_encoders([(c, modality) for c in clients])
     w = jnp.asarray(np.asarray(sample_counts, np.float32))
-    # pad the upload axis to the next power of two with zero-weight slots:
-    # the jit'd programs below then see O(log K) distinct shapes across a
-    # whole run instead of recompiling for every distinct upload count
-    # (zero weights contribute exactly 0 to the normalized reduction)
-    kpad = 1 << max(len(clients) - 1, 0).bit_length()
-    pad = kpad - len(clients)
-
-    def _pad_axis0(tree):
-        return jax.tree.map(
-            lambda v: jnp.concatenate(
-                [v, jnp.zeros((pad,) + v.shape[1:], v.dtype)]), tree)
-
-    if pad:
-        stacked = _pad_axis0(stacked)
-        w = jnp.concatenate([w, jnp.zeros((pad,), w.dtype)])
+    stacked, w, pad = pad_uploads_pow2(stacked, w, len(clients))
     if bits >= 32:
         return aggregate_stacked(stacked, w)
     if error_feedback:
@@ -146,7 +155,7 @@ def aggregate_uploads(clients: Sequence[Client], modality: str,
             c.residuals[modality] if modality in c.residuals
             else zero_residual(c.encoders[modality]) for c in clients])
         if pad:
-            res = _pad_axis0(res)
+            res = pad_axis0(res, pad)
         codes, scales, zeros, new_res = \
             quantize_population_with_error_feedback(stacked, res, bits=bits)
         for j, c in enumerate(clients):    # padded slots are discarded
@@ -185,6 +194,57 @@ def build_federation(dataset: str, scenario: str = "natural", *,
     return clients, spec
 
 
+def _engine_modality_choices(state: FederationState, cand_ids: List[int],
+                             names_by_cid: Dict[int, List[str]],
+                             phi_by_name: Dict[int, Dict[str, float]],
+                             t: int, cfg: MFedMCConfig
+                             ) -> Dict[int, List[str]]:
+    """Eqs. 12–16 for the whole candidate population in one device program
+    (``selection_engine``) — outcome-identical to the per-client numpy
+    block (``selection_impl="host"``)."""
+    n, M = len(cand_ids), len(state.modalities)
+    phi = np.zeros((n, M))
+    sizes = np.zeros((n, M))
+    recency = np.zeros((n, M))
+    presence = np.zeros((n, M), bool)
+    for i, cid in enumerate(cand_ids):
+        k = state.row_of[cid]
+        sizes[i] = state.sizes[k]
+        recency[i] = t - state.last_upload[k] - 1
+        for m in names_by_cid[cid]:
+            mi = state.mod_index[m]
+            presence[i, mi] = True
+            phi[i, mi] = phi_by_name[cid][m]
+    dec = select_modalities_arrays(
+        phi, sizes, recency, presence, state.name_rank, t=t, gamma=cfg.gamma,
+        alpha_s=cfg.alpha_s, alpha_c=cfg.alpha_c, alpha_r=cfg.alpha_r)
+    return {cid: dec.choices(i, state.modalities)
+            for i, cid in enumerate(cand_ids)}
+
+
+def _engine_client_selection(state: FederationState, cands: List[Client],
+                             choices: Dict[int, List[str]], t: int,
+                             cfg: MFedMCConfig) -> List[int]:
+    """Eqs. 17–19 as one device rank program — outcome-identical to
+    ``selection.select_clients`` on the representative losses."""
+    cand_ids = sorted(c.client_id for c in cands)
+    n, M = len(cand_ids), len(state.modalities)
+    rows = [state.row_of[cid] for cid in cand_ids]
+    losses = state.losses[rows]          # ℓ_m^k, mirrored after training
+    mask = np.zeros((n, M), bool)
+    for i, cid in enumerate(cand_ids):
+        for m in choices[cid]:
+            mask[i, state.mod_index[m]] = True
+    crec = None
+    if cfg.client_strategy == "loss_recency":
+        stale = state.client_staleness(t)
+        crec = np.array([stale[state.row_of[cid]] for cid in cand_ids])
+    sel = select_clients_arrays(
+        losses, mask, delta=cfg.delta, criterion=cfg.client_strategy,
+        client_recency=crec, loss_weight=cfg.loss_weight)
+    return [cid for i, cid in enumerate(cand_ids) if sel[i]]
+
+
 def run_federation(clients: List[Client], spec: DatasetSpec,
                    cfg: MFedMCConfig, *, verbose: bool = False,
                    server_encoders: Optional[Dict[str, Dict]] = None,
@@ -201,16 +261,30 @@ def run_federation(clients: List[Client], spec: DatasetSpec,
         over the same stacked layout. Both backends consume the round RNG
         identically, so selection, aggregation and the comm ledger match the
         loop to float tolerance.
+      - ``"engine"``  — the batched backend with the population *resident*:
+        encoders and fusion modules stay stacked per shape family inside a
+        :class:`FederationState` for the whole run (training, predictions,
+        Eq. 21 and deployment gather/scatter rows on device), and the
+        ``Client`` objects are written back once at the end. Selection and
+        RNG behavior are identical to the other backends.
+
+    All backends route joint selection through the shared decision layer:
+    deterministic criteria run as device ``[K, M]`` programs
+    (``repro.core.selection_engine``; ``cfg.selection_impl="host"`` keeps
+    the per-client numpy reference), RNG-owning strategies stay host-side
+    in generator order.
 
     The §4.10 uplink (``quantize_bits`` — overrides ``cfg.quantize_bits``
-    when given) runs device-resident for both backends: per modality, the
+    when given) runs device-resident for every backend: per modality, the
     selected uploads stack on a K axis, quantize vmapped, and aggregate
     through one fused dequantize-and-reduce program
     (:func:`aggregate_uploads`); the ledger records exact wire bytes
     (bit-packed codes + per-tensor scale/zero metadata).
     """
-    if backend not in ("loop", "batched"):
+    if backend not in ("loop", "batched", "engine"):
         raise ValueError(f"unknown backend {backend!r}")
+    if cfg.selection_impl not in ("engine", "host"):
+        raise ValueError(f"unknown selection_impl {cfg.selection_impl!r}")
     qbits = cfg.quantize_bits if quantize_bits is None else quantize_bits
     if qbits < 32 and not 1 <= qbits <= 16:
         raise ValueError(f"quantize_bits={qbits} unsupported: use 1..16 "
@@ -221,147 +295,192 @@ def run_federation(clients: List[Client], spec: DatasetSpec,
     # global encoder store (initialized lazily from the first upload)
     server_encoders = server_encoders if server_encoders is not None else {}
 
-    for t in range(1, cfg.rounds + 1):
-        # -- client availability (§4.9) --------------------------------
-        if cfg.availability < 1.0:
-            avail = [c for c in clients if rng.random() < cfg.availability]
-            if not avail:
-                avail = [clients[rng.integers(len(clients))]]
-        else:
-            avail = clients
+    resident = backend == "engine"
+    batched = backend in ("batched", "engine")
+    # population decision arrays (recency matrix, exact wire sizes at this
+    # run's precision, presence, losses); resident runs also stack params
+    state = FederationState.build(clients, spec, qbits, stack=resident)
+    store = state.store if resident else ClientStore()
+    engine_sel = cfg.selection_impl == "engine"
 
-        # -- local learning --------------------------------------------
-        if backend == "batched":
-            from repro.core.batched import batched_local_learning
-            batched_local_learning(avail, cfg, rng)
-        else:
+    try:
+        for t in range(1, cfg.rounds + 1):
+            # -- client availability (§4.9) ------------------------------
+            if cfg.availability < 1.0:
+                avail = [c for c in clients
+                         if rng.random() < cfg.availability]
+                if not avail:
+                    avail = [clients[rng.integers(len(clients))]]
+            else:
+                avail = clients
+
+            # -- local learning ------------------------------------------
+            if batched:
+                from repro.core.batched import batched_local_learning
+                batched_local_learning(avail, cfg, rng, store=store)
+            else:
+                for c in avail:
+                    c.train_encoders(cfg.local_epochs, cfg.lr_encoder,
+                                     cfg.batch_size, rng)
+                    c.train_fusion(cfg.local_epochs, cfg.lr_fusion,
+                                   cfg.batch_size, rng)  # Stage #1
+            for c in avail:                 # mirror ℓ_m^k into the state
+                k = state.row_of[c.client_id]
+                for m, v in c.losses.items():
+                    state.losses[k, state.mod_index[m]] = v
+
+            # -- modality selection (§3.2) --------------------------------
+            round_shapley: Dict[str, List[float]] = {}
+            choices: Dict[int, List[str]] = {}
+            names_by_cid: Dict[int, List[str]] = {}
             for c in avail:
-                c.train_encoders(cfg.local_epochs, cfg.lr_encoder,
-                                 cfg.batch_size, rng)
-                c.train_fusion(cfg.local_epochs, cfg.lr_fusion,
-                               cfg.batch_size, rng)  # Stage #1
-
-        # -- modality selection (§3.2) ----------------------------------
-        round_shapley: Dict[str, List[float]] = {}
-        choices: Dict[int, List[str]] = {}
-        names_by_cid: Dict[int, List[str]] = {}
-        for c in avail:
-            names = list(c.modality_names)
-            if cfg.allowed_modalities is not None:
-                allowed = cfg.allowed_modalities.get(c.client_id)
-                names = [m for m in names if allowed is None or m in allowed]
-            if names:
-                names_by_cid[c.client_id] = names
-        phi_by_cid = None
-        if cfg.modality_strategy not in ("all", "random") and \
-                backend == "batched":
-            # one vmapped 2^M Shapley enumeration for the whole population;
-            # draws the per-client eval/background subsets in the exact
-            # client order the loop backend would (RNG parity)
-            from repro.core.batched import batched_shapley_values
-            shap_clients = [c for c in avail
-                            if c.client_id in names_by_cid]
-            if shap_clients:
-                phi_by_cid = batched_shapley_values(
-                    shap_clients, cfg.background_size, cfg.eval_size, rng)
-        for c in avail:
-            if c.client_id not in names_by_cid:
-                continue
-            names = names_by_cid[c.client_id]
-            if cfg.modality_strategy == "all":
-                choices[c.client_id] = names
-            elif cfg.modality_strategy == "random":
-                g = min(cfg.gamma, len(names))
-                choices[c.client_id] = sorted(
-                    rng.choice(names, size=g, replace=False).tolist())
-            else:  # priority (paper)
-                phi = (phi_by_cid[c.client_id] if phi_by_cid is not None
-                       else c.shapley_values(cfg.background_size,
-                                             cfg.eval_size, rng))
-                phi_named = dict(zip(c.modality_names, phi))
-                for m, p in phi_named.items():
-                    round_shapley.setdefault(m, []).append(abs(float(p)))
-                # Eq. 10's cost criterion ranks what the uplink actually
-                # ships: exact compressed wire bytes at the round's precision
-                sizes = c.encoder_sizes(qbits)
-                idx = [list(c.modality_names).index(m) for m in names]
-                rec = c.recency.recency_vector(names, t)
-                prio = modality_priority(
-                    np.array([phi[i] for i in idx]), sizes[idx], rec, t,
-                    cfg.alpha_s, cfg.alpha_c, cfg.alpha_r)
-                choices[c.client_id] = select_top_gamma(prio, names, cfg.gamma)
-
-        # -- client selection (§3.3) ------------------------------------
-        cands = [c for c in avail if c.client_id in choices]
-        if not cands:
-            # No client has a selectable modality this round (e.g. an
-            # allowed_modalities config that bars every candidate): record
-            # an explicit empty-upload round instead of selecting from an
-            # empty candidate set.
-            selected = []
-        elif cfg.client_strategy == "all":
-            selected = [c.client_id for c in cands]
-        else:
-            # representative loss = min over the client's selected modalities
-            losses = {c.client_id: min(c.losses[m]
-                                       for m in choices[c.client_id])
-                      for c in cands}
-            crit = cfg.client_strategy
-            client_rec: Dict[int, int] = {}
-            if crit == "loss_recency":
-                for c in cands:
-                    client_rec[c.client_id] = t - 1 - max(
-                        c.recency.last_upload.values(), default=-1)
-            selected = select_clients(
-                losses, cfg.delta, criterion=crit, recency=client_rec,
-                loss_weight=cfg.loss_weight, rng=rng)
-
-        # -- upload + server aggregation (Eq. 21, §4.10 uplink) ----------
-        by_id = {c.client_id: c for c in clients}
-        uploads: List[Tuple[int, str]] = []
-        per_modality: Dict[str, List[Client]] = {}
-        for cid in selected:
-            c = by_id[cid]
-            for m in choices[cid]:
-                per_modality.setdefault(m, []).append(c)
-                ledger.record(enc.encoder_bytes(c.encoders[m], qbits),
-                              modality=m)
-                uploads.append((cid, m))
-            c.recency.mark_uploaded(choices[cid], t)
-        for m, ups in per_modality.items():
-            server_encoders[m] = aggregate_uploads(
-                ups, m, [c.train.num_samples for c in ups], qbits,
-                error_feedback=cfg.error_feedback)
-
-        # -- local deploying + Stage #2 ----------------------------------
-        for c in avail:
-            for m in c.modality_names:
-                if m in server_encoders:
-                    c.install_global(m, server_encoders[m])
-        if backend == "batched":
-            from repro.core.batched import batched_fusion_stage
-            batched_fusion_stage(avail, cfg, rng)
-        else:
+                names = list(c.modality_names)
+                if cfg.allowed_modalities is not None:
+                    allowed = cfg.allowed_modalities.get(c.client_id)
+                    names = [m for m in names
+                             if allowed is None or m in allowed]
+                if names:
+                    names_by_cid[c.client_id] = names
+            phi_by_cid = None
+            if cfg.modality_strategy not in ("all", "random") and batched:
+                # one vmapped 2^M Shapley enumeration for the population;
+                # draws the per-client eval/background subsets in the exact
+                # client order the loop backend would (RNG parity)
+                from repro.core.batched import batched_shapley_values
+                shap_clients = [c for c in avail
+                                if c.client_id in names_by_cid]
+                if shap_clients:
+                    phi_by_cid = batched_shapley_values(
+                        shap_clients, cfg.background_size, cfg.eval_size,
+                        rng, store=store)
+            phi_by_name: Dict[int, Dict[str, float]] = {}
             for c in avail:
-                c.train_fusion(cfg.local_epochs, cfg.lr_fusion,
-                               cfg.batch_size, rng)  # Stage #2
+                if c.client_id not in names_by_cid:
+                    continue
+                names = names_by_cid[c.client_id]
+                if cfg.modality_strategy == "all":
+                    choices[c.client_id] = names
+                elif cfg.modality_strategy == "random":
+                    g = min(cfg.gamma, len(names))
+                    choices[c.client_id] = sorted(
+                        rng.choice(names, size=g, replace=False).tolist())
+                else:  # priority (paper)
+                    phi = (phi_by_cid[c.client_id]
+                           if phi_by_cid is not None
+                           else c.shapley_values(cfg.background_size,
+                                                 cfg.eval_size, rng))
+                    phi_named = dict(zip(c.modality_names, phi))
+                    phi_by_name[c.client_id] = phi_named
+                    for m, p in phi_named.items():
+                        round_shapley.setdefault(m, []).append(
+                            abs(float(p)))
+                    if engine_sel:
+                        continue        # ranked below, whole population
+                    # Eq. 10's cost criterion ranks what the uplink
+                    # actually ships: exact compressed wire bytes at the
+                    # round's precision
+                    sizes = c.encoder_sizes(qbits)
+                    idx = [list(c.modality_names).index(m) for m in names]
+                    rec = c.recency.recency_vector(names, t)
+                    prio = modality_priority(
+                        np.array([phi[i] for i in idx]), sizes[idx], rec,
+                        t, cfg.alpha_s, cfg.alpha_c, cfg.alpha_r)
+                    choices[c.client_id] = select_top_gamma(
+                        prio, names, cfg.gamma)
+            if engine_sel and phi_by_name:
+                choices.update(_engine_modality_choices(
+                    state, sorted(phi_by_name), names_by_cid, phi_by_name,
+                    t, cfg))
 
-        # -- evaluate -----------------------------------------------------
-        if backend == "batched":
-            from repro.core.batched import batched_evaluate
-            acc, loss = batched_evaluate(clients)
-        else:
-            acc, loss = _weighted_accuracy(clients)
-        ledger.rounds = t
-        history.records.append(RoundRecord(
-            t, acc, loss, ledger.megabytes, uploads,
-            {m: float(np.mean(v)) for m, v in round_shapley.items()}))
-        if verbose:
-            print(f"[round {t:3d}] acc={acc:.4f} loss={loss:.4f} "
-                  f"comm={ledger.megabytes:.3f}MB uploads={len(uploads)}")
-        if cfg.comm_budget_mb is not None and \
-                ledger.megabytes >= cfg.comm_budget_mb:
-            break
+            # -- client selection (§3.3) ----------------------------------
+            cands = [c for c in avail if c.client_id in choices]
+            if not cands:
+                # No client has a selectable modality this round (e.g. an
+                # allowed_modalities config that bars every candidate):
+                # record an explicit empty-upload round instead of
+                # selecting from an empty candidate set.
+                selected = []
+            elif cfg.client_strategy == "all":
+                selected = [c.client_id for c in cands]
+            elif engine_sel and cfg.client_strategy != "random":
+                selected = _engine_client_selection(state, cands, choices,
+                                                    t, cfg)
+            else:
+                # representative loss = min over the selected modalities
+                losses = {c.client_id: min(c.losses[m]
+                                           for m in choices[c.client_id])
+                          for c in cands}
+                crit = cfg.client_strategy
+                client_rec: Dict[int, int] = {}
+                if crit == "loss_recency":
+                    for c in cands:
+                        client_rec[c.client_id] = t - 1 - max(
+                            c.recency.last_upload.values(), default=-1)
+                selected = select_clients(
+                    losses, cfg.delta, criterion=crit, recency=client_rec,
+                    loss_weight=cfg.loss_weight, rng=rng)
+
+            # -- upload + server aggregation (Eq. 21, §4.10 uplink) -------
+            by_id = {c.client_id: c for c in clients}
+            uploads: List[Tuple[int, str]] = []
+            per_modality: Dict[str, List[Client]] = {}
+            upload_mask = np.zeros_like(state.presence)
+            for cid in selected:
+                c = by_id[cid]
+                k = state.row_of[cid]
+                for m in choices[cid]:
+                    per_modality.setdefault(m, []).append(c)
+                    # exact wire bytes, precomputed once per run
+                    ledger.record(float(state.sizes[k, state.mod_index[m]]),
+                                  modality=m)
+                    uploads.append((cid, m))
+                    upload_mask[k, state.mod_index[m]] = True
+                c.recency.mark_uploaded(choices[cid], t)   # tracker mirror
+            state.mark_uploaded(upload_mask, t)            # Eq. 11, [K, M]
+            for m, ups in per_modality.items():
+                server_encoders[m] = aggregate_uploads(
+                    ups, m, [c.train.num_samples for c in ups], qbits,
+                    error_feedback=cfg.error_feedback, store=store)
+
+            # -- local deploying + Stage #2 -------------------------------
+            if resident:
+                for m, params in server_encoders.items():
+                    rows = [state.row_of[c.client_id] for c in avail
+                            if m in c.encoders]
+                    state.deploy_global(m, rows, params)
+            else:
+                for c in avail:
+                    for m in c.modality_names:
+                        if m in server_encoders:
+                            c.install_global(m, server_encoders[m])
+            if batched:
+                from repro.core.batched import batched_fusion_stage
+                batched_fusion_stage(avail, cfg, rng, store=store)
+            else:
+                for c in avail:
+                    c.train_fusion(cfg.local_epochs, cfg.lr_fusion,
+                                   cfg.batch_size, rng)  # Stage #2
+
+            # -- evaluate -------------------------------------------------
+            if batched:
+                from repro.core.batched import batched_evaluate
+                acc, loss = batched_evaluate(clients, store=store)
+            else:
+                acc, loss = _weighted_accuracy(clients)
+            ledger.rounds = t
+            history.records.append(RoundRecord(
+                t, acc, loss, ledger.megabytes, uploads,
+                {m: float(np.mean(v)) for m, v in round_shapley.items()}))
+            if verbose:
+                print(f"[round {t:3d}] acc={acc:.4f} loss={loss:.4f} "
+                      f"comm={ledger.megabytes:.3f}MB "
+                      f"uploads={len(uploads)}")
+            if cfg.comm_budget_mb is not None and \
+                    ledger.megabytes >= cfg.comm_budget_mb:
+                break
+    finally:
+        if resident:
+            state.write_back()
     return history
 
 

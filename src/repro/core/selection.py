@@ -90,12 +90,18 @@ def select_clients(losses: Dict[int, float], delta: float,
     criterion — 'low_loss' (paper's choice) | 'high_loss' | 'random'
                 | 'loss_recency' (§4.8 hybrid; needs ``recency`` and
                 ``loss_weight`` w: score = w·loss_rank + (1−w)·recency_rank)
+
+    'random' requires an explicit ``rng`` (the caller's round generator):
+    a silent shared default would make every "random" run draw the same
+    clients, so two nominally independent runs would collide.
     """
     ids = sorted(losses)
     k = len(ids)
     n_sel = max(1, math.ceil(delta * k))
     if criterion == "random":
-        rng = rng or np.random.default_rng(0)
+        if rng is None:
+            raise ValueError("criterion='random' needs an explicit rng "
+                             "(pass the round's np.random.Generator)")
         return sorted(rng.choice(ids, size=n_sel, replace=False).tolist())
     vals = np.array([losses[i] for i in ids], np.float64)
     if criterion == "low_loss":
@@ -136,8 +142,14 @@ def joint_select(per_client_priorities: Dict[int, Tuple[Sequence[str], np.ndarra
                  client_recency: Optional[Dict[int, int]] = None,
                  loss_weight: float = 1.0,
                  rng: Optional[np.random.Generator] = None) -> SelectionResult:
-    """Sequential joint selection (§3.3): modalities first, then clients."""
-    rng = rng or np.random.default_rng(0)
+    """Sequential joint selection (§3.3): modalities first, then clients.
+
+    The round rng threads through to every random draw; it is required
+    whenever a draw actually happens (``modality_random`` or
+    ``client_criterion='random'``)."""
+    if modality_random and rng is None:
+        raise ValueError("modality_random=True needs an explicit rng "
+                         "(pass the round's np.random.Generator)")
     choices: Dict[int, List[str]] = {}
     for cid, (names, prio) in per_client_priorities.items():
         if modality_random:

@@ -1,0 +1,292 @@
+"""Device-resident joint-selection engine — Eqs. (9)–(20) over the ``[K, M]``
+population layout.
+
+``repro.core.selection`` is the paper-faithful numpy reference: per-client
+vectors, Python ``sorted`` tie-breaks, host-side ranking. This module runs
+the *whole population's* joint selection as one compiled program over the
+``[K, M]`` matrices the batched simulator and the mesh tier already share:
+
+- |φ| and size min-max normalization (Eq. 12) as masked row-wise reductions
+  (each client normalizes over its own candidate modalities only);
+- composite priority (Eq. 13) as one fused elementwise program;
+- top-γ modality selection (Eqs. 14–16) as a per-row ``lexsort`` on
+  ``(-priority, name_rank)``;
+- client selection (Eqs. 17–19: low_loss / high_loss / loss_recency) as a
+  stable rank over representative losses. The ``random`` criterion and the
+  ``random`` modality strategy stay host-side by design — they own the round
+  RNG, whose consumption order is the backends' parity contract.
+
+**Bit-identical outcomes, by construction.** Two mechanisms make the engine
+reproduce the numpy reference exactly on selection *outcomes* (which pairs
+upload), not just to float tolerance:
+
+1. The decision math runs in float64 (a locally-scoped ``enable_x64`` —
+   the rest of the simulator stays float32) and is AOT-compiled with
+   ``xla_backend_optimization_level=0``, which stops LLVM from contracting
+   ``a*b + c`` chains into FMAs. With contraction on, Eq. 13's weighted sum
+   differs from numpy by 1 ulp on ~25% of inputs — enough to flip a
+   tie-break. The decision programs consume K·M scalars, so the
+   deoptimized codegen costs nothing measurable.
+2. ``select_top_gamma``'s tie-break (descending priority, then *name*
+   order) cannot be reproduced by an index-ordered ``top_k``; the engine
+   sorts on precomputed lexicographic name-rank arrays
+   (:func:`lexicographic_rank`) instead. Ranks preserve exact name
+   comparisons, so equal priorities break ties exactly as the reference's
+   ``sorted(..., key=(-priority, name))``.
+
+Rows must be ordered by ascending client id (the reference sorts ids before
+ranking); inputs must be finite on present entries. Compiled programs cache
+per (padded-K, M, static config); K pads to the next power of two so a run
+with §4.9 availability sees O(log K) distinct shapes.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from repro.core import hostsync
+
+# LLVM opt level 0 for the tiny decision programs: no FMA contraction, so
+# float64 arithmetic is bit-identical to numpy's (see module docstring).
+_COMPILER_OPTIONS = {"xla_backend_optimization_level": 0}
+
+DETERMINISTIC_CLIENT_CRITERIA = ("low_loss", "high_loss", "loss_recency")
+
+
+def lexicographic_rank(names: Sequence[str]) -> np.ndarray:
+    """``rank[i]`` = position of ``names[i]`` in ``sorted(names)``.
+
+    Comparing ranks is exactly comparing names lexicographically, which is
+    what the numpy reference's tie-break does — but ranks are device-sortable
+    integers while strings are not."""
+    order = sorted(range(len(names)), key=lambda i: names[i])
+    rank = np.empty(len(names), np.int64)
+    for pos, i in enumerate(order):
+        rank[i] = pos
+    return rank
+
+
+def _pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+# ---------------------------------------------------------------------------
+# traced decision programs (compiled under x64 at backend-opt-level 0)
+# ---------------------------------------------------------------------------
+
+def _masked_rownorm(x, pres):
+    """Eq. 12 per row over present entries; constant rows -> zeros.
+
+    Bit-parity with ``selection.minmax_normalize``: same ``(x − lo)/(hi − lo)``
+    doubles, same ``< 1e-12`` constant-vector cutoff."""
+    lo = jnp.min(jnp.where(pres, x, jnp.inf), axis=-1, keepdims=True)
+    hi = jnp.max(jnp.where(pres, x, -jnp.inf), axis=-1, keepdims=True)
+    span = hi - lo
+    ok = span >= 1e-12
+    out = (x - lo) / jnp.where(ok, span, 1.0)
+    return jnp.where(ok & pres, out, 0.0)
+
+
+def _canonical_zero(key):
+    """-0.0 -> +0.0: XLA's total-order sort splits signed zeros, Python's
+    ``sorted`` does not."""
+    return jnp.where(key == 0.0, 0.0, key)
+
+
+def _modality_program(phi, sizes, recency, presence, name_rank, t,
+                      *, gamma: int, alpha_s: float, alpha_c: float,
+                      alpha_r: float):
+    """Eqs. 12–16 for every client at once.
+
+    phi/sizes/recency: [K, M] float64 (absent entries: any finite filler)
+    presence:          [K, M] bool — candidate modalities per client
+    name_rank:         [K, M] int — lexicographic rank of each name
+    t:                 scalar float64 round index
+    Returns (mask [K, M] bool, order [K, M] int — modality indices sorted by
+    (priority desc, name), n_choose [K] int, priority [K, M])."""
+    pres = presence > 0
+    phi_n = _masked_rownorm(jnp.abs(phi), pres)
+    size_n = _masked_rownorm(sizes, pres)
+    rec_n = recency / jnp.maximum(t, 1.0)
+    prio = alpha_s * phi_n + alpha_c * (1.0 - size_n) + alpha_r * rec_n
+    key = jnp.where(pres, _canonical_zero(-prio), jnp.inf)
+    # primary: -priority ascending; secondary: name rank ascending
+    order = jnp.lexsort((name_rank, key), axis=-1)
+    rank = jnp.argsort(order, axis=-1, stable=True)     # inverse permutation
+    n_choose = jnp.minimum(gamma, jnp.sum(pres, axis=-1))
+    mask = pres & (rank < n_choose[:, None])
+    return mask, order, n_choose, prio
+
+
+def _client_program(losses, mod_mask, client_rec, delta, loss_weight,
+                    *, criterion: str):
+    """Eqs. 17–19 over the candidate population.
+
+    losses:     [K, M] float64 per-modality encoder losses
+    mod_mask:   [K, M] bool — this round's modality choices (Eq. 16)
+    client_rec: [K] float64 — per-client staleness (loss_recency only)
+    Returns (selected [K] bool, representative loss [K])."""
+    cand = jnp.any(mod_mask, axis=-1)
+    rep = jnp.min(jnp.where(mod_mask, losses, jnp.inf), axis=-1)
+    if criterion == "low_loss":
+        ckey = rep
+    elif criterion == "high_loss":
+        ckey = -rep
+    elif criterion == "loss_recency":
+        loss_rank = _masked_rownorm(rep[None], cand[None])[0]
+        rec_rank = 1.0 - _masked_rownorm(client_rec[None], cand[None])[0]
+        ckey = loss_weight * loss_rank + (1.0 - loss_weight) * rec_rank
+    else:  # pragma: no cover — guarded by the public wrapper
+        raise ValueError(criterion)
+    ckey = jnp.where(cand, _canonical_zero(ckey), jnp.inf)
+    order = jnp.argsort(ckey, stable=True)
+    rank = jnp.argsort(order, stable=True)
+    n_sel = jnp.maximum(1, jnp.ceil(delta * jnp.sum(cand))).astype(jnp.int64)
+    return cand & (rank < n_sel), rep
+
+
+# ---------------------------------------------------------------------------
+# AOT compile cache
+# ---------------------------------------------------------------------------
+
+def _f64(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float64)
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_modality(K: int, M: int, gamma: int, alpha_s: float,
+                       alpha_c: float, alpha_r: float):
+    fn = functools.partial(_modality_program, gamma=gamma, alpha_s=alpha_s,
+                           alpha_c=alpha_c, alpha_r=alpha_r)
+    with enable_x64():
+        lowered = jax.jit(fn).lower(
+            _f64(K, M), _f64(K, M), _f64(K, M),
+            jax.ShapeDtypeStruct((K, M), jnp.bool_),
+            jax.ShapeDtypeStruct((K, M), jnp.int64), _f64())
+        return lowered.compile(compiler_options=_COMPILER_OPTIONS)
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_client(K: int, M: int, criterion: str):
+    fn = functools.partial(_client_program, criterion=criterion)
+    with enable_x64():
+        lowered = jax.jit(fn).lower(
+            _f64(K, M), jax.ShapeDtypeStruct((K, M), jnp.bool_),
+            _f64(K), _f64(), _f64())
+        return lowered.compile(compiler_options=_COMPILER_OPTIONS)
+
+
+def _pad_rows(a: np.ndarray, kp: int, fill) -> np.ndarray:
+    if a.shape[0] == kp:
+        return a
+    out = np.full((kp,) + a.shape[1:], fill, a.dtype)
+    out[:a.shape[0]] = a
+    return out
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ModalityDecision:
+    """Top-γ outcome (Eqs. 14–16) for a stacked population."""
+    mask: np.ndarray      # [K, M] bool — selected (client, modality) pairs
+    order: np.ndarray     # [K, M] int — modality idx by (priority desc, name)
+    counts: np.ndarray    # [K] int — min(γ, #present) per client
+
+    def choices(self, row: int, names: Sequence[str]) -> List[str]:
+        """Client ``row``'s top-γ names in priority order — exactly
+        ``selection.select_top_gamma``'s return value."""
+        return [names[j] for j in self.order[row, :self.counts[row]]]
+
+
+@dataclass
+class EngineDecision:
+    """One round's joint selection (Eq. 20)."""
+    modality: ModalityDecision
+    client_mask: np.ndarray         # [K] bool (Eq. 19)
+
+    @property
+    def upload_mask(self) -> np.ndarray:
+        """[K, M] 0/1 — Θ_γ^δ (Eq. 20), the mask every tier consumes."""
+        return self.modality.mask & self.client_mask[:, None]
+
+
+def select_modalities_arrays(phi, sizes, recency, presence, name_rank, *,
+                             t: int, gamma: int, alpha_s: float,
+                             alpha_c: float, alpha_r: float
+                             ) -> ModalityDecision:
+    """Population top-γ (Eqs. 12–16); outcome-identical to running
+    ``modality_priority`` + ``select_top_gamma`` per client.
+
+    ``name_rank`` is a ``[M]`` (or ``[K, M]``) lexicographic rank array from
+    :func:`lexicographic_rank` over the global modality axis."""
+    phi = np.asarray(phi, np.float64)
+    K, M = phi.shape
+    kp = _pow2(K)
+    name_rank = np.broadcast_to(np.asarray(name_rank, np.int64), (K, M))
+    comp = _compiled_modality(kp, M, int(gamma), float(alpha_s),
+                              float(alpha_c), float(alpha_r))
+    with enable_x64():      # keep f64/i64 inputs wide at the call boundary
+        mask, order, counts, _ = comp(
+            _pad_rows(phi, kp, 0.0),
+            _pad_rows(np.asarray(sizes, np.float64), kp, 0.0),
+            _pad_rows(np.asarray(recency, np.float64), kp, 0.0),
+            _pad_rows(np.asarray(presence, bool), kp, False),
+            _pad_rows(name_rank, kp, 0), np.float64(t))
+    return ModalityDecision(hostsync.fetch(mask)[:K],
+                            hostsync.fetch(order)[:K],
+                            hostsync.fetch(counts)[:K])
+
+
+def select_clients_arrays(losses, mod_mask, *, delta: float,
+                          criterion: str = "low_loss",
+                          client_recency=None,
+                          loss_weight: float = 1.0) -> np.ndarray:
+    """Server-side top-⌈δ·#candidates⌉ (Eqs. 17–19) over the [K, M] layout;
+    outcome-identical to ``selection.select_clients`` on the representative
+    losses (min over each client's chosen modalities).
+
+    ``random`` / ``all`` are the caller's job: ``random`` owns the round RNG
+    (pass it to ``selection.select_clients``), ``all`` is trivial."""
+    if criterion not in DETERMINISTIC_CLIENT_CRITERIA:
+        raise ValueError(
+            f"criterion {criterion!r} is not device-deterministic; handle "
+            "'random' (needs the round rng) and 'all' host-side")
+    losses = np.asarray(losses, np.float64)
+    K, M = losses.shape
+    kp = _pow2(K)
+    rec = (np.zeros(K) if client_recency is None
+           else np.asarray(client_recency, np.float64))
+    comp = _compiled_client(kp, M, criterion)
+    with enable_x64():      # keep f64 inputs wide at the call boundary
+        sel, _ = comp(_pad_rows(losses, kp, np.inf),
+                      _pad_rows(np.asarray(mod_mask, bool), kp, False),
+                      _pad_rows(rec, kp, 0.0), np.float64(delta),
+                      np.float64(loss_weight))
+    return hostsync.fetch(sel)[:K]
+
+
+def joint_select_arrays(phi, sizes, recency, losses, presence, name_rank, *,
+                        t: int, gamma: int, delta: float,
+                        alpha_s: float, alpha_c: float, alpha_r: float,
+                        client_criterion: str = "low_loss",
+                        client_recency=None,
+                        loss_weight: float = 1.0) -> EngineDecision:
+    """Sequential joint selection (§3.3, Eq. 20): modalities first, then
+    clients — the engine counterpart of ``selection.joint_select`` for the
+    deterministic strategies."""
+    mod = select_modalities_arrays(
+        phi, sizes, recency, presence, name_rank, t=t, gamma=gamma,
+        alpha_s=alpha_s, alpha_c=alpha_c, alpha_r=alpha_r)
+    sel = select_clients_arrays(
+        losses, mod.mask, delta=delta, criterion=client_criterion,
+        client_recency=client_recency, loss_weight=loss_weight)
+    return EngineDecision(mod, sel)

@@ -30,16 +30,25 @@ import numpy as np
 from repro.core.fusion import fusion_forward
 
 
+@functools.lru_cache(maxsize=None)
 def subset_masks(m: int) -> np.ndarray:
-    """[2^m, m] boolean matrix; row i = binary expansion of i."""
+    """[2^m, m] boolean matrix; row i = binary expansion of i.
+
+    Cached (and marked read-only): the enumeration re-traces per fusion
+    bucket per round, and rebuilding the 2^m table each trace is waste."""
     idx = np.arange(2 ** m)
-    return ((idx[:, None] >> np.arange(m)) & 1).astype(bool)
+    out = ((idx[:, None] >> np.arange(m)) & 1).astype(bool)
+    out.flags.writeable = False
+    return out
 
 
+@functools.lru_cache(maxsize=None)
 def _shapley_weights(m: int) -> np.ndarray:
-    """w[s] = s!(m−s−1)!/m! for coalition sizes s = 0..m−1."""
-    return np.array([math.factorial(s) * math.factorial(m - s - 1)
-                     / math.factorial(m) for s in range(m)])
+    """w[s] = s!(m−s−1)!/m! for coalition sizes s = 0..m−1 (cached)."""
+    out = np.array([math.factorial(s) * math.factorial(m - s - 1)
+                    / math.factorial(m) for s in range(m)])
+    out.flags.writeable = False
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("num_modalities",))

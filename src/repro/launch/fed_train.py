@@ -23,11 +23,15 @@ mask and zero Eq. 21 weight, and host-side selection only ranks the
 modalities a client actually owns. Heterogeneous populations therefore run
 the same mesh program as the homogeneous case — no per-client path.
 
-Selection itself stays host-side — it consumes K·M scalars, not tensors.
-The modality-impact criterion uses the per-round loss improvement as a
-cheap Shapley proxy (the exact interventional Shapley of the simulator
-needs the fusion module, which never leaves the edge); size and recency
-criteria are the paper's Eqs. 10–11 unchanged.
+Joint selection runs through the same device-resident engine as the
+simulator backends (``repro.core.selection_engine``): the whole
+population's Eqs. 12–19 execute as two [K, M] programs per round, with
+recency kept as the Eq. 11 last-upload matrix. The modality-impact
+criterion uses the per-round loss improvement as a cheap Shapley proxy
+(the exact interventional Shapley of the simulator needs the fusion
+module, which never leaves the edge); size and recency criteria are the
+paper's Eqs. 10–11 unchanged. ``--client-strategy loss_recency
+--loss-weight w`` exposes the §4.8 hybrid ablation on the mesh tier.
 
 This launcher is the bridge between the paper-faithful simulator
 (``repro.core.rounds``) and the multi-pod dry-run: the same round lowers
@@ -37,7 +41,6 @@ from __future__ import annotations
 
 import argparse
 import os
-import sys
 import time
 
 
@@ -66,7 +69,19 @@ def main(argv=None):
                     help="§4.10 uplink precision: 1..16 quantize every "
                          "client payload on device before Eq. 21's masked "
                          "all-reduce; 32 = full precision")
+    ap.add_argument("--client-strategy", default="low_loss",
+                    choices=["low_loss", "high_loss", "random",
+                             "loss_recency", "all"],
+                    help="Eqs. 17-19 server-side client criterion "
+                         "(loss_recency: the §4.8 hybrid)")
+    ap.add_argument("--loss-weight", type=float, default=1.0,
+                    help="loss_recency blend w: "
+                         "score = w*loss_rank + (1-w)*recency_rank")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="rng seed for --client-strategy random")
     args = ap.parse_args(argv)
+    if not 0.0 <= args.loss_weight <= 1.0:
+        ap.error("--loss-weight must be in [0, 1]")
     if args.gamma < 1:
         ap.error("--gamma must be >= 1")
     if args.quantize_bits < 32 and not 1 <= args.quantize_bits <= 16:
@@ -83,10 +98,12 @@ def main(argv=None):
     from repro.core.aggregation import CommLedger
     from repro.core.batched import padded_population_batches
     from repro.core.distributed import (make_multimodal_federated_round,
-                                        selection_masks)
+                                        selection_masks_from_matrix)
     from repro.core.encoders import encoder_bytes, encoder_eval, init_encoder
-    from repro.core.selection import (modality_priority, select_clients,
-                                      select_top_gamma)
+    from repro.core.selection import select_clients
+    from repro.core.selection_engine import (lexicographic_rank,
+                                             select_clients_arrays,
+                                             select_modalities_arrays)
     from repro.data import get_dataset_spec, make_federation
     from repro.data.partition import PARTITIONERS
 
@@ -150,6 +167,8 @@ def main(argv=None):
         hierarchical=args.hierarchical,
         quantize_bits=args.quantize_bits))
     size_vec = np.array([sizes[m] for m in modalities], np.float64)
+    name_rank = lexicographic_rank(modalities)
+    sel_rng = np.random.default_rng(args.seed)
     ledger = CommLedger()
     with mesh:
         # round 1 is the cold start: everyone uploads everything they own
@@ -173,26 +192,40 @@ def main(argv=None):
             ledger.rounds = t
 
             # ---- joint selection for the next round (Eqs. 13-20) ----
+            # the whole population ranks in two device [K, M] programs
+            # (repro.core.selection_engine); only the modalities a client
+            # actually owns are candidates (presence mask)
             cur = np.stack([np.asarray(losses[m]) for m in modalities],
                            axis=1)                        # [K, M]
             impact = (np.zeros_like(cur) if prev_loss is None
                       else np.maximum(prev_loss - cur, 0.0))
-            choices = {}
-            for k in range(K):
-                # rank only the modalities client k actually owns
-                own = [i for i in range(M) if presence[k, i] > 0]
-                if not own:
-                    continue
-                names = [modalities[i] for i in own]
-                rec = (t - last_upload[k, own] - 1).astype(np.float64)
-                prio = modality_priority(impact[k, own], size_vec[own], rec,
-                                         t, 1 / 3, 1 / 3, 1 / 3)
-                choices[k] = select_top_gamma(prio, names, args.gamma)
-            rep_loss = {k: float(min(cur[k, modalities.index(m)]
-                                     for m in choices[k]))
-                        for k in choices}
-            chosen = select_clients(rep_loss, args.delta)
-            select = selection_masks(choices, chosen, K, modalities)
+            rec = (t - last_upload - 1).astype(np.float64)
+            dec = select_modalities_arrays(
+                impact, np.broadcast_to(size_vec, (K, M)), rec,
+                presence > 0, name_rank, t=t, gamma=args.gamma,
+                alpha_s=1 / 3, alpha_c=1 / 3, alpha_r=1 / 3)
+            choices = {k: dec.choices(k, modalities)
+                       for k in range(K) if dec.counts[k] > 0}
+            if args.client_strategy == "all":
+                chosen = sorted(choices)
+            elif args.client_strategy == "random":
+                chosen = select_clients({k: 0.0 for k in choices},
+                                        args.delta, criterion="random",
+                                        rng=sel_rng)
+            else:
+                crec = None
+                if args.client_strategy == "loss_recency":
+                    own_last = np.where(presence > 0, last_upload,
+                                        -1).max(axis=1)
+                    crec = (t - 1 - own_last).astype(np.float64)
+                cmask = select_clients_arrays(
+                    cur.astype(np.float64), dec.mask, delta=args.delta,
+                    criterion=args.client_strategy, client_recency=crec,
+                    loss_weight=args.loss_weight)
+                chosen = [k for k in range(K) if cmask[k]]
+            upload_mask = dec.mask & np.isin(np.arange(K),
+                                             list(chosen))[:, None]
+            select = selection_masks_from_matrix(upload_mask, modalities)
             prev_loss = cur
 
             mb = " ".join(f"{m}={per_mod_bytes[m] / 1e6:.2f}MB"

@@ -1,0 +1,428 @@
+"""The device-resident selection engine must reproduce the numpy reference
+(`modality_priority` + `select_top_gamma` + `select_clients`) bit-identically
+on selection *outcomes* — every strategy, every tie case — and a full
+`run_federation` under the engine must match the pre-refactor loop backend
+exactly on uploads/ledger and to 1e-5 on encoders."""
+import numpy as np
+import pytest
+
+from repro.core import selection_engine as se
+from repro.core.federation_state import ClientStore, FederationState
+from repro.core.rounds import MFedMCConfig, build_federation, run_federation
+from repro.core.selection import (joint_select, modality_priority,
+                                  select_clients, select_top_gamma)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAS_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(not HAS_HYPOTHESIS,
+                                      reason="hypothesis not installed")
+
+ALPHAS = dict(alpha_s=1 / 3, alpha_c=1 / 3, alpha_r=1 / 3)
+
+
+def _reference_choices(names, phi, sizes, rec, t, gamma):
+    prio = modality_priority(phi, sizes, rec, t, **ALPHAS)
+    return select_top_gamma(prio, list(names), gamma)
+
+
+class TestLexicographicRank:
+    def test_rank_orders_names(self):
+        names = ["gyro", "acc", "mic"]
+        rank = se.lexicographic_rank(names)
+        np.testing.assert_array_equal(rank, [1, 0, 2])
+
+    def test_rank_preserves_comparisons(self):
+        names = ["b10", "b2", "a", "zz"]
+        rank = se.lexicographic_rank(names)
+        for i in range(len(names)):
+            for j in range(len(names)):
+                assert (names[i] < names[j]) == (rank[i] < rank[j])
+
+
+class TestModalityParity:
+    """Engine vs per-client numpy on random populations — exact outcomes,
+    including the ordered top-γ lists (priority desc, then name)."""
+
+    def _check(self, phi, sizes, recm, presence, names, t, gamma):
+        dec = se.select_modalities_arrays(
+            phi, sizes, recm, presence, se.lexicographic_rank(names),
+            t=t, gamma=gamma, **ALPHAS)
+        for k in range(phi.shape[0]):
+            own = [j for j in range(len(names)) if presence[k, j]]
+            if not own:
+                assert dec.counts[k] == 0 and not dec.mask[k].any()
+                continue
+            ref = _reference_choices([names[j] for j in own], phi[k, own],
+                                     sizes[k, own], recm[k, own], t, gamma)
+            assert dec.choices(k, names) == ref
+
+    def test_seeded_random_populations(self):
+        rng = np.random.default_rng(7)
+        for trial in range(60):
+            K = int(rng.integers(1, 10))
+            M = int(rng.integers(1, 6))
+            names = list(rng.permutation([f"m{i}" for i in range(M)]))
+            presence = rng.random((K, M)) < 0.8
+            phi = rng.standard_normal((K, M))
+            sizes = rng.random((K, M)) * 1e6
+            if trial % 5 == 0:
+                phi[:] = 0.25                    # constant vector -> Eq. 12
+            if trial % 7 == 0:
+                sizes[:] = 321.0                 # normalizes to all-zeros
+            t = int(rng.integers(1, 9))
+            recm = (t - rng.integers(-1, 6, (K, M)) - 1).astype(float)
+            self._check(phi, sizes, recm, presence, names, t,
+                        int(rng.integers(1, M + 2)))
+
+    def test_gamma_exceeds_m(self):
+        names = ["a", "b"]
+        dec = se.select_modalities_arrays(
+            np.array([[0.1, 0.9]]), np.ones((1, 2)), np.zeros((1, 2)),
+            np.ones((1, 2), bool), se.lexicographic_rank(names),
+            t=3, gamma=7, **ALPHAS)
+        assert dec.choices(0, names) == ["b", "a"]   # all, priority order
+
+    def test_all_equal_priorities_tie_break_by_name(self):
+        # the satellite regression: an index-ordered top_k would pick input
+        # order; the reference (and engine) break ties lexicographically
+        names = ["gyro", "acc", "tactile", "mic"]
+        K, M = 3, 4
+        dec = se.select_modalities_arrays(
+            np.ones((K, M)), np.ones((K, M)), np.zeros((K, M)),
+            np.ones((K, M), bool), se.lexicographic_rank(names),
+            t=1, gamma=2, **ALPHAS)
+        for k in range(K):
+            assert dec.choices(k, names) == ["acc", "gyro"]
+            assert dec.choices(k, names) == _reference_choices(
+                names, np.ones(M), np.ones(M), np.zeros(M), 1, 2)
+
+    def test_partial_tie_prefers_name_order(self):
+        # two modalities tie on priority, third wins outright
+        names = ["c", "a", "b"]
+        phi = np.array([[0.5, 0.2, 0.2]])
+        dec = se.select_modalities_arrays(
+            phi, np.ones((1, 3)), np.zeros((1, 3)), np.ones((1, 3), bool),
+            se.lexicographic_rank(names), t=1, gamma=2, alpha_s=1.0,
+            alpha_c=0.0, alpha_r=0.0)
+        assert dec.choices(0, names) == ["c", "a"]
+
+
+class TestClientParity:
+    def _ref(self, losses_d, delta, crit, rec_d, lw):
+        return select_clients(losses_d, delta, criterion=crit,
+                              recency=rec_d, loss_weight=lw)
+
+    def test_seeded_random_criteria(self):
+        rng = np.random.default_rng(11)
+        for trial in range(60):
+            K = int(rng.integers(1, 14))
+            M = int(rng.integers(1, 4))
+            mask = rng.random((K, M)) < 0.7
+            losses = rng.random((K, M)) * 4
+            if trial % 4 == 0:
+                losses[:] = 1.0                  # full tie -> stable id order
+            delta = float(rng.uniform(0.05, 1.0))
+            lw = float(rng.random())
+            rec_vec = rng.integers(0, 10, K).astype(float)
+            cand = [k for k in range(K) if mask[k].any()]
+            if not cand:
+                continue
+            rep = {k: float(min(losses[k, j] for j in range(M)
+                                if mask[k, j])) for k in cand}
+            rec_d = {k: int(rec_vec[k]) for k in cand}
+            for crit in ("low_loss", "high_loss", "loss_recency"):
+                ref = self._ref(rep, delta, crit, rec_d, lw)
+                got = se.select_clients_arrays(
+                    losses, mask, delta=delta, criterion=crit,
+                    client_recency=rec_vec, loss_weight=lw)
+                assert [k for k in range(K) if got[k]] == ref, \
+                    (trial, crit, delta)
+
+    def test_loss_recency_blend_extremes(self):
+        # lw=0 -> pure staleness; lw=1 -> pure loss (the §4.8 endpoints)
+        losses = np.array([[0.5], [0.1], [0.9], [0.3]])
+        mask = np.ones((4, 1), bool)
+        rec = np.array([9.0, 0.0, 5.0, 1.0])
+        stale = se.select_clients_arrays(losses, mask, delta=0.5,
+                                         criterion="loss_recency",
+                                         client_recency=rec, loss_weight=0.0)
+        assert list(np.nonzero(stale)[0]) == [0, 2]     # stalest two
+        lossy = se.select_clients_arrays(losses, mask, delta=0.5,
+                                         criterion="loss_recency",
+                                         client_recency=rec, loss_weight=1.0)
+        assert list(np.nonzero(lossy)[0]) == [1, 3]     # lowest-loss two
+
+    def test_random_criterion_rejected(self):
+        with pytest.raises(ValueError):
+            se.select_clients_arrays(np.ones((2, 1)), np.ones((2, 1), bool),
+                                     delta=0.5, criterion="random")
+
+    def test_empty_candidates(self):
+        got = se.select_clients_arrays(np.ones((3, 2)),
+                                       np.zeros((3, 2), bool), delta=0.5)
+        assert not got.any()
+
+
+if HAS_HYPOTHESIS:
+    class TestHypothesisParity:
+        @given(st.integers(1, 8), st.integers(1, 5),
+               st.integers(0, 10 ** 6), st.integers(1, 6))
+        @settings(max_examples=40, deadline=None)
+        def test_modality_outcomes(self, k, m, seed, gamma):
+            rng = np.random.default_rng(seed)
+            names = [f"m{i}" for i in range(m)]
+            presence = rng.random((k, m)) < 0.85
+            phi = rng.standard_normal((k, m))
+            sizes = rng.random((k, m)) * 10 ** rng.integers(0, 7)
+            t = int(rng.integers(1, 12))
+            recm = (t - rng.integers(-1, 8, (k, m)) - 1).astype(float)
+            dec = se.select_modalities_arrays(
+                phi, sizes, recm, presence, se.lexicographic_rank(names),
+                t=t, gamma=gamma, **ALPHAS)
+            for row in range(k):
+                own = [j for j in range(m) if presence[row, j]]
+                if not own:
+                    continue
+                assert dec.choices(row, names) == _reference_choices(
+                    [names[j] for j in own], phi[row, own], sizes[row, own],
+                    recm[row, own], t, gamma)
+
+        @given(st.integers(1, 10), st.floats(0.01, 1.0),
+               st.floats(0.0, 1.0), st.integers(0, 10 ** 6))
+        @settings(max_examples=40, deadline=None)
+        def test_client_outcomes(self, k, delta, lw, seed):
+            rng = np.random.default_rng(seed)
+            losses = rng.random((k, 1)) * 5
+            mask = np.ones((k, 1), bool)
+            rec = rng.integers(0, 10, k).astype(float)
+            rep = {i: float(losses[i, 0]) for i in range(k)}
+            rec_d = {i: int(rec[i]) for i in range(k)}
+            for crit in ("low_loss", "high_loss", "loss_recency"):
+                ref = select_clients(rep, delta, criterion=crit,
+                                     recency=rec_d, loss_weight=lw)
+                got = se.select_clients_arrays(losses, mask, delta=delta,
+                                               criterion=crit,
+                                               client_recency=rec,
+                                               loss_weight=lw)
+                assert [i for i in range(k) if got[i]] == ref
+
+
+class TestJointSelectArrays:
+    """The composing wrapper (Eq. 20) must match ``selection.joint_select``
+    end-to-end: same choices, same selected clients, same upload mask."""
+
+    def test_matches_reference_joint_select(self):
+        rng = np.random.default_rng(3)
+        for crit in ("low_loss", "high_loss", "loss_recency"):
+            K, M = 7, 3
+            names = ["gyro", "acc", "mic"]
+            phi = rng.standard_normal((K, M))
+            sizes = rng.random((K, M)) * 1e5
+            recm = rng.integers(0, 5, (K, M)).astype(float)
+            losses = rng.random((K, M)) * 2
+            crec = rng.integers(0, 8, K).astype(float)
+            t, gamma, delta, lw = 4, 2, 0.4, 0.3
+            dec = se.joint_select_arrays(
+                phi, sizes, recm, losses, np.ones((K, M), bool),
+                se.lexicographic_rank(names), t=t, gamma=gamma, delta=delta,
+                client_criterion=crit, client_recency=crec, loss_weight=lw,
+                **ALPHAS)
+            # reference composition over the same per-client vectors
+            prios = {k: (names, modality_priority(phi[k], sizes[k], recm[k],
+                                                  t, **ALPHAS))
+                     for k in range(K)}
+            ref_choices = {k: select_top_gamma(prios[k][1], names, gamma)
+                           for k in range(K)}
+            rep = {k: min(losses[k, names.index(m)] for m in ref_choices[k])
+                   for k in range(K)}
+            ref_sel = select_clients(rep, delta, criterion=crit,
+                                     recency={k: int(crec[k])
+                                              for k in range(K)},
+                                     loss_weight=lw)
+            for k in range(K):
+                assert dec.modality.choices(k, names) == ref_choices[k]
+            assert [k for k in range(K) if dec.client_mask[k]] == ref_sel
+            # Eq. 20: upload_mask = chosen modalities of selected clients
+            up = dec.upload_mask
+            for k in range(K):
+                expect = ({names.index(m) for m in ref_choices[k]}
+                          if k in ref_sel else set())
+                assert {j for j in range(M) if up[k, j]} == expect
+
+
+class TestRngRequired:
+    """Random draws must use the caller's generator — a silent shared
+    default makes two 'random' runs identical."""
+
+    def test_select_clients_random_requires_rng(self):
+        with pytest.raises(ValueError, match="rng"):
+            select_clients({0: 0.1, 1: 0.2}, 0.5, criterion="random")
+
+    def test_joint_select_modality_random_requires_rng(self):
+        prios = {0: (["a", "b"], np.array([0.1, 0.9]))}
+        with pytest.raises(ValueError, match="rng"):
+            joint_select(prios, {0: 0.5}, gamma=1, delta=1.0,
+                         modality_random=True)
+
+    def test_joint_select_deterministic_needs_no_rng(self):
+        prios = {0: (["a", "b"], np.array([0.1, 0.9]))}
+        res = joint_select(prios, {0: 0.5}, gamma=1, delta=1.0)
+        assert res.modality_choices == {0: ["b"]}
+
+
+class TestFederationState:
+    def _clients(self, n=24):
+        cfg = MFedMCConfig(rounds=1, local_epochs=1, seed=0)
+        return build_federation("ucihar", "iid", cfg=cfg, seed=0,
+                                samples_per_client=n)
+
+    def test_recency_matrix_eq11(self):
+        clients, spec = self._clients()
+        state = FederationState.build(clients, spec, 32, stack=False)
+        np.testing.assert_array_equal(state.recency_matrix(3),
+                                      np.full_like(state.sizes, 3))
+        mask = np.zeros_like(state.presence)
+        mask[0, 0] = True
+        state.mark_uploaded(mask, 3)
+        rec = state.recency_matrix(5)
+        assert rec[0, 0] == 1 and rec[0, 1] == 5      # t − t_m^k − 1
+
+    def test_client_staleness_matches_tracker_expression(self):
+        clients, spec = self._clients()
+        state = FederationState.build(clients, spec, 32, stack=False)
+        mask = np.zeros_like(state.presence)
+        mask[1] = state.presence[1]
+        state.mark_uploaded(mask, 2)
+        clients[1].recency.mark_uploaded(list(clients[1].modality_names), 2)
+        t = 4
+        for k, c in enumerate(clients[:3]):
+            ref = t - 1 - max(c.recency.last_upload.values(), default=-1)
+            assert state.client_staleness(t)[k] == ref
+
+    def test_sizes_match_encoder_bytes(self):
+        from repro.core.encoders import encoder_bytes
+        clients, spec = self._clients()
+        state = FederationState.build(clients, spec, 8, stack=False)
+        c = clients[0]
+        for m in c.modality_names:
+            assert state.sizes[0, state.mod_index[m]] == \
+                encoder_bytes(c.encoders[m], 8)
+
+    def test_statestore_roundtrip(self):
+        # gather == ClientStore's stack; write_back restores bit-exactly
+        clients, spec = self._clients()
+        state = FederationState.build(clients, spec, 32)
+        ref_store = ClientStore()
+        pairs = [(clients[0], clients[0].modality_names[0]),
+                 (clients[1], clients[1].modality_names[0])]
+        a = state.store.gather_encoders(pairs)
+        b = ref_store.gather_encoders(pairs)
+        for key in a:
+            np.testing.assert_array_equal(np.asarray(a[key]),
+                                          np.asarray(b[key]))
+        before = {m: {k: np.asarray(v) for k, v in
+                      clients[0].encoders[m].items()}
+                  for m in clients[0].modality_names}
+        state.write_back()
+        for m in before:
+            for k in before[m]:
+                np.testing.assert_array_equal(
+                    np.asarray(clients[0].encoders[m][k]), before[m][k])
+
+
+TOL = 1e-5
+
+
+def _run(backend, impl, dataset="ucihar", scenario="iid", n=24, **cfg_kw):
+    base = dict(rounds=2, local_epochs=1, batch_size=10, seed=0,
+                background_size=12, eval_size=12, selection_impl=impl)
+    base.update(cfg_kw)
+    cfg = MFedMCConfig(**base)
+    clients, spec = build_federation(dataset, scenario, cfg=cfg, seed=0,
+                                     samples_per_client=n)
+    server = {}
+    hist = run_federation(clients, spec, cfg, server_encoders=server,
+                          backend=backend)
+    return server, hist, clients
+
+
+def _assert_exact_decisions(h_ref, h):
+    for r_ref, r in zip(h_ref.records, h.records):
+        assert r.uploads == r_ref.uploads
+        assert r.comm_mb == r_ref.comm_mb
+
+
+def _assert_encoders_close(se_ref, se_new):
+    assert set(se_ref) == set(se_new)
+    for m in se_ref:
+        for k in se_ref[m]:
+            np.testing.assert_allclose(np.asarray(se_new[m][k]),
+                                       np.asarray(se_ref[m][k]),
+                                       atol=TOL, rtol=0, err_msg=f"{m}/{k}")
+
+
+class TestFullRunParity:
+    """run_federation under the engine == the pre-refactor loop backend:
+    selection/ledger exact, encoders within 1e-5."""
+
+    def test_engine_backend_matches_host_loop(self):
+        se_l, h_l, _ = _run("loop", "host")
+        se_e, h_e, _ = _run("engine", "engine")
+        _assert_exact_decisions(h_l, h_e)
+        _assert_encoders_close(se_l, se_e)
+
+    def test_engine_selection_on_loop_backend_is_exact(self):
+        # same backend, only the decision layer swaps: records identical
+        se_h, h_h, _ = _run("loop", "host")
+        se_e, h_e, _ = _run("loop", "engine")
+        _assert_exact_decisions(h_h, h_e)
+        for m in se_h:
+            for k in se_h[m]:
+                np.testing.assert_array_equal(np.asarray(se_e[m][k]),
+                                              np.asarray(se_h[m][k]))
+
+    def test_engine_backend_ragged_paper_strategy(self):
+        kw = dict(dataset="actionsense", scenario="natural", n=20,
+                  modality_strategy="priority", client_strategy="low_loss",
+                  batch_size=8)
+        se_l, h_l, _ = _run("loop", "host", **kw)
+        se_e, h_e, _ = _run("engine", "engine", **kw)
+        _assert_exact_decisions(h_l, h_e)
+        _assert_encoders_close(se_l, se_e)
+
+    def test_engine_backend_loss_recency(self):
+        kw = dict(client_strategy="loss_recency", loss_weight=0.4)
+        se_l, h_l, _ = _run("loop", "host", **kw)
+        se_e, h_e, _ = _run("engine", "engine", **kw)
+        _assert_exact_decisions(h_l, h_e)
+        _assert_encoders_close(se_l, se_e)
+
+    def test_engine_backend_writes_clients_back(self):
+        # after a resident run the Client objects match the batched
+        # backend's bit-exactly (same training programs, same layout)
+        _, _, cl_b = _run("batched", "engine")
+        _, _, cl_e = _run("engine", "engine")
+        for c_b, c_e in zip(cl_b, cl_e):
+            assert c_b.recency.last_upload == c_e.recency.last_upload
+            for m in c_b.modality_names:
+                for k in c_b.encoders[m]:
+                    np.testing.assert_array_equal(
+                        np.asarray(c_e.encoders[m][k]),
+                        np.asarray(c_b.encoders[m][k]))
+
+    def test_unknown_selection_impl_rejected(self):
+        with pytest.raises(ValueError):
+            _run("loop", "numpy")
+
+
+def test_selection_masks_from_matrix():
+    from repro.core.distributed import selection_masks_from_matrix
+    up = np.array([[1, 0], [0, 1], [0, 0]], bool)
+    masks = selection_masks_from_matrix(up, ["acc", "gyro"])
+    np.testing.assert_array_equal(np.asarray(masks["acc"]), [1.0, 0.0, 0.0])
+    np.testing.assert_array_equal(np.asarray(masks["gyro"]), [0.0, 1.0, 0.0])
