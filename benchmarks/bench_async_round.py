@@ -1,0 +1,167 @@
+"""Virtual-time async runtime vs synchronous barrier: simulated makespan
+and real per-round step time.
+
+    PYTHONPATH=src python -m benchmarks.bench_async_round \
+        [--ks 8,32,128] [--rounds 2] [--out BENCH_async_round.json]
+
+For each K and straggler fraction ∈ {0, 0.25} (stragglers run 10× compute),
+two virtual-time runs over the same synthetic federation:
+
+- **sync** — ``backend="async"`` in its degenerate config (deadline ∞, one
+  flush of all arrivals, no staleness discount). The parity oracle pins
+  this to ``backend="engine"`` exactly, so its makespan IS the synchronous
+  barrier's: every cycle waits for the slowest client.
+- **async** — reporting deadline at 1.5× the nominal (straggler-free)
+  cycle time, buffered aggregation every 4 arrivals, staleness discount
+  0.9. Stragglers get preempted at the deadline instead of stalling the
+  cohort.
+
+The timing model is compute-dominant (``compute_sec_per_step=0.1``: an
+edge device at ~100 ms per minibatch SGD step next to a 10 Mbps uplink), so
+a 10× compute straggler actually gates the synchronous barrier — the
+regime Table 7 and §4.9 describe. ``sim_speedup`` is sync makespan ÷ async
+makespan (> 1 when 25% of clients straggle); ``*_wall_s`` is the real
+wall-clock per simulated cycle (the scheduler's own overhead: identical
+training math, one event heap on top).
+
+Writes ``BENCH_async_round.json``; supports the ``benchmarks.run`` Row
+contract.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import List
+
+from benchmarks.bench_batched_round import synthetic_federation
+from benchmarks.common import Row, Timer
+from repro.core.rounds import MFedMCConfig, run_federation
+from repro.core.scheduler import nominal_cycle_seconds
+
+DEFAULT_ROUNDS = 2
+STRAGGLER_FACTOR = 10.0
+DEADLINE_MARGIN = 1.5
+
+
+def _cfg(straggler_fraction: float, rounds: int, **kw) -> MFedMCConfig:
+    base = dict(rounds=rounds, local_epochs=2, batch_size=16, seed=0,
+                background_size=24, eval_size=24,
+                modality_strategy="priority", client_strategy="low_loss",
+                compute_sec_per_step=0.1,
+                straggler_fraction=straggler_fraction,
+                straggler_factor=STRAGGLER_FACTOR)
+    base.update(kw)
+    return MFedMCConfig(**base)
+
+
+def _run(K: int, n: int, straggler_fraction: float, rounds: int,
+         clients=None, spec=None, **cfg_kw):
+    cfg = _cfg(straggler_fraction, rounds, **cfg_kw)
+    if clients is None:
+        clients, spec = synthetic_federation(K, n=n)
+    with Timer() as t:
+        h = run_federation(clients, spec, cfg, backend="async")
+    return h, t.us / 1e6 / rounds
+
+
+def bench_point(K: int, straggler_fraction: float, n: int = 48,
+                rounds: int = DEFAULT_ROUNDS) -> dict:
+    # the deadline admits every nominal client; only stragglers get
+    # dropped. nominal_cycle_seconds only reads shapes/step counts, so the
+    # sync run reuses the probe federation (still untrained at probe time).
+    clients, spec = synthetic_federation(K, n=n)
+    nominal = nominal_cycle_seconds(clients, spec,
+                                    _cfg(straggler_fraction, rounds))
+    h_sync, wall_sync = _run(K, n, straggler_fraction, rounds,
+                             clients=clients, spec=spec)
+    h_async, wall_async = _run(K, n, straggler_fraction, rounds,
+                               deadline_s=DEADLINE_MARGIN * nominal,
+                               buffer_size=4, staleness_discount=0.9)
+    dropped = sum(len(r.dropped) for r in h_async.records)
+    return {
+        "K": K,
+        "straggler_fraction": straggler_fraction,
+        "nominal_cycle_s": round(nominal, 4),
+        "sync_makespan_s": round(h_sync.makespan_s, 4),
+        "async_makespan_s": round(h_async.makespan_s, 4),
+        "sim_speedup": round(h_sync.makespan_s
+                             / max(h_async.makespan_s, 1e-12), 3),
+        "sync_wall_s": round(wall_sync, 4),
+        "async_wall_s": round(wall_async, 4),
+        "dropped_total": dropped,
+        "sync_final_acc": round(h_sync.final_accuracy(), 4),
+        "async_final_acc": round(h_async.final_accuracy(), 4),
+    }
+
+
+def run(fast: bool = True) -> List[Row]:
+    ks = [8] if fast else [8, 32]
+    rows: List[Row] = []
+    for K in ks:
+        for frac in (0.0, 0.25):
+            e = bench_point(K, frac)
+            rows.append(Row(
+                f"async_round/K{K}/straggle{int(frac * 100)}",
+                e["async_wall_s"] * 1e6,
+                f"sim_speedup={e['sim_speedup']};"
+                f"sync={e['sync_makespan_s']}s;"
+                f"async={e['async_makespan_s']}s"))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ks", default="8,32,128",
+                    help="comma-separated client counts")
+    ap.add_argument("--samples", type=int, default=48)
+    ap.add_argument("--rounds", type=int, default=DEFAULT_ROUNDS,
+                    help="simulated cycles per run")
+    ap.add_argument("--out", default="BENCH_async_round.json")
+    args = ap.parse_args(argv)
+    ks = [int(k) for k in args.ks.split(",")]
+
+    results = []
+    for K in ks:
+        for frac in (0.0, 0.25):
+            t0 = time.time()
+            e = bench_point(K, frac, n=args.samples, rounds=args.rounds)
+            results.append(e)
+            print(f"K={K:4d} straggle={frac:.2f} "
+                  f"sync={e['sync_makespan_s']:8.2f}s "
+                  f"async={e['async_makespan_s']:8.2f}s "
+                  f"sim-speedup={e['sim_speedup']:5.2f}x "
+                  f"dropped={e['dropped_total']:3d} "
+                  f"wall={e['async_wall_s']:.2f}s/round "
+                  f"(total {time.time() - t0:.0f}s)", flush=True)
+
+    payload = {
+        "benchmark": "async_round",
+        "config": {
+            "dataset_shapes": "ucihar (reduced)",
+            "modalities": 2,
+            "samples_per_client": args.samples,
+            "local_epochs": 2,
+            "batch_size": 16,
+            "rounds": args.rounds,
+            "compute_sec_per_step": 0.1,
+            "straggler_factor": STRAGGLER_FACTOR,
+            "deadline": f"{DEADLINE_MARGIN}x nominal cycle",
+            "buffer_size": 4,
+            "staleness_discount": 0.9,
+            "sync_is": "backend='async' degenerate config (== engine "
+                       "backend exactly; see tests/test_scheduler.py)",
+            "makespans_are": "simulated virtual-clock seconds for the "
+                             "whole run; wall_s is real seconds per cycle",
+        },
+        "results": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

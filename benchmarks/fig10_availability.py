@@ -1,4 +1,15 @@
-"""Fig. 10 — client availability / churn robustness."""
+"""Fig. 10 — client availability / churn robustness.
+
+Three availability regimes over the same federation:
+
+- Bernoulli rates (the paper's §4.9 sweep): IID per-round coin flips;
+- Markov on/off churn traces (same stationary availability as the matched
+  Bernoulli rate, but bursty: mean off-burst 1/p_join rounds) — run on the
+  virtual-time async backend;
+- deadline-based straggler dropping: 25% of clients at 10× compute, with a
+  reporting deadline that preempts them (``deadline_s``), vs the
+  synchronous barrier that waits.
+"""
 from __future__ import annotations
 
 from typing import List
@@ -20,6 +31,51 @@ def run(fast: bool = True) -> List[Row]:
         rows.append(Row(f"fig10/mfedmc_avail{int(rate*100)}", t.us,
                         f"final={h.final_accuracy():.4f};"
                         f"MB={h.comm_mb[-1]:.2f}"))
+
+    # Markov churn at the same stationary availability as the Bernoulli
+    # rates above: p_join/(p_join+p_drop) = 0.5 and 0.75, but bursty
+    # (mean off-burst 1/p_join rounds) — the regime IID flips can't model
+    churns = [("markov:0.3,0.3", "stat50"), ("markov:0.2,0.6", "stat75")]
+    if fast:
+        churns = churns[:1]
+    for trace, tag in churns:
+        cfg = cfg_for(fast, availability_trace=trace)
+        with Timer() as t:
+            h = run_mfedmc("actionsense", "natural", cfg,
+                           backend="async", samples_per_client=n)
+        rows.append(Row(f"fig10/mfedmc_{tag}_churn", t.us,
+                        f"final={h.final_accuracy():.4f};"
+                        f"MB={h.comm_mb[-1]:.2f};"
+                        f"makespan={h.makespan_s:.1f}s"))
+
+    # deadline drops: 25% stragglers at 10x compute; the reporting deadline
+    # preempts them while the degenerate config (no deadline) waits.
+    # nominal_cycle_seconds only reads shapes/step counts, so the no-
+    # deadline run reuses the probe federation (untrained at probe time).
+    from repro.core.rounds import build_federation, run_federation
+    from repro.core.scheduler import nominal_cycle_seconds
+    straggle = dict(straggler_fraction=0.25, straggler_factor=10.0,
+                    compute_sec_per_step=0.1)
+    cfg_wait = cfg_for(fast, **straggle)
+    clients, spec = build_federation("actionsense", "natural", cfg=cfg_wait,
+                                     seed=cfg_wait.seed,
+                                     samples_per_client=n)
+    nominal = nominal_cycle_seconds(clients, spec, cfg_wait)
+    with Timer() as t:
+        h_wait = run_federation(clients, spec, cfg_wait, backend="async")
+    cfg_drop = cfg_for(fast, deadline_s=1.5 * nominal, **straggle)
+    with Timer() as t2:
+        h_drop = run_mfedmc("actionsense", "natural", cfg_drop,
+                            backend="async", samples_per_client=n)
+    dropped = sum(len(r.dropped) for r in h_drop.records)
+    rows.append(Row("fig10/mfedmc_straggle_wait", t.us,
+                    f"final={h_wait.final_accuracy():.4f};"
+                    f"makespan={h_wait.makespan_s:.1f}s"))
+    rows.append(Row("fig10/mfedmc_straggle_deadline", t2.us,
+                    f"final={h_drop.final_accuracy():.4f};"
+                    f"makespan={h_drop.makespan_s:.1f}s;"
+                    f"dropped={dropped}"))
+
     if not fast:
         for rate in (1.0, 0.5):
             cfg = cfg_for(fast, availability=rate)

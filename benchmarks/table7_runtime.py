@@ -1,15 +1,56 @@
 """Table 7 — end-to-end system time: measured wall-clock training time plus
-the paper's modeled transmission time (10 Mbps uplink × 1.2 protocol × 1.5
-FEC), per method."""
+the paper's modeled transmission time, per method.
+
+Two transmission models:
+
+- ``comm_s`` — the paper's single shared 10 Mbps uplink (× 1.2 protocol ×
+  1.5 FEC) over the run's total bytes;
+- ``comm_s_hetero`` — per-client links sampled log-normally around the same
+  preset (``TransportModel.sample_links``, σ=0.5 ≈ 4× p10–p90 spread).
+  Clients upload in parallel, so each round costs the *slowest uploading
+  link* its bytes — the synchronous-barrier effect a single shared link
+  cannot show (the slow-tail link, not the mean, gates the round).
+"""
 from __future__ import annotations
 
 import time
 from typing import List
 
+import numpy as np
+
 from benchmarks.common import Row, cfg_for, samples_for
 from repro.core.aggregation import IOT_UPLINK
 from repro.core.baselines import run_baseline
-from repro.core.rounds import run_mfedmc
+from repro.core.rounds import RunHistory, run_mfedmc
+
+LINK_SIGMA = 0.5
+
+
+def hetero_comm_seconds(h: RunHistory, links: list) -> float:
+    """Σ over rounds of the slowest uploading client's transmission time.
+
+    Per-round bytes come from the ledger deltas; a round's bytes split
+    evenly over its recorded uploads (full-upload baselines record none —
+    then every client ships the same payload and the slowest link gates).
+    ``links`` must cover every client id the history records."""
+    total, prev = 0.0, 0.0
+    K = len(links)
+    for r in h.records:
+        rb = r.comm_mb * 1e6 - prev
+        prev = r.comm_mb * 1e6
+        if rb <= 0:
+            continue
+        if r.uploads:
+            share = rb / len(r.uploads)
+            per_client: dict = {}
+            for cid, _m in r.uploads:
+                assert cid < K, f"client {cid} has no sampled link"
+                per_client[cid] = per_client.get(cid, 0.0) + share
+            total += max(links[cid].seconds(b)
+                         for cid, b in per_client.items())
+        else:
+            total += max(link.seconds(rb / K) for link in links)
+    return total
 
 
 def run(fast: bool = True) -> List[Row]:
@@ -28,14 +69,29 @@ def run(fast: bool = True) -> List[Row]:
             "mmfed", "actionsense", "natural", c, samples_per_client=n)
         systems["harmony"] = lambda c: run_baseline(
             "harmony", "actionsense", "natural", c, samples_per_client=n)
+    runs = []
     for name, fn in systems.items():
         cfg = cfg_for(fast)
         t0 = time.perf_counter()
         h = fn(cfg)
-        train_s = time.perf_counter() - t0
+        runs.append((name, h, time.perf_counter() - t0))
+    # one heterogeneous link population shared by every system, sized to
+    # the federation every system actually runs (the same partition +
+    # min-samples filter run_mfedmc/run_baseline apply), so the comparison
+    # varies only the method, not the network draw
+    from repro.data.partition import make_federation
+    n_clients = len([d for d in make_federation("actionsense", "natural",
+                                                seed=0,
+                                                samples_per_client=n)
+                     if d.num_samples > 1])
+    links = IOT_UPLINK.sample_links(np.random.default_rng(0), n_clients,
+                                    sigma=LINK_SIGMA)
+    for name, h, train_s in runs:
         comm_s = IOT_UPLINK.seconds(h.comm_mb[-1] * 1e6)
+        het_s = hetero_comm_seconds(h, links)
         rows.append(Row(
             f"table7/{name}", train_s * 1e6,
             f"train_s={train_s:.1f};comm_s={comm_s:.1f};"
-            f"total_s={train_s + comm_s:.1f};MB={h.comm_mb[-1]:.2f}"))
+            f"comm_s_hetero={het_s:.1f};"
+            f"total_s={train_s + het_s:.1f};MB={h.comm_mb[-1]:.2f}"))
     return rows

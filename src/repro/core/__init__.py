@@ -21,6 +21,13 @@ Layers:
     client.py      — client state + Algorithm 1 local phases
     rounds.py      — the federation loop with every §4 ablation knob
                      (backend='loop' reference / 'batched' fast path)
+    timing.py      — virtual-time models: compute time per shape family,
+                     heterogeneous uplinks, availability traces (§4.9
+                     Bernoulli + Markov churn)
+    scheduler.py   — event-driven async runtime (backend='async'):
+                     virtual clock, buffered staleness-aware aggregation,
+                     deadline straggler dropping; degenerate config
+                     reduces exactly to the sync engine
     batched.py     — padded, mask-weighted vmapped local learning for
                      ragged federations (the simulator's hot-path backend;
                      same [K, M] population layout the mesh shards)
@@ -60,6 +67,9 @@ from repro.core.selection import (RecencyTracker, SelectionResult,
                                   joint_select, minmax_normalize,
                                   modality_priority, select_clients,
                                   select_top_gamma)
+from repro.core.scheduler import (Event, EventHeap, EventKind,
+                                  nominal_cycle_seconds,
+                                  run_async_federation)
 from repro.core.selection_engine import (EngineDecision, ModalityDecision,
                                          joint_select_arrays,
                                          lexicographic_rank,
@@ -67,6 +77,9 @@ from repro.core.selection_engine import (EngineDecision, ModalityDecision,
                                          select_modalities_arrays)
 from repro.core.shapley import (exact_shapley, exact_shapley_population,
                                 sampled_shapley, subset_masks)
+from repro.core.timing import (BernoulliTrace, ComputeModel, MarkovTrace,
+                               make_trace, resolve_trace,
+                               sample_straggler_multipliers)
 
 __all__ = [
     "CommLedger", "ICI_LINK", "IOT_UPLINK", "TransportModel",
@@ -90,4 +103,7 @@ __all__ = [
     "ClientStore", "FederationState", "StateStore", "EngineDecision",
     "ModalityDecision", "joint_select_arrays", "lexicographic_rank",
     "select_clients_arrays", "select_modalities_arrays",
+    "Event", "EventHeap", "EventKind", "nominal_cycle_seconds",
+    "run_async_federation", "BernoulliTrace", "ComputeModel", "MarkovTrace",
+    "make_trace", "resolve_trace", "sample_straggler_multipliers",
 ]

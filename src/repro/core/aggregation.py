@@ -112,6 +112,18 @@ class TransportModel:
         return (n_bytes * self.protocol_overhead * self.fec_overhead
                 / (self.bandwidth_bps / 8.0))
 
+    def sample_links(self, rng: np.random.Generator, k: int,
+                     sigma: float = 0.5) -> list["TransportModel"]:
+        """K heterogeneous per-client links: bandwidth drawn log-normally
+        around this preset (mean-preserving: ln-mean −σ²/2), protocol/FEC
+        overheads shared. σ≈0.5 spans roughly a 4× p10–p90 spread — the
+        uplink diversity a single shared link (the historical Table 7
+        model) cannot express."""
+        mult = rng.lognormal(-0.5 * sigma * sigma, sigma, k)
+        return [TransportModel(self.bandwidth_bps * float(m),
+                               self.protocol_overhead, self.fec_overhead)
+                for m in mult]
+
 
 IOT_UPLINK = TransportModel()
 # datacenter cross-pod ICI: 50 GB/s/link, negligible protocol overhead

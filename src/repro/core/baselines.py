@@ -33,6 +33,7 @@ import numpy as np
 from repro.core.aggregation import CommLedger
 from repro.core.encoders import LSTM_HIDDEN, _glorot
 from repro.core.rounds import MFedMCConfig, RoundRecord, RunHistory
+from repro.core.timing import resolve_trace
 from repro.data.registry import DatasetSpec, get_dataset_spec
 from repro.data.synthetic import ClientData
 
@@ -249,12 +250,15 @@ def run_baseline(name: str, dataset: str, scenario: str = "natural",
     component_names = (["head"] + [f"trunks/{m}" for m in spec.modality_names]
                        if arch.fusion_level == "feature" else ["head", "trunk"])
 
+    trace = resolve_trace(cfg)
     for t in range(1, cfg.rounds + 1):
-        if cfg.availability < 1.0:
-            active = [i for i in range(len(client_datasets))
-                      if rng.random() < cfg.availability] or [0]
-        else:
-            active = list(range(len(client_datasets)))
+        # §4.9 availability through the same trace abstraction as MFedMC
+        # (Bernoulli rate, Markov churn, ...). When nobody reports, the
+        # round is an explicit empty-upload round — no silently forced
+        # client 0 — matching run_federation's semantics: no training, no
+        # uploads, evaluate the current models.
+        avail_mask = trace.step(rng, len(client_datasets))
+        active = [i for i in range(len(client_datasets)) if avail_mask[i]]
         # ---- local training ----
         for i in active:
             train, _ = splits[i]

@@ -151,9 +151,20 @@ class FederationState:
     fusion_buckets: Dict[int, _FusionBucket] = field(default_factory=dict)
     fusion_slot: Dict[int, Tuple[int, int]] = field(default_factory=dict)
     store: StateStore = field(init=False)
+    # --- virtual-time runtime state (backend="async") ------------------
+    # last_upload is Eq. 11 in *cycle* indices; these three mirror it on
+    # the scheduler's virtual clock so recency and the selection engine can
+    # consume simulated time instead of round counters.
+    model_version: np.ndarray = field(init=False)   # [K] i64 global version
+    arrival_time: np.ndarray = field(init=False)    # [K] f64 last arrival
+    last_upload_time: np.ndarray = field(init=False)  # [K, M] f64 (-inf)
 
     def __post_init__(self):
         self.store = StateStore(self)
+        K, M = self.presence.shape
+        self.model_version = np.zeros(K, np.int64)
+        self.arrival_time = np.full(K, -np.inf, np.float64)
+        self.last_upload_time = np.full((K, M), -np.inf, np.float64)
 
     # ------------------------------------------------------------------
     @classmethod
@@ -224,6 +235,35 @@ class FederationState:
         the §4.8 loss_recency criterion's per-client staleness."""
         last = np.where(self.presence, self.last_upload, -1).max(axis=1)
         return (t - 1 - last).astype(np.float64)
+
+    # -- virtual-clock mirrors (backend="async") -----------------------
+    def mark_uploaded_time(self, upload_mask: np.ndarray, now: float) -> None:
+        """Stamp this flush's completed uploads on the virtual clock and
+        refresh the per-client arrival times (the [K] column the async
+        runtime's staleness/recency views read)."""
+        self.last_upload_time = np.where(upload_mask, now,
+                                         self.last_upload_time)
+        arrived = upload_mask.any(axis=1)
+        self.arrival_time = np.where(arrived, now, self.arrival_time)
+
+    def recency_matrix_time(self, now: float, scale: float,
+                            t: int) -> np.ndarray:
+        """Eq. 11 on the virtual clock: elapsed seconds since each pair's
+        last completed upload, expressed in units of ``scale`` (the mean
+        cycle duration so far) so magnitudes stay comparable to the
+        round-index recency Eq. 12 normalizes by t. Never-uploaded pairs
+        get the round-mode maximum t (= t − (−1) − 1)."""
+        rec = (now - self.last_upload_time) / max(scale, 1e-12)
+        return np.where(np.isfinite(rec), rec, float(t)).astype(np.float64)
+
+    def client_staleness_time(self, now: float, scale: float,
+                              t: int) -> np.ndarray:
+        """[K] per-client staleness on the virtual clock (loss_recency's
+        time-mode criterion); never-arrived clients get the round-mode
+        maximum t."""
+        stale = (now - self.arrival_time) / max(scale, 1e-12)
+        return np.where(np.isfinite(stale), stale, float(t)).astype(
+            np.float64)
 
     def deploy_global(self, modality: str, rows: Sequence[int],
                       agg: Dict) -> None:

@@ -31,6 +31,14 @@ presence) live in a :class:`~repro.core.federation_state.FederationState`;
 per shape family, gathered/scattered per phase — so a round never restacks
 or unstacks ``Client`` pytrees (see ``docs/ARCHITECTURE.md``).
 
+§4.9 availability is trace-driven for every backend
+(``repro.core.timing``: Bernoulli rates, Markov on/off churn), and
+``backend="async"`` runs the whole loop on an event-driven virtual clock
+(``repro.core.scheduler``): per-client compute/uplink time models,
+staleness-aware buffered aggregation, and deadline-based straggler
+dropping, with a degenerate config that reduces exactly to the
+synchronous engine backend.
+
 Returns a :class:`RunHistory` with per-round accuracy, cumulative MB, and
 mean Shapley per modality (Fig. 5's data).
 """
@@ -55,6 +63,7 @@ from repro.core.selection import (modality_priority, select_clients,
                                   select_top_gamma)
 from repro.core.selection_engine import (select_clients_arrays,
                                          select_modalities_arrays)
+from repro.core.timing import resolve_trace
 from repro.data.registry import DatasetSpec, get_dataset_spec
 from repro.data.synthetic import ClientData
 
@@ -82,6 +91,27 @@ class MFedMCConfig:
     quantize_bits: int = 32                # 32 = no quantization (§4.10)
     error_feedback: bool = False           # client-held EF residuals
     availability: float = 1.0              # client availability rate (§4.9)
+    # -- virtual-time runtime (backend="async"; repro.core.scheduler) ---
+    availability_trace: Optional[object] = None  # trace spec/object (§4.9
+                                           # churn: "markov:p_drop,p_join",
+                                           # "bernoulli:rate"); None falls
+                                           # back to Bernoulli(availability)
+    deadline_s: Optional[float] = None     # per-cycle reporting deadline on
+                                           # the virtual clock (None = ∞:
+                                           # never drop a straggler)
+    buffer_size: Optional[int] = None      # aggregate every N client
+                                           # arrivals (None = all arrivals,
+                                           # one flush per cycle)
+    staleness_discount: float = 1.0        # buffered-flush weight ×=
+                                           # d**staleness (1.0 = off)
+    recency_unit: str = "round"            # round | time — Eq. 11/§4.8 on
+                                           # cycle indices or virtual clock
+    compute_sec_per_step: float = 1e-3     # ComputeModel base step cost
+    link_preset: str = "iot"               # iot | ici uplink preset
+    link_sigma: float = 0.0                # log-normal per-client bandwidth
+                                           # spread (0 = one shared link)
+    straggler_fraction: float = 0.0        # clients at straggler_factor×
+    straggler_factor: float = 10.0         # compute-time multiplier
     # per-client uplink restriction: client id -> allowed modality names
     allowed_modalities: Optional[Dict[int, Set[str]]] = None
     comm_budget_mb: Optional[float] = None # stop once exceeded
@@ -97,11 +127,21 @@ class RoundRecord:
     comm_mb: float
     uploads: List[Tuple[int, str]]
     shapley: Dict[str, float]              # mean |φ| per modality this round
+    # -- virtual-time runtime fields (zero/empty on sync backends) ------
+    sim_time: float = 0.0                  # virtual clock at cycle end (s)
+    flushes: int = 0                       # buffered-aggregation flushes
+    dropped: List[int] = field(default_factory=list)  # deadline-dropped ids
 
 
 @dataclass
 class RunHistory:
     records: List[RoundRecord] = field(default_factory=list)
+
+    @property
+    def makespan_s(self) -> float:
+        """Simulated wall-clock of the whole run (async backend; 0.0 on
+        sync backends, which do not advance a virtual clock)."""
+        return self.records[-1].sim_time if self.records else 0.0
 
     @property
     def accuracies(self) -> np.ndarray:
@@ -197,11 +237,14 @@ def build_federation(dataset: str, scenario: str = "natural", *,
 def _engine_modality_choices(state: FederationState, cand_ids: List[int],
                              names_by_cid: Dict[int, List[str]],
                              phi_by_name: Dict[int, Dict[str, float]],
-                             t: int, cfg: MFedMCConfig
+                             t: int, cfg: MFedMCConfig,
+                             recency_matrix: Optional[np.ndarray] = None
                              ) -> Dict[int, List[str]]:
     """Eqs. 12–16 for the whole candidate population in one device program
     (``selection_engine``) — outcome-identical to the per-client numpy
-    block (``selection_impl="host"``)."""
+    block (``selection_impl="host"``). ``recency_matrix`` overrides the
+    Eq. 11 round-index recency with the async runtime's virtual-clock
+    [K, M] view (``recency_unit="time"``)."""
     n, M = len(cand_ids), len(state.modalities)
     phi = np.zeros((n, M))
     sizes = np.zeros((n, M))
@@ -210,7 +253,8 @@ def _engine_modality_choices(state: FederationState, cand_ids: List[int],
     for i, cid in enumerate(cand_ids):
         k = state.row_of[cid]
         sizes[i] = state.sizes[k]
-        recency[i] = t - state.last_upload[k] - 1
+        recency[i] = (t - state.last_upload[k] - 1
+                      if recency_matrix is None else recency_matrix[k])
         for m in names_by_cid[cid]:
             mi = state.mod_index[m]
             presence[i, mi] = True
@@ -224,9 +268,13 @@ def _engine_modality_choices(state: FederationState, cand_ids: List[int],
 
 def _engine_client_selection(state: FederationState, cands: List[Client],
                              choices: Dict[int, List[str]], t: int,
-                             cfg: MFedMCConfig) -> List[int]:
+                             cfg: MFedMCConfig,
+                             client_staleness: Optional[np.ndarray] = None
+                             ) -> List[int]:
     """Eqs. 17–19 as one device rank program — outcome-identical to
-    ``selection.select_clients`` on the representative losses."""
+    ``selection.select_clients`` on the representative losses.
+    ``client_staleness`` overrides the round-index §4.8 staleness with the
+    async runtime's virtual-clock [K] view (``recency_unit="time"``)."""
     cand_ids = sorted(c.client_id for c in cands)
     n, M = len(cand_ids), len(state.modalities)
     rows = [state.row_of[cid] for cid in cand_ids]
@@ -237,12 +285,128 @@ def _engine_client_selection(state: FederationState, cands: List[Client],
             mask[i, state.mod_index[m]] = True
     crec = None
     if cfg.client_strategy == "loss_recency":
-        stale = state.client_staleness(t)
+        stale = (state.client_staleness(t) if client_staleness is None
+                 else client_staleness)
         crec = np.array([stale[state.row_of[cid]] for cid in cand_ids])
     sel = select_clients_arrays(
         losses, mask, delta=cfg.delta, criterion=cfg.client_strategy,
         client_recency=crec, loss_weight=cfg.loss_weight)
     return [cid for i, cid in enumerate(cand_ids) if sel[i]]
+
+
+def _joint_selection(avail: List[Client], state: FederationState,
+                     cfg: MFedMCConfig, rng: np.random.Generator, t: int,
+                     qbits: int, batched: bool, store, *,
+                     recency_matrix: Optional[np.ndarray] = None,
+                     client_staleness: Optional[np.ndarray] = None
+                     ) -> Tuple[Dict[int, List[str]], List[int],
+                                Dict[str, List[float]]]:
+    """Algorithm 1 steps 2–3 (modality selection §3.2, client selection
+    §3.3) over one round's available cohort.
+
+    Shared verbatim by the synchronous backends and the virtual-time async
+    runtime (``repro.core.scheduler``) so RNG consumption and selection
+    outcomes cannot drift between them — the degenerate-async parity oracle
+    depends on it. The optional ``recency_matrix``/``client_staleness``
+    overrides feed Eq. 11 and §4.8 from the virtual clock instead of round
+    indices (``recency_unit="time"``; engine selection only).
+
+    Returns ``(choices, selected, round_shapley)``: per-client top-γ
+    modality lists, the server-selected client ids, and the raw |φ| samples
+    per modality for the round record."""
+    # -- modality selection (§3.2) --------------------------------------
+    round_shapley: Dict[str, List[float]] = {}
+    choices: Dict[int, List[str]] = {}
+    names_by_cid: Dict[int, List[str]] = {}
+    engine_sel = cfg.selection_impl == "engine"
+    for c in avail:
+        names = list(c.modality_names)
+        if cfg.allowed_modalities is not None:
+            allowed = cfg.allowed_modalities.get(c.client_id)
+            names = [m for m in names
+                     if allowed is None or m in allowed]
+        if names:
+            names_by_cid[c.client_id] = names
+    phi_by_cid = None
+    if cfg.modality_strategy not in ("all", "random") and batched:
+        # one vmapped 2^M Shapley enumeration for the population;
+        # draws the per-client eval/background subsets in the exact
+        # client order the loop backend would (RNG parity)
+        from repro.core.batched import batched_shapley_values
+        shap_clients = [c for c in avail
+                        if c.client_id in names_by_cid]
+        if shap_clients:
+            phi_by_cid = batched_shapley_values(
+                shap_clients, cfg.background_size, cfg.eval_size,
+                rng, store=store)
+    phi_by_name: Dict[int, Dict[str, float]] = {}
+    for c in avail:
+        if c.client_id not in names_by_cid:
+            continue
+        names = names_by_cid[c.client_id]
+        if cfg.modality_strategy == "all":
+            choices[c.client_id] = names
+        elif cfg.modality_strategy == "random":
+            g = min(cfg.gamma, len(names))
+            choices[c.client_id] = sorted(
+                rng.choice(names, size=g, replace=False).tolist())
+        else:  # priority (paper)
+            phi = (phi_by_cid[c.client_id]
+                   if phi_by_cid is not None
+                   else c.shapley_values(cfg.background_size,
+                                         cfg.eval_size, rng))
+            phi_named = dict(zip(c.modality_names, phi))
+            phi_by_name[c.client_id] = phi_named
+            for m, p in phi_named.items():
+                round_shapley.setdefault(m, []).append(
+                    abs(float(p)))
+            if engine_sel:
+                continue        # ranked below, whole population
+            # Eq. 10's cost criterion ranks what the uplink
+            # actually ships: exact compressed wire bytes at the
+            # round's precision
+            sizes = c.encoder_sizes(qbits)
+            idx = [list(c.modality_names).index(m) for m in names]
+            rec = c.recency.recency_vector(names, t)
+            prio = modality_priority(
+                np.array([phi[i] for i in idx]), sizes[idx], rec,
+                t, cfg.alpha_s, cfg.alpha_c, cfg.alpha_r)
+            choices[c.client_id] = select_top_gamma(
+                prio, names, cfg.gamma)
+    if engine_sel and phi_by_name:
+        choices.update(_engine_modality_choices(
+            state, sorted(phi_by_name), names_by_cid, phi_by_name,
+            t, cfg, recency_matrix=recency_matrix))
+
+    # -- client selection (§3.3) ----------------------------------------
+    cands = [c for c in avail if c.client_id in choices]
+    if not cands:
+        # No client has a selectable modality this round (e.g. an
+        # allowed_modalities config that bars every candidate):
+        # record an explicit empty-upload round instead of
+        # selecting from an empty candidate set.
+        selected: List[int] = []
+    elif cfg.client_strategy == "all":
+        selected = [c.client_id for c in cands]
+    elif engine_sel and cfg.client_strategy != "random":
+        selected = _engine_client_selection(
+            state, cands, choices, t, cfg,
+            client_staleness=client_staleness)
+    else:
+        # representative loss = min over the selected modalities
+        losses = {c.client_id: min(c.losses[m]
+                                   for m in choices[c.client_id])
+                  for c in cands}
+        crit = cfg.client_strategy
+        client_rec: Dict[int, int] = {}
+        if crit == "loss_recency":
+            for c in cands:
+                client_rec[c.client_id] = t - 1 - max(
+                    c.recency.last_upload.values(), default=-1)
+        selected = select_clients(
+            losses, cfg.delta, criterion=crit, recency=client_rec,
+            loss_weight=cfg.loss_weight, rng=rng)
+    return choices, selected, round_shapley
 
 
 def run_federation(clients: List[Client], spec: DatasetSpec,
@@ -267,6 +431,14 @@ def run_federation(clients: List[Client], spec: DatasetSpec,
         Eq. 21 and deployment gather/scatter rows on device), and the
         ``Client`` objects are written back once at the end. Selection and
         RNG behavior are identical to the other backends.
+      - ``"async"``   — the engine backend on an event-driven virtual
+        clock (``repro.core.scheduler``): DISPATCH → LOCAL_DONE →
+        UPLOAD_DONE events from per-client compute/uplink models,
+        availability traces, buffered staleness-discounted aggregation,
+        and a reporting deadline that drops stragglers. The degenerate
+        config (``deadline_s=None``, ``buffer_size=None``,
+        ``staleness_discount=1.0``) matches ``"engine"`` exactly on
+        uploads/ledger/selection and ≤1e-5 on encoders.
 
     All backends route joint selection through the shared decision layer:
     deterministic criteria run as device ``[K, M]`` programs
@@ -281,7 +453,7 @@ def run_federation(clients: List[Client], spec: DatasetSpec,
     (:func:`aggregate_uploads`); the ledger records exact wire bytes
     (bit-packed codes + per-tensor scale/zero metadata).
     """
-    if backend not in ("loop", "batched", "engine"):
+    if backend not in ("loop", "batched", "engine", "async"):
         raise ValueError(f"unknown backend {backend!r}")
     if cfg.selection_impl not in ("engine", "host"):
         raise ValueError(f"unknown selection_impl {cfg.selection_impl!r}")
@@ -289,6 +461,27 @@ def run_federation(clients: List[Client], spec: DatasetSpec,
     if qbits < 32 and not 1 <= qbits <= 16:
         raise ValueError(f"quantize_bits={qbits} unsupported: use 1..16 "
                          "(quantized) or >= 32 (full precision)")
+    if cfg.recency_unit not in ("round", "time"):
+        raise ValueError(f"unknown recency_unit {cfg.recency_unit!r}")
+    if not 0.0 < cfg.staleness_discount <= 1.0:
+        raise ValueError("staleness_discount must be in (0, 1]")
+    if backend == "async":
+        from repro.core.scheduler import run_async_federation
+        return run_async_federation(clients, spec, cfg, verbose=verbose,
+                                    server_encoders=server_encoders,
+                                    quantize_bits=qbits)
+    # the async-only aggregation-semantics knobs must not be silently
+    # dropped: a sync run with a deadline configured is not "the same run
+    # without stragglers", it is a different experiment
+    if cfg.recency_unit == "time":
+        raise ValueError('recency_unit="time" needs the virtual clock: '
+                         'use backend="async"')
+    if cfg.deadline_s is not None or cfg.buffer_size is not None or \
+            cfg.staleness_discount != 1.0:
+        raise ValueError(
+            "deadline_s/buffer_size/staleness_discount only take effect on "
+            f'the virtual clock — use backend="async" (got backend='
+            f'{backend!r})')
     rng = np.random.default_rng(cfg.seed)
     ledger = CommLedger()
     history = RunHistory()
@@ -301,18 +494,26 @@ def run_federation(clients: List[Client], spec: DatasetSpec,
     # run's precision, presence, losses); resident runs also stack params
     state = FederationState.build(clients, spec, qbits, stack=resident)
     store = state.store if resident else ClientStore()
-    engine_sel = cfg.selection_impl == "engine"
 
+    trace = resolve_trace(cfg)
     try:
         for t in range(1, cfg.rounds + 1):
-            # -- client availability (§4.9) ------------------------------
-            if cfg.availability < 1.0:
-                avail = [c for c in clients
-                         if rng.random() < cfg.availability]
-                if not avail:
-                    avail = [clients[rng.integers(len(clients))]]
-            else:
-                avail = clients
+            # -- client availability (§4.9, trace-driven) ----------------
+            avail_mask = trace.step(rng, len(clients))
+            avail = [c for k, c in enumerate(clients) if avail_mask[k]]
+            if not avail:
+                # nobody reported this round: an explicit empty-upload
+                # round (shared semantics with the baselines) — no
+                # training, no uploads, accuracy of the current models
+                if batched:
+                    from repro.core.batched import batched_evaluate
+                    acc, loss = batched_evaluate(clients, store=store)
+                else:
+                    acc, loss = _weighted_accuracy(clients)
+                ledger.rounds = t
+                history.records.append(RoundRecord(
+                    t, acc, loss, ledger.megabytes, [], {}))
+                continue
 
             # -- local learning ------------------------------------------
             if batched:
@@ -329,96 +530,9 @@ def run_federation(clients: List[Client], spec: DatasetSpec,
                 for m, v in c.losses.items():
                     state.losses[k, state.mod_index[m]] = v
 
-            # -- modality selection (§3.2) --------------------------------
-            round_shapley: Dict[str, List[float]] = {}
-            choices: Dict[int, List[str]] = {}
-            names_by_cid: Dict[int, List[str]] = {}
-            for c in avail:
-                names = list(c.modality_names)
-                if cfg.allowed_modalities is not None:
-                    allowed = cfg.allowed_modalities.get(c.client_id)
-                    names = [m for m in names
-                             if allowed is None or m in allowed]
-                if names:
-                    names_by_cid[c.client_id] = names
-            phi_by_cid = None
-            if cfg.modality_strategy not in ("all", "random") and batched:
-                # one vmapped 2^M Shapley enumeration for the population;
-                # draws the per-client eval/background subsets in the exact
-                # client order the loop backend would (RNG parity)
-                from repro.core.batched import batched_shapley_values
-                shap_clients = [c for c in avail
-                                if c.client_id in names_by_cid]
-                if shap_clients:
-                    phi_by_cid = batched_shapley_values(
-                        shap_clients, cfg.background_size, cfg.eval_size,
-                        rng, store=store)
-            phi_by_name: Dict[int, Dict[str, float]] = {}
-            for c in avail:
-                if c.client_id not in names_by_cid:
-                    continue
-                names = names_by_cid[c.client_id]
-                if cfg.modality_strategy == "all":
-                    choices[c.client_id] = names
-                elif cfg.modality_strategy == "random":
-                    g = min(cfg.gamma, len(names))
-                    choices[c.client_id] = sorted(
-                        rng.choice(names, size=g, replace=False).tolist())
-                else:  # priority (paper)
-                    phi = (phi_by_cid[c.client_id]
-                           if phi_by_cid is not None
-                           else c.shapley_values(cfg.background_size,
-                                                 cfg.eval_size, rng))
-                    phi_named = dict(zip(c.modality_names, phi))
-                    phi_by_name[c.client_id] = phi_named
-                    for m, p in phi_named.items():
-                        round_shapley.setdefault(m, []).append(
-                            abs(float(p)))
-                    if engine_sel:
-                        continue        # ranked below, whole population
-                    # Eq. 10's cost criterion ranks what the uplink
-                    # actually ships: exact compressed wire bytes at the
-                    # round's precision
-                    sizes = c.encoder_sizes(qbits)
-                    idx = [list(c.modality_names).index(m) for m in names]
-                    rec = c.recency.recency_vector(names, t)
-                    prio = modality_priority(
-                        np.array([phi[i] for i in idx]), sizes[idx], rec,
-                        t, cfg.alpha_s, cfg.alpha_c, cfg.alpha_r)
-                    choices[c.client_id] = select_top_gamma(
-                        prio, names, cfg.gamma)
-            if engine_sel and phi_by_name:
-                choices.update(_engine_modality_choices(
-                    state, sorted(phi_by_name), names_by_cid, phi_by_name,
-                    t, cfg))
-
-            # -- client selection (§3.3) ----------------------------------
-            cands = [c for c in avail if c.client_id in choices]
-            if not cands:
-                # No client has a selectable modality this round (e.g. an
-                # allowed_modalities config that bars every candidate):
-                # record an explicit empty-upload round instead of
-                # selecting from an empty candidate set.
-                selected = []
-            elif cfg.client_strategy == "all":
-                selected = [c.client_id for c in cands]
-            elif engine_sel and cfg.client_strategy != "random":
-                selected = _engine_client_selection(state, cands, choices,
-                                                    t, cfg)
-            else:
-                # representative loss = min over the selected modalities
-                losses = {c.client_id: min(c.losses[m]
-                                           for m in choices[c.client_id])
-                          for c in cands}
-                crit = cfg.client_strategy
-                client_rec: Dict[int, int] = {}
-                if crit == "loss_recency":
-                    for c in cands:
-                        client_rec[c.client_id] = t - 1 - max(
-                            c.recency.last_upload.values(), default=-1)
-                selected = select_clients(
-                    losses, cfg.delta, criterion=crit, recency=client_rec,
-                    loss_weight=cfg.loss_weight, rng=rng)
+            # -- joint selection (§3.2 + §3.3, shared with async) ---------
+            choices, selected, round_shapley = _joint_selection(
+                avail, state, cfg, rng, t, qbits, batched, store)
 
             # -- upload + server aggregation (Eq. 21, §4.10 uplink) -------
             by_id = {c.client_id: c for c in clients}

@@ -1,0 +1,379 @@
+"""Event-driven virtual-time federation runtime (``backend="async"``).
+
+The synchronous backends collapse a round into an instantaneous barrier:
+every available client trains, uploads, and aggregates "at once", and §4.9
+availability is a per-round coin flip. This module gives the simulator a
+clock. Each cycle is simulated as a stream of events on a heap:
+
+    DISPATCH(k)     server hands client k the current global encoders and
+                    it starts Local Learning (implicit at the cycle start
+                    τ — only completion events need heap scheduling)
+    LOCAL_DONE(k)   k finishes E·⌈n/B⌉ SGD steps per owned modality plus
+                    Stage-#1 fusion — τ + T_comp(k), where T_comp comes
+                    from the client's shape family and its straggler
+                    multiplier (``repro.core.timing.ComputeModel``)
+    UPLOAD_DONE(k)  k's selected encoders finish transmitting — LOCAL_DONE
+                    + exact ledger wire bytes ÷ k's sampled link bandwidth
+                    (``TransportModel.sample_links``)
+
+Events pop in deterministic ``(time, kind, client id)`` order. The server
+runs **staleness-aware buffered aggregation**: arrivals accumulate in a
+buffer that flushes every ``buffer_size`` client arrivals and once at cycle
+end. Each flush runs the existing stacked Eq. 21 path
+(``aggregate_uploads`` → ``aggregate_stacked`` / ``aggregate_quantized``)
+over its buffer with per-upload weight
+``n_k · staleness_discount^staleness`` — staleness counts the server
+versions (flushes) that landed between the client's dispatch and its
+arrival — and merges into the cycle's running weighted mean, so the
+cycle's final global encoder is the staleness-discounted Eq. 21 average
+over *all* of its arrivals while intermediate versions exist on the
+virtual clock between flushes. A finite reporting ``deadline_s`` preempts
+the cycle: uploads that would land after the deadline are *dropped* (the
+FedAvg-with-reporting-deadline model — the abandoned payload ships no
+bytes and marks no recency), and the next cycle dispatches at the
+deadline.
+
+**Reduction-to-sync guarantee.** With ``deadline_s=None`` (∞),
+``buffer_size=None`` (one flush of all arrivals) and
+``staleness_discount=1.0``, every selected upload arrives, lands in a
+single flush with weight exactly ``n_k``, and the cycle barrier equals the
+synchronous round: the run matches ``backend="engine"`` *exactly* on
+uploads, ledger, and selection, and to float tolerance on encoders — the
+parity oracle ``tests/test_scheduler.py`` pins. This holds because the
+actual numerics never moved: training, joint selection
+(``rounds._joint_selection``) and aggregation are the same code the sync
+backends run, in the same RNG order; the scheduler only decides *when*
+results take effect, and timing randomness (links, stragglers) draws from
+a separate generator that never touches the round stream.
+
+Virtual-time state lives in the :class:`~repro.core.federation_state.
+FederationState` extensions (``model_version``, ``arrival_time``,
+``last_upload_time``); ``recency_unit="time"`` feeds Eq. 11 recency and the
+§4.8 loss_recency staleness from that clock (in units of the mean cycle
+duration) instead of round indices.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+from enum import IntEnum
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import CommLedger
+from repro.core.client import Client
+from repro.core.federation_state import FederationState
+from repro.core.timing import (ComputeModel, resolve_links, resolve_trace,
+                               sample_straggler_multipliers)
+
+
+class EventKind(IntEnum):
+    """Lifecycle of one client's participation in a cycle. The integer
+    values order simultaneous events: a dispatch sorts before a completion
+    at the same instant, and a compute completion before an upload."""
+    DISPATCH = 0
+    LOCAL_DONE = 1
+    UPLOAD_DONE = 2
+
+
+@dataclass(frozen=True)
+class Event:
+    time: float
+    kind: EventKind
+    client_id: int
+
+    @property
+    def sort_key(self) -> Tuple[float, int, int]:
+        return (self.time, int(self.kind), self.client_id)
+
+
+class EventHeap:
+    """Min-heap of :class:`Event` with the deterministic total order
+    ``(time, kind, client id)`` — equal-time events always pop in the same
+    order, so a simulated run is reproducible bit-for-bit."""
+
+    def __init__(self):
+        self._heap: List[Tuple[float, int, int]] = []
+
+    def push(self, time: float, kind: EventKind, client_id: int) -> None:
+        heapq.heappush(self._heap, (float(time), int(kind), int(client_id)))
+
+    def pop(self) -> Event:
+        time, kind, cid = heapq.heappop(self._heap)
+        return Event(time, EventKind(kind), cid)
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)
+
+
+# ---------------------------------------------------------------------------
+# per-client timing for one cycle
+# ---------------------------------------------------------------------------
+
+def client_compute_seconds(c: Client, cfg, compute: ComputeModel,
+                           multiplier: float = 1.0) -> float:
+    """T_comp(k) for one Local Learning phase under ``cfg``."""
+    return compute.local_seconds(c, epochs=cfg.local_epochs,
+                                 batch_size=cfg.batch_size,
+                                 multiplier=multiplier)
+
+
+def upload_seconds(state: FederationState, k: int, modalities: List[str],
+                   link) -> float:
+    """T_up(k): the exact ledger wire bytes of the client's chosen
+    modalities at this run's precision, over its sampled link."""
+    nbytes = sum(float(state.sizes[k, state.mod_index[m]])
+                 for m in modalities)
+    return link.seconds(nbytes)
+
+
+def nominal_cycle_seconds(clients: List[Client], spec, cfg,
+                          qbits: Optional[int] = None) -> float:
+    """A deadline yardstick: the slowest *nominal* client (straggler
+    multiplier 1, base link) through compute + a γ-modality upload. A
+    reporting deadline slightly above this admits every healthy client and
+    drops only stragglers."""
+    from repro.core.timing import LINK_PRESETS
+    qb = cfg.quantize_bits if qbits is None else qbits
+    state = FederationState.build(clients, spec, qb, stack=False)
+    compute = ComputeModel(sec_per_step=cfg.compute_sec_per_step)
+    link = LINK_PRESETS[cfg.link_preset]
+    worst = 0.0
+    for c in clients:
+        k = state.row_of[c.client_id]
+        tc = client_compute_seconds(c, cfg, compute)
+        sizes = sorted((float(state.sizes[k, state.mod_index[m]])
+                        for m in c.modality_names), reverse=True)
+        tu = link.seconds(sum(sizes[:max(cfg.gamma, 1)]))
+        worst = max(worst, tc + tu)
+    return worst
+
+
+# ---------------------------------------------------------------------------
+# the async engine
+# ---------------------------------------------------------------------------
+
+def run_async_federation(clients: List[Client], spec, cfg, *,
+                         verbose: bool = False,
+                         server_encoders: Optional[Dict] = None,
+                         quantize_bits: Optional[int] = None):
+    """Algorithm 1 on the virtual clock (see module docstring).
+
+    Invoked through ``run_federation(backend="async")``; argument semantics
+    match it. The returned :class:`~repro.core.rounds.RunHistory` carries
+    the virtual-time fields (``sim_time`` per cycle — ``makespan_s`` for
+    the run — plus per-cycle ``flushes`` and deadline-``dropped`` ids)."""
+    from repro.core.rounds import (RoundRecord, RunHistory, _joint_selection,
+                                   aggregate_uploads)
+    from repro.core.batched import (batched_evaluate, batched_fusion_stage,
+                                    batched_local_learning)
+
+    if cfg.recency_unit == "time" and cfg.selection_impl != "engine":
+        raise ValueError('recency_unit="time" requires '
+                         'selection_impl="engine" (the host reference ranks '
+                         'on round-index recency trackers)')
+    if cfg.deadline_s is not None and cfg.deadline_s <= 0:
+        raise ValueError("deadline_s must be positive (None = no deadline)")
+    if cfg.buffer_size is not None and cfg.buffer_size < 1:
+        raise ValueError("buffer_size must be >= 1 (None = all arrivals)")
+
+    qbits = cfg.quantize_bits if quantize_bits is None else quantize_bits
+    K = len(clients)
+    rng = np.random.default_rng(cfg.seed)
+    # timing-only randomness (links, straggler assignment) on a separate
+    # stream: it must never perturb the training/selection draws the
+    # degenerate-parity oracle compares against the sync engine
+    timing_rng = np.random.default_rng(np.random.SeedSequence(
+        [cfg.seed, 0x71ED]))
+    ledger = CommLedger()
+    history = RunHistory()
+    server_encoders = server_encoders if server_encoders is not None else {}
+
+    state = FederationState.build(clients, spec, qbits, stack=True)
+    store = state.store
+    trace = resolve_trace(cfg)
+    compute = ComputeModel(sec_per_step=cfg.compute_sec_per_step)
+    links = resolve_links(cfg, timing_rng, K)
+    mult = sample_straggler_multipliers(timing_rng, K,
+                                        cfg.straggler_fraction,
+                                        cfg.straggler_factor)
+    # T_comp is static per run (epochs/batch/shapes don't change): cache it
+    t_comp = {c.client_id: client_compute_seconds(
+        c, cfg, compute, mult[state.row_of[c.client_id]])
+        for c in clients}
+
+    deadline = np.inf if cfg.deadline_s is None else float(cfg.deadline_s)
+    clock = 0.0
+    server_version = 0
+    by_id = {c.client_id: c for c in clients}
+
+    try:
+        for t in range(1, cfg.rounds + 1):
+            avail_mask = trace.step(rng, K)
+            avail = [c for k, c in enumerate(clients) if avail_mask[k]]
+            if not avail:
+                acc, loss = batched_evaluate(clients, store=store)
+                ledger.rounds = t
+                history.records.append(RoundRecord(
+                    t, acc, loss, ledger.megabytes, [], {},
+                    sim_time=clock))
+                continue
+
+            # -- dispatch: local learning starts at τ_t ------------------
+            # (the math runs now, in sync RNG order; its *results* take
+            # effect at the scheduled completion events)
+            # DISPATCH is implicit at τ_t: every available client receives
+            # the current globals and starts local work (only *completion*
+            # events go on the heap — a DISPATCH event at the current
+            # instant could never reorder anything)
+            heap = EventHeap()
+            for c in avail:
+                # dispatch hands the client the current globals: staleness
+                # at flush time is measured against this version
+                state.model_version[state.row_of[c.client_id]] = \
+                    server_version
+            batched_local_learning(avail, cfg, rng, store=store)
+            for c in avail:                 # mirror ℓ_m^k into the state
+                k = state.row_of[c.client_id]
+                for m, v in c.losses.items():
+                    state.losses[k, state.mod_index[m]] = v
+
+            # -- joint selection (shared with the sync backends) ---------
+            recency_matrix = client_staleness = None
+            if cfg.recency_unit == "time":
+                scale = clock / (t - 1) if t > 1 and clock > 0 else 1.0
+                recency_matrix = state.recency_matrix_time(clock, scale, t)
+                client_staleness = state.client_staleness_time(
+                    clock, scale, t)
+            choices, selected, round_shapley = _joint_selection(
+                avail, state, cfg, rng, t, qbits, True, store,
+                recency_matrix=recency_matrix,
+                client_staleness=client_staleness)
+
+            # -- schedule completions ------------------------------------
+            for c in avail:
+                heap.push(clock + t_comp[c.client_id], EventKind.LOCAL_DONE,
+                          c.client_id)
+            for cid in selected:
+                k = state.row_of[cid]
+                tu = upload_seconds(state, k, choices[cid], links[k])
+                heap.push(clock + t_comp[cid] + tu, EventKind.UPLOAD_DONE,
+                          cid)
+
+            # -- drain the heap: buffered flushes under the deadline -----
+            cycle_deadline = clock + deadline
+            buffer_cap = cfg.buffer_size or len(selected) or 1
+            buffer: List[int] = []
+            arrived: List[int] = []
+            dropped: List[int] = []
+            flushes = 0
+            last_event = clock      # cohort barrier: compute + uploads
+            last_arrival = clock    # last accepted upload (flush stamps)
+            # per-cycle running aggregate: modality -> (mean tree, Σw).
+            # Each flush merges into it, so the cycle's final global is the
+            # staleness-weighted Eq. 21 mean over ALL its arrivals — one
+            # flush reproduces aggregate_uploads bit-for-bit (no merge
+            # arithmetic ever runs), which the degenerate parity pins.
+            cycle_acc: Dict[str, Tuple[Dict, float]] = {}
+
+            def flush(now: float) -> None:
+                nonlocal flushes, server_version
+                flushes += 1
+                per_modality: Dict[str, List[Client]] = {}
+                weights: Dict[str, List[float]] = {}
+                upload_mask = np.zeros_like(state.presence)
+                for cid in sorted(buffer):
+                    c = by_id[cid]
+                    k = state.row_of[cid]
+                    stale = server_version - int(state.model_version[k])
+                    w = (float(c.train.num_samples)
+                         * cfg.staleness_discount ** stale)
+                    for m in choices[cid]:
+                        per_modality.setdefault(m, []).append(c)
+                        weights.setdefault(m, []).append(w)
+                        upload_mask[k, state.mod_index[m]] = True
+                    c.recency.mark_uploaded(choices[cid], t)
+                state.mark_uploaded(upload_mask, t)          # Eq. 11
+                state.mark_uploaded_time(upload_mask, now)   # virtual clock
+                for m, ups in per_modality.items():
+                    avg = aggregate_uploads(
+                        ups, m, weights[m], qbits,
+                        error_feedback=cfg.error_feedback, store=store)
+                    w_f = float(sum(weights[m]))
+                    if m in cycle_acc:
+                        prev, w_prev = cycle_acc[m]
+                        tot = w_prev + w_f
+                        avg = jax.tree.map(
+                            lambda a, b: ((w_prev * a.astype(jnp.float32)
+                                           + w_f * b.astype(jnp.float32))
+                                          / tot).astype(b.dtype), prev, avg)
+                        w_f = tot
+                    cycle_acc[m] = (avg, w_f)
+                    server_encoders[m] = avg
+                server_version += 1
+                buffer.clear()
+
+            while heap:
+                ev = heap.pop()
+                last_event = max(last_event, min(ev.time, cycle_deadline))
+                if ev.kind is not EventKind.UPLOAD_DONE:
+                    continue
+                if ev.time > cycle_deadline:
+                    dropped.append(ev.client_id)   # preempted at deadline
+                    continue
+                k = state.row_of[ev.client_id]
+                for m in choices[ev.client_id]:
+                    ledger.record(
+                        float(state.sizes[k, state.mod_index[m]]),
+                        modality=m)
+                buffer.append(ev.client_id)
+                arrived.append(ev.client_id)
+                last_arrival = ev.time
+                if len(buffer) >= buffer_cap:
+                    flush(ev.time)
+            if buffer:
+                # stamp the cycle-end flush at its last accepted arrival —
+                # not at the cohort compute barrier, which a non-uploading
+                # client's LOCAL_DONE can push later
+                flush(last_arrival)
+            # the cohort barrier, deadline-clamped event by event above
+            # (any dropped event already pinned it to cycle_deadline)
+            cycle_end = last_event
+
+            # -- local deploying + Stage #2 ------------------------------
+            for m, params in server_encoders.items():
+                rows = [state.row_of[c.client_id] for c in avail
+                        if m in c.encoders]
+                state.deploy_global(m, rows, params)
+            for c in avail:     # deploy ships the post-flush globals
+                state.model_version[state.row_of[c.client_id]] = \
+                    server_version
+            batched_fusion_stage(avail, cfg, rng, store=store)
+
+            # -- evaluate + record ---------------------------------------
+            acc, loss = batched_evaluate(clients, store=store)
+            clock = max(clock, cycle_end)
+            ledger.rounds = t
+            uploads = [(cid, m) for cid in selected if cid in arrived
+                       for m in choices[cid]]
+            history.records.append(RoundRecord(
+                t, acc, loss, ledger.megabytes, uploads,
+                {m: float(np.mean(v)) for m, v in round_shapley.items()},
+                sim_time=clock, flushes=flushes, dropped=sorted(dropped)))
+            if verbose:
+                print(f"[cycle {t:3d}] τ={clock:9.2f}s acc={acc:.4f} "
+                      f"loss={loss:.4f} comm={ledger.megabytes:.3f}MB "
+                      f"uploads={len(uploads)} flushes={flushes} "
+                      f"dropped={len(dropped)}")
+            if cfg.comm_budget_mb is not None and \
+                    ledger.megabytes >= cfg.comm_budget_mb:
+                break
+    finally:
+        state.write_back()
+    return history

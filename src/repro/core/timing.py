@@ -1,0 +1,209 @@
+"""Virtual-time models for the asynchronous federation runtime.
+
+The paper's whole premise is communication limitation under heterogeneous
+networks (§4.9 availability, Table 7's transmission-time model), yet a
+synchronous simulator collapses *when* things happen into a per-round
+Bernoulli coin flip. This module provides the three timing ingredients the
+event-driven scheduler (``repro.core.scheduler``) composes into a virtual
+clock:
+
+- **Compute-time model** (:class:`ComputeModel`): a client's local-learning
+  time is its SGD step count (E epochs × ⌈n/B⌉ steps per modality, plus the
+  Stage-#1 fusion pass) times a per-step cost scaled by the modality's
+  feature volume — i.e. batches × per-step cost from the client's shape
+  family, exactly the quantity the batched simulator schedules. Per-client
+  straggler multipliers (:func:`sample_straggler_multipliers`) model slow
+  devices.
+- **Uplink-time model**: exact ledger wire bytes ÷ a per-client sampled
+  bandwidth. Heterogeneous links come from
+  :meth:`repro.core.aggregation.TransportModel.sample_links` (log-normal
+  spread around the IoT/ICI presets); the scheduler charges each upload
+  ``link_k.seconds(wire_bytes)``.
+- **Availability traces**: per-round boolean masks over the population.
+  :class:`BernoulliTrace` reproduces the historical §4.9 coin flip
+  draw-for-draw (vectorized ``rng.random(K)`` consumes the generator
+  identically to K sequential scalar draws, which the cross-backend parity
+  tests pin); :class:`MarkovTrace` is two-state Gilbert churn (on→off with
+  ``p_drop``, off→on with ``p_join``), the standard bursty-availability
+  model. Deadline-based straggler *dropping* is not a trace — it is the
+  scheduler's reporting deadline (``MFedMCConfig.deadline_s``).
+
+Traces are stateful (Markov keeps per-client on/off state), so each run
+materializes a fresh one via :func:`resolve_trace`; all backends step the
+trace with the shared round generator, preserving RNG parity.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core.aggregation import ICI_LINK, IOT_UPLINK, TransportModel
+
+
+# ---------------------------------------------------------------------------
+# availability traces (replace the inline §4.9 coin flip)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class BernoulliTrace:
+    """IID per-round availability — the historical §4.9 model.
+
+    ``rate >= 1`` never touches the generator (everyone is available);
+    otherwise one uniform per client per round, in client order — exactly
+    the draws the pre-runtime inline coin flip made."""
+    rate: float = 1.0
+
+    def step(self, rng: np.random.Generator, k: int) -> np.ndarray:
+        if self.rate >= 1.0:
+            return np.ones(k, bool)
+        return rng.random(k) < self.rate
+
+    def describe(self) -> str:
+        return f"bernoulli:{self.rate:g}"
+
+
+@dataclass
+class MarkovTrace:
+    """Two-state Gilbert on/off churn, independently per client.
+
+    An *on* client drops with ``p_drop``; an *off* client rejoins with
+    ``p_join`` (stationary availability p_join / (p_join + p_drop), mean
+    off-burst length 1/p_join rounds — bursty churn a Bernoulli rate of the
+    same mean cannot express). The first step is the cold start: everyone
+    on, no draws; each later step consumes K uniforms in client order."""
+    p_drop: float = 0.2
+    p_join: float = 0.5
+    state: Optional[np.ndarray] = None      # [K] bool; None until first step
+
+    def step(self, rng: np.random.Generator, k: int) -> np.ndarray:
+        if self.state is None:
+            self.state = np.ones(k, bool)
+            return self.state.copy()
+        u = rng.random(k)
+        self.state = np.where(self.state, u >= self.p_drop, u < self.p_join)
+        return self.state.copy()
+
+    def describe(self) -> str:
+        return f"markov:{self.p_drop:g},{self.p_join:g}"
+
+
+TraceLike = Union[None, float, str, BernoulliTrace, MarkovTrace]
+
+
+def make_trace(spec: TraceLike) -> Union[BernoulliTrace, MarkovTrace]:
+    """Build a fresh availability trace from a spec.
+
+    ``None`` → always available; a float → :class:`BernoulliTrace`; strings:
+    ``"always"``, ``"bernoulli:RATE"``, ``"markov:P_DROP,P_JOIN"``. Trace
+    *objects* contribute only their parameters — the returned trace always
+    starts from the cold-start state, so a config holding a `MarkovTrace`
+    cannot leak one run's terminal churn state into the next."""
+    if spec is None:
+        return BernoulliTrace(1.0)
+    if isinstance(spec, BernoulliTrace):
+        return BernoulliTrace(spec.rate)
+    if isinstance(spec, MarkovTrace):
+        return MarkovTrace(spec.p_drop, spec.p_join)
+    if isinstance(spec, (int, float)):
+        return BernoulliTrace(float(spec))
+    if isinstance(spec, str):
+        name, _, arg = spec.partition(":")
+        if name == "always":
+            return BernoulliTrace(1.0)
+        if name == "bernoulli":
+            return BernoulliTrace(float(arg))
+        if name == "markov":
+            parts = [float(x) for x in arg.split(",")]
+            if len(parts) != 2:
+                raise ValueError(
+                    f"markov trace needs 'markov:p_drop,p_join', got {spec!r}")
+            return MarkovTrace(*parts)
+        raise ValueError(f"unknown availability trace {spec!r}")
+    raise TypeError(f"cannot build a trace from {type(spec).__name__}")
+
+
+def resolve_trace(cfg) -> Union[BernoulliTrace, MarkovTrace]:
+    """The run's availability trace: ``cfg.availability_trace`` if set,
+    else the historical Bernoulli ``cfg.availability`` rate."""
+    spec = getattr(cfg, "availability_trace", None)
+    if spec is None:
+        spec = getattr(cfg, "availability", 1.0)
+    return make_trace(spec)
+
+
+# ---------------------------------------------------------------------------
+# compute-time model
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ComputeModel:
+    """Local-learning wall time as step count × per-step cost.
+
+    The per-step cost scales with the modality's per-sample feature volume
+    relative to ``ref_elements`` (a [128, 6] IMU window ≈ 768 elements costs
+    about ``sec_per_step``; an eye-tracking [128, 2] stream is ~3× cheaper),
+    so a client's compute time comes from its *shape family* — the same key
+    the batched simulator buckets by. Stage-#1 fusion adds
+    ``fusion_factor × sec_per_step`` per step (the fusion MLP consumes [M, C]
+    predictions — small next to a trunk forward+backward)."""
+    sec_per_step: float = 1e-3
+    ref_elements: float = 768.0
+    fusion_factor: float = 0.25
+
+    def encoder_step_seconds(self, feature_shape: Sequence[int]) -> float:
+        vol = float(np.prod(feature_shape)) if len(tuple(feature_shape)) \
+            else 1.0
+        return self.sec_per_step * max(vol, 1.0) / self.ref_elements
+
+    def local_seconds(self, client, *, epochs: int, batch_size: int,
+                      multiplier: float = 1.0) -> float:
+        """One Local Learning phase: E epochs over every owned modality
+        encoder plus the Stage-#1 fusion epochs, times the client's
+        straggler multiplier."""
+        from repro.core.batched import num_steps
+        n = client.train.num_samples
+        steps = num_steps(n, batch_size)
+        total = 0.0
+        for m in client.modality_names:
+            shape = np.asarray(client.train.modalities[m]).shape[1:]
+            total += epochs * steps * self.encoder_step_seconds(shape)
+        total += epochs * steps * self.sec_per_step * self.fusion_factor
+        return multiplier * total
+
+
+def sample_straggler_multipliers(rng: np.random.Generator, k: int,
+                                 fraction: float = 0.0,
+                                 factor: float = 10.0) -> np.ndarray:
+    """[K] per-client compute multipliers: ⌈fraction·K⌉ clients run
+    ``factor×`` slower (uniformly drawn without replacement), the rest 1×.
+
+    Timing randomness must come from a generator *separate* from the round
+    rng — timing draws never perturb training/selection streams, which is
+    what keeps the degenerate async config bit-comparable to the sync
+    engine."""
+    mult = np.ones(k, np.float64)
+    if fraction > 0.0 and k > 0:
+        n = min(k, int(np.ceil(fraction * k)))
+        idx = rng.choice(k, size=n, replace=False)
+        mult[idx] = factor
+    return mult
+
+
+LINK_PRESETS = {"iot": IOT_UPLINK, "ici": ICI_LINK}
+
+
+def resolve_links(cfg, rng: np.random.Generator, k: int) -> list:
+    """Per-client uplink transports for a run: the ``cfg.link_preset``
+    base model, spread log-normally by ``cfg.link_sigma`` (0 = one shared
+    link, the historical Table 7 model)."""
+    preset = getattr(cfg, "link_preset", "iot")
+    if preset not in LINK_PRESETS:
+        raise ValueError(f"unknown link_preset {preset!r}; "
+                         f"choose from {sorted(LINK_PRESETS)}")
+    base = LINK_PRESETS[preset]
+    sigma = getattr(cfg, "link_sigma", 0.0)
+    if sigma <= 0.0:
+        return [base] * k
+    return base.sample_links(rng, k, sigma=sigma)

@@ -74,6 +74,30 @@ class TestBaselinesProtocol:
         assert h.comm_mb[-1] > 0
         assert np.isfinite(h.final_accuracy())
 
+    def test_no_available_clients_records_empty_round(self):
+        # regression: baselines used to silently force client 0 into the
+        # round (`or [0]`) when nobody was available; both engines now
+        # record an explicit empty-upload round — no training, no bytes
+        cfg = dataclasses.replace(MFedMCConfig(rounds=2, local_epochs=1,
+                                               seed=0), availability=0.0)
+        h = run_baseline("flash", "ucihar", "iid", cfg,
+                         samples_per_client=16)
+        assert len(h.records) == 2
+        assert h.comm_mb[-1] == 0.0
+        assert np.isfinite(h.final_accuracy())
+        h2 = run_mfedmc("ucihar", "iid", cfg, samples_per_client=16)
+        assert h2.comm_mb[-1] == 0.0
+        assert all(r.uploads == [] for r in h2.records)
+
+    def test_baseline_markov_churn_trace(self):
+        cfg = dataclasses.replace(
+            MFedMCConfig(rounds=3, local_epochs=1, seed=0),
+            availability_trace="markov:0.4,0.4")
+        h = run_baseline("flash", "ucihar", "iid", cfg,
+                         samples_per_client=16)
+        assert len(h.records) == 3
+        assert np.isfinite(h.final_accuracy())
+
     def test_mfedmc_much_cheaper_than_holistic(self):
         cfg = MFedMCConfig(**FAST)
         ours = run_mfedmc("actionsense", "natural", cfg,

@@ -1,0 +1,413 @@
+"""Virtual-time async runtime: event ordering, availability traces, timing
+models, the degenerate reduction-to-sync oracle, and the async-only
+semantics (deadline drops, buffered staleness-discounted flushes)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.aggregation import IOT_UPLINK
+from repro.core.rounds import MFedMCConfig, build_federation, run_federation
+from repro.core.scheduler import (Event, EventHeap, EventKind,
+                                  nominal_cycle_seconds)
+from repro.core.timing import (BernoulliTrace, ComputeModel, MarkovTrace,
+                               make_trace, resolve_trace,
+                               sample_straggler_multipliers)
+
+TOL = 1e-5
+
+
+# ---------------------------------------------------------------------------
+# event heap
+# ---------------------------------------------------------------------------
+
+class TestEventHeap:
+    def test_pops_in_time_order(self):
+        h = EventHeap()
+        h.push(3.0, EventKind.UPLOAD_DONE, 1)
+        h.push(1.0, EventKind.DISPATCH, 2)
+        h.push(2.0, EventKind.LOCAL_DONE, 0)
+        times = [h.pop().time for _ in range(3)]
+        assert times == [1.0, 2.0, 3.0]
+
+    def test_tie_break_time_then_kind_then_client(self):
+        # equal times: DISPATCH < LOCAL_DONE < UPLOAD_DONE, then client id
+        h = EventHeap()
+        h.push(1.0, EventKind.UPLOAD_DONE, 0)
+        h.push(1.0, EventKind.DISPATCH, 9)
+        h.push(1.0, EventKind.LOCAL_DONE, 5)
+        h.push(1.0, EventKind.LOCAL_DONE, 2)
+        got = [(e.kind, e.client_id) for e in
+               (h.pop(), h.pop(), h.pop(), h.pop())]
+        assert got == [(EventKind.DISPATCH, 9), (EventKind.LOCAL_DONE, 2),
+                       (EventKind.LOCAL_DONE, 5),
+                       (EventKind.UPLOAD_DONE, 0)]
+
+    def test_deterministic_across_insert_orders(self):
+        events = [(2.0, EventKind.UPLOAD_DONE, 3),
+                  (2.0, EventKind.UPLOAD_DONE, 1),
+                  (1.0, EventKind.LOCAL_DONE, 7),
+                  (2.0, EventKind.LOCAL_DONE, 1)]
+        rng = np.random.default_rng(0)
+        ref = None
+        for _ in range(5):
+            order = rng.permutation(len(events))
+            h = EventHeap()
+            for i in order:
+                h.push(*events[i])
+            got = [h.pop().sort_key for _ in range(len(events))]
+            if ref is None:
+                ref = got
+            assert got == ref
+
+    def test_len_and_bool(self):
+        h = EventHeap()
+        assert not h and len(h) == 0
+        h.push(0.0, EventKind.DISPATCH, 0)
+        assert h and len(h) == 1
+        h.pop()
+        assert not h
+
+    def test_event_sort_key(self):
+        e = Event(2.5, EventKind.LOCAL_DONE, 4)
+        assert e.sort_key == (2.5, 1, 4)
+
+
+# ---------------------------------------------------------------------------
+# availability traces
+# ---------------------------------------------------------------------------
+
+class TestTraces:
+    def test_bernoulli_matches_inline_coin_flip_draws(self):
+        # the historical §4.9 code drew one scalar per client sequentially;
+        # the trace must consume the generator identically (parity contract)
+        r1, r2 = np.random.default_rng(3), np.random.default_rng(3)
+        got = BernoulliTrace(0.4).step(r1, 10)
+        ref = np.array([r2.random() < 0.4 for _ in range(10)])
+        np.testing.assert_array_equal(got, ref)
+        assert r1.random() == r2.random()   # same stream position after
+
+    def test_bernoulli_full_rate_consumes_no_draws(self):
+        r1, r2 = np.random.default_rng(5), np.random.default_rng(5)
+        np.testing.assert_array_equal(BernoulliTrace(1.0).step(r1, 6),
+                                      np.ones(6, bool))
+        assert r1.random() == r2.random()   # generator untouched
+
+    def test_markov_cold_start_all_on(self):
+        t = MarkovTrace(0.5, 0.5)
+        rng = np.random.default_rng(0)
+        np.testing.assert_array_equal(t.step(rng, 8), np.ones(8, bool))
+
+    def test_markov_transitions(self):
+        # p_drop=1, p_join=1 -> strict alternation per client
+        t = MarkovTrace(1.0, 1.0)
+        rng = np.random.default_rng(0)
+        assert t.step(rng, 4).all()
+        assert not t.step(rng, 4).any()
+        assert t.step(rng, 4).all()
+
+    def test_markov_stationary_availability(self):
+        t = MarkovTrace(0.3, 0.3)          # stationary 0.5
+        rng = np.random.default_rng(7)
+        rates = [t.step(rng, 200).mean() for _ in range(300)]
+        assert abs(np.mean(rates[50:]) - 0.5) < 0.05
+
+    def test_make_trace_specs(self):
+        assert isinstance(make_trace(None), BernoulliTrace)
+        assert make_trace(0.25).rate == 0.25
+        assert make_trace("bernoulli:0.5").rate == 0.5
+        assert make_trace("always").rate == 1.0
+        m = make_trace("markov:0.2,0.6")
+        assert (m.p_drop, m.p_join) == (0.2, 0.6)
+        # trace objects contribute parameters only: a fresh cold-start
+        # trace comes back, so cfg-held traces can't leak state across runs
+        obj = MarkovTrace(0.1, 0.9)
+        obj.step(np.random.default_rng(0), 4)
+        obj.step(np.random.default_rng(0), 4)
+        fresh = make_trace(obj)
+        assert fresh is not obj
+        assert (fresh.p_drop, fresh.p_join) == (0.1, 0.9)
+        assert fresh.state is None          # cold start restored
+        with pytest.raises(ValueError):
+            make_trace("poisson:3")
+        with pytest.raises(ValueError):
+            make_trace("markov:0.2")
+        with pytest.raises(TypeError):
+            make_trace([0.5])
+
+    def test_resolve_trace_prefers_explicit_trace(self):
+        cfg = MFedMCConfig(availability=0.5,
+                           availability_trace="markov:0.2,0.6")
+        assert isinstance(resolve_trace(cfg), MarkovTrace)
+        assert resolve_trace(MFedMCConfig(availability=0.5)).rate == 0.5
+
+
+# ---------------------------------------------------------------------------
+# timing models
+# ---------------------------------------------------------------------------
+
+class TestTimingModels:
+    def test_compute_scales_with_feature_volume_and_steps(self):
+        cfg = MFedMCConfig(rounds=1, local_epochs=2, batch_size=10, seed=0)
+        clients, _ = build_federation("ucihar", "iid", cfg=cfg, seed=0,
+                                      samples_per_client=24)
+        cm = ComputeModel(sec_per_step=1e-3)
+        c = clients[0]
+        base = cm.local_seconds(c, epochs=2, batch_size=10)
+        assert base > 0
+        # double epochs -> double time; straggler multiplier is linear
+        assert cm.local_seconds(c, epochs=4, batch_size=10) == \
+            pytest.approx(2 * base)
+        assert cm.local_seconds(c, epochs=2, batch_size=10,
+                                multiplier=10.0) == pytest.approx(10 * base)
+
+    def test_straggler_multipliers(self):
+        rng = np.random.default_rng(0)
+        m = sample_straggler_multipliers(rng, 20, 0.25, 10.0)
+        assert (m == 10.0).sum() == 5 and (m == 1.0).sum() == 15
+        np.testing.assert_array_equal(
+            sample_straggler_multipliers(rng, 8, 0.0), np.ones(8))
+
+    def test_sample_links_mean_preserving_lognormal(self):
+        rng = np.random.default_rng(0)
+        links = IOT_UPLINK.sample_links(rng, 4000, sigma=0.5)
+        bw = np.array([l.bandwidth_bps for l in links])
+        assert abs(bw.mean() / IOT_UPLINK.bandwidth_bps - 1.0) < 0.05
+        assert bw.std() > 0
+        for l in links[:3]:   # overheads shared with the preset
+            assert l.protocol_overhead == IOT_UPLINK.protocol_overhead
+            assert l.fec_overhead == IOT_UPLINK.fec_overhead
+
+    def test_nominal_cycle_seconds_positive_and_straggler_free(self):
+        cfg = MFedMCConfig(rounds=1, local_epochs=1, batch_size=10, seed=0,
+                           straggler_fraction=0.5, straggler_factor=10.0)
+        clients, spec = build_federation("ucihar", "iid", cfg=cfg, seed=0,
+                                         samples_per_client=24)
+        nom = nominal_cycle_seconds(clients, spec, cfg)
+        assert nom > 0
+        # nominal ignores stragglers: same value without them
+        cfg2 = dataclasses.replace(cfg, straggler_fraction=0.0)
+        assert nominal_cycle_seconds(clients, spec, cfg2) == nom
+
+
+# ---------------------------------------------------------------------------
+# full-run semantics
+# ---------------------------------------------------------------------------
+
+def _run(backend, n=24, dataset="ucihar", scenario="iid", **cfg_kw):
+    base = dict(rounds=2, local_epochs=1, batch_size=10, seed=0,
+                background_size=12, eval_size=12)
+    base.update(cfg_kw)
+    cfg = MFedMCConfig(**base)
+    clients, spec = build_federation(dataset, scenario, cfg=cfg, seed=0,
+                                     samples_per_client=n)
+    server = {}
+    hist = run_federation(clients, spec, cfg, server_encoders=server,
+                          backend=backend)
+    return server, hist, clients
+
+
+def _assert_exact_decisions(h_ref, h):
+    for r_ref, r in zip(h_ref.records, h.records):
+        assert r.uploads == r_ref.uploads
+        assert r.comm_mb == r_ref.comm_mb
+
+
+def _assert_encoders_close(se_ref, se_new):
+    assert set(se_ref) == set(se_new)
+    for m in se_ref:
+        for k in se_ref[m]:
+            np.testing.assert_allclose(np.asarray(se_new[m][k]),
+                                       np.asarray(se_ref[m][k]),
+                                       atol=TOL, rtol=0, err_msg=f"{m}/{k}")
+
+
+class TestSyncReductionOracle:
+    """deadline=∞ + one flush + no staleness discount == backend="engine"
+    exactly on uploads/ledger/selection, ≤1e-5 on encoders."""
+
+    def test_degenerate_async_matches_engine(self):
+        se_e, h_e, _ = _run("engine")
+        se_a, h_a, _ = _run("async")
+        _assert_exact_decisions(h_e, h_a)
+        _assert_encoders_close(se_e, se_a)
+        assert h_a.makespan_s > 0 and h_e.makespan_s == 0.0
+        for r in h_a.records:
+            assert r.flushes == 1 and r.dropped == []
+
+    def test_degenerate_async_matches_engine_ragged(self):
+        kw = dict(dataset="actionsense", scenario="natural", n=20,
+                  batch_size=8)
+        se_e, h_e, _ = _run("engine", **kw)
+        se_a, h_a, _ = _run("async", **kw)
+        _assert_exact_decisions(h_e, h_a)
+        _assert_encoders_close(se_e, se_a)
+
+    def test_degenerate_async_matches_engine_quantized(self):
+        kw = dict(quantize_bits=8)
+        se_e, h_e, _ = _run("engine", **kw)
+        se_a, h_a, _ = _run("async", **kw)
+        _assert_exact_decisions(h_e, h_a)
+        _assert_encoders_close(se_e, se_a)
+
+    def test_explicit_buffer_k_is_still_degenerate(self):
+        # buffer_size >= #arrivals -> one final flush, same as None
+        se_e, h_e, _ = _run("engine")
+        se_a, h_a, _ = _run("async", buffer_size=10 ** 6)
+        _assert_exact_decisions(h_e, h_a)
+        _assert_encoders_close(se_e, se_a)
+
+    def test_timing_knobs_never_change_math(self):
+        # heterogeneous links + stragglers reshuffle *when* uploads land,
+        # not what is computed: with no deadline/buffer/discount the run
+        # still matches the engine exactly
+        se_e, h_e, _ = _run("engine")
+        se_a, h_a, _ = _run("async", link_sigma=0.8,
+                            straggler_fraction=0.25, straggler_factor=10.0)
+        _assert_exact_decisions(h_e, h_a)
+        _assert_encoders_close(se_e, se_a)
+        assert h_a.makespan_s > 0
+
+    def test_clients_written_back(self):
+        _, _, cl_e = _run("engine")
+        _, _, cl_a = _run("async")
+        for c_e, c_a in zip(cl_e, cl_a):
+            assert c_e.recency.last_upload == c_a.recency.last_upload
+            for m in c_e.modality_names:
+                for k in c_e.encoders[m]:
+                    np.testing.assert_allclose(
+                        np.asarray(c_a.encoders[m][k]),
+                        np.asarray(c_e.encoders[m][k]), atol=TOL, rtol=0)
+
+
+class TestAsyncSemantics:
+    def test_deadline_drops_stragglers_and_caps_cycles(self):
+        base = dict(client_strategy="all", delta=1.0,
+                    compute_sec_per_step=0.05,
+                    straggler_fraction=0.25, straggler_factor=10.0)
+        _, h_wait, _ = _run("async", **base)
+        cfg_probe = MFedMCConfig(rounds=1, local_epochs=1, batch_size=10,
+                                 seed=0, **base)
+        clients, spec = build_federation("ucihar", "iid", cfg=cfg_probe,
+                                         seed=0, samples_per_client=24)
+        nom = nominal_cycle_seconds(clients, spec, cfg_probe)
+        _, h_drop, _ = _run("async", deadline_s=1.5 * nom, **base)
+        assert h_drop.makespan_s < h_wait.makespan_s
+        dropped = {cid for r in h_drop.records for cid in r.dropped}
+        assert dropped            # the 10x stragglers miss the deadline
+        # dropped uploads never ship: strictly fewer ledger bytes
+        assert h_drop.records[-1].comm_mb < h_wait.records[-1].comm_mb
+        for r in h_drop.records:  # cycle duration capped by the deadline
+            assert r.dropped == sorted(r.dropped)
+
+    def test_dropped_uploads_not_recorded_or_marked(self):
+        base = dict(client_strategy="all", delta=1.0,
+                    compute_sec_per_step=0.05,
+                    straggler_fraction=0.25, straggler_factor=10.0)
+        cfg_probe = MFedMCConfig(rounds=1, local_epochs=1, batch_size=10,
+                                 seed=0, **base)
+        clients, spec = build_federation("ucihar", "iid", cfg=cfg_probe,
+                                         seed=0, samples_per_client=24)
+        nom = nominal_cycle_seconds(clients, spec, cfg_probe)
+        _, h, cl = _run("async", deadline_s=1.5 * nom, **base)
+        for r in h.records:
+            up_ids = {cid for cid, _ in r.uploads}
+            assert not up_ids & set(r.dropped)
+        # a client dropped every round never marks recency
+        always_dropped = set(h.records[0].dropped)
+        for r in h.records[1:]:
+            always_dropped &= set(r.dropped)
+        for c in cl:
+            if c.client_id in always_dropped:
+                assert all(v == -1 for v in c.recency.last_upload.values())
+
+    def test_buffered_flushes_and_staleness_discount(self):
+        base = dict(client_strategy="all", delta=1.0)
+        _, h_buf, _ = _run("async", buffer_size=2)
+        assert all(r.flushes > 1 for r in h_buf.records)
+        # discount < 1 changes the aggregate (later flushes discount
+        # nothing within themselves, but staleness accrues across flushes)
+        se_plain, _, _ = _run("async", buffer_size=2, **base)
+        se_disc, _, _ = _run("async", buffer_size=2,
+                             staleness_discount=0.5, **base)
+        diff = 0.0
+        for m in se_plain:
+            for k in se_plain[m]:
+                diff += float(np.abs(np.asarray(se_plain[m][k])
+                                     - np.asarray(se_disc[m][k])).sum())
+        assert diff > 0
+
+    def test_makespan_monotone_in_cycles(self):
+        _, h, _ = _run("async", rounds=3)
+        times = [r.sim_time for r in h.records]
+        assert all(b > a for a, b in zip(times, times[1:]))
+
+    def test_markov_trace_run(self):
+        _, h, _ = _run("async", rounds=4,
+                       availability_trace="markov:0.4,0.4")
+        assert len(h.records) == 4
+        assert np.isfinite(h.final_accuracy())
+
+    def test_time_unit_recency_runs(self):
+        _, h, _ = _run("async", rounds=3, recency_unit="time")
+        assert len(h.records) == 3
+        assert np.isfinite(h.final_accuracy())
+
+    def test_time_unit_recency_needs_engine_selection(self):
+        with pytest.raises(ValueError, match="engine"):
+            _run("async", recency_unit="time", selection_impl="host")
+
+    def test_time_unit_recency_needs_async_backend(self):
+        with pytest.raises(ValueError, match="async"):
+            _run("engine", recency_unit="time")
+
+    def test_async_only_knobs_rejected_on_sync_backends(self):
+        # a sync run must not silently drop a configured deadline/buffer
+        for kw in (dict(deadline_s=2.0), dict(buffer_size=4),
+                   dict(staleness_discount=0.5)):
+            with pytest.raises(ValueError, match="async"):
+                _run("engine", **kw)
+
+    def test_bad_knobs_rejected(self):
+        with pytest.raises(ValueError, match="deadline"):
+            _run("async", deadline_s=0.0)
+        with pytest.raises(ValueError, match="buffer"):
+            _run("async", buffer_size=0)
+        with pytest.raises(ValueError, match="staleness"):
+            _run("async", staleness_discount=0.0)
+        with pytest.raises(ValueError, match="recency_unit"):
+            _run("async", recency_unit="epochs")
+
+
+class TestAvailabilityParity:
+    """§4.9 under the trace abstraction: loop, batched, and engine backends
+    must stay in lockstep at availability=0.5 (the seed only pinned 1.0)."""
+
+    @pytest.fixture(scope="class")
+    def loop_run(self):
+        return _run("loop", availability=0.5, rounds=3)
+
+    def test_loop_vs_batched(self, loop_run):
+        se_l, h_l, _ = loop_run
+        se_b, h_b, _ = _run("batched", availability=0.5, rounds=3)
+        _assert_exact_decisions(h_l, h_b)
+        _assert_encoders_close(se_l, se_b)
+
+    def test_loop_vs_engine(self, loop_run):
+        se_l, h_l, _ = loop_run
+        se_e, h_e, _ = _run("engine", availability=0.5, rounds=3)
+        _assert_exact_decisions(h_l, h_e)
+        _assert_encoders_close(se_l, se_e)
+
+    def test_loop_vs_async_degenerate(self, loop_run):
+        se_l, h_l, _ = loop_run
+        se_a, h_a, _ = _run("async", availability=0.5, rounds=3)
+        _assert_exact_decisions(h_l, h_a)
+        _assert_encoders_close(se_l, se_a)
+
+    def test_zero_availability_records_empty_rounds(self):
+        for backend in ("loop", "async"):
+            _, h, _ = _run(backend, availability=0.0, rounds=2)
+            assert len(h.records) == 2
+            for r in h.records:
+                assert r.uploads == [] and r.comm_mb == 0.0
