@@ -7,8 +7,7 @@ Builds the ActionSense-shaped federation (9 clients, 6 modalities, subjects
 and prints accuracy vs cumulative uplink megabytes.
 """
 import argparse
-
-from repro.core import MFedMCConfig, run_mfedmc
+import os
 
 
 def main():
@@ -17,12 +16,19 @@ def main():
     ap.add_argument("--dataset", default="actionsense")
     ap.add_argument("--scenario", default="natural")
     ap.add_argument("--backend", default="loop",
-                    choices=["loop", "batched", "engine", "async"],
+                    choices=["loop", "batched", "engine", "async",
+                             "sharded"],
                     help="loop: per-client reference; batched: vmapped "
                          "local learning; engine: device-resident "
                          "population + selection engine; async: "
                          "event-driven virtual-time runtime (compute/"
-                         "uplink models, buffered aggregation)")
+                         "uplink models, buffered aggregation); sharded: "
+                         "population split over a client mesh, Eq. 21 as "
+                         "a masked psum")
+    ap.add_argument("--mesh-clients", type=int, default=0,
+                    help="sharded: devices on the client mesh (0 = every "
+                         "visible device; >1 forces that many host "
+                         "devices)")
     ap.add_argument("--availability-trace", default=None,
                     help="async churn, e.g. 'bernoulli:0.5' or "
                          "'markov:0.2,0.5'")
@@ -35,6 +41,14 @@ def main():
                     help="async buffered-flush weight *= d**staleness")
     args = ap.parse_args()
 
+    if args.mesh_clients > 1:
+        # must land before jax initializes (first repro import below)
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count="
+            f"{args.mesh_clients}").strip()
+    from repro.core import MFedMCConfig, run_mfedmc
+
     cfg = MFedMCConfig(
         rounds=args.rounds,
         local_epochs=2,            # paper: 5; reduced for a fast demo
@@ -45,6 +59,8 @@ def main():
         deadline_s=args.deadline,
         buffer_size=args.buffer_size,
         staleness_discount=args.staleness_discount,
+        mesh_clients=(args.mesh_clients or None
+                      if args.backend == "sharded" else None),
         seed=0,
     )
     history = run_mfedmc(args.dataset, args.scenario, cfg, verbose=True,

@@ -86,6 +86,8 @@ class MFedMCConfig:
     loss_weight: float = 1.0               # loss_recency blend (§4.8)
     selection_impl: str = "engine"         # engine (device [K, M] programs)
                                            # | host (per-client numpy ref)
+    mesh_clients: Optional[int] = None     # backend="sharded": client-mesh
+                                           # size D (None = every device)
     background_size: int = 50              # |D'| for Shapley
     eval_size: int = 32
     quantize_bits: int = 32                # 32 = no quantization (§4.10)
@@ -259,9 +261,21 @@ def _engine_modality_choices(state: FederationState, cand_ids: List[int],
             mi = state.mod_index[m]
             presence[i, mi] = True
             phi[i, mi] = phi_by_name[cid][m]
-    dec = select_modalities_arrays(
-        phi, sizes, recency, presence, state.name_rank, t=t, gamma=cfg.gamma,
-        alpha_s=cfg.alpha_s, alpha_c=cfg.alpha_c, alpha_r=cfg.alpha_r)
+    if getattr(state, "mesh", None) is not None:
+        # sharded backend: same Eqs. 12–16 program, shard_map'ped over the
+        # candidate block (outcome-identical; see repro.core.sharded)
+        from repro.core.sharded import select_modalities_sharded
+        shard_ids = np.array([state.shard_of[state.row_of[cid]]
+                              for cid in cand_ids], np.int64)
+        dec = select_modalities_sharded(
+            phi, sizes, recency, presence, state.name_rank, shard_ids,
+            state.mesh, t=t, gamma=cfg.gamma, alpha_s=cfg.alpha_s,
+            alpha_c=cfg.alpha_c, alpha_r=cfg.alpha_r)
+    else:
+        dec = select_modalities_arrays(
+            phi, sizes, recency, presence, state.name_rank, t=t,
+            gamma=cfg.gamma, alpha_s=cfg.alpha_s, alpha_c=cfg.alpha_c,
+            alpha_r=cfg.alpha_r)
     return {cid: dec.choices(i, state.modalities)
             for i, cid in enumerate(cand_ids)}
 
@@ -439,6 +453,14 @@ def run_federation(clients: List[Client], spec: DatasetSpec,
         config (``deadline_s=None``, ``buffer_size=None``,
         ``staleness_discount=1.0``) matches ``"engine"`` exactly on
         uploads/ledger/selection and ≤1e-5 on encoders.
+      - ``"sharded"`` — the engine backend with the resident population
+        split row-wise over a 1-D client mesh (``cfg.mesh_clients``
+        devices; ``repro.core.sharded``): local training and modality
+        selection run as per-shard ``shard_map`` programs, Eq. 21 is a
+        masked ``psum`` of upload-weighted rows (fused with the §4.10
+        quantizer at reduced precision), and per-round host syncs stay
+        O(1) in mesh size. On a 1×1 mesh it reduces to ``"engine"``
+        exactly on uploads/ledger/selection and ≤1e-5 on encoders.
 
     All backends route joint selection through the shared decision layer:
     deterministic criteria run as device ``[K, M]`` programs
@@ -453,7 +475,7 @@ def run_federation(clients: List[Client], spec: DatasetSpec,
     (:func:`aggregate_uploads`); the ledger records exact wire bytes
     (bit-packed codes + per-tensor scale/zero metadata).
     """
-    if backend not in ("loop", "batched", "engine", "async"):
+    if backend not in ("loop", "batched", "engine", "async", "sharded"):
         raise ValueError(f"unknown backend {backend!r}")
     if cfg.selection_impl not in ("engine", "host"):
         raise ValueError(f"unknown selection_impl {cfg.selection_impl!r}")
@@ -482,17 +504,29 @@ def run_federation(clients: List[Client], spec: DatasetSpec,
             "deadline_s/buffer_size/staleness_discount only take effect on "
             f'the virtual clock — use backend="async" (got backend='
             f'{backend!r})')
+    if cfg.mesh_clients is not None and backend != "sharded":
+        raise ValueError('mesh_clients sizes the client mesh — use '
+                         f'backend="sharded" (got backend={backend!r})')
+    if backend == "sharded" and cfg.error_feedback:
+        raise ValueError(
+            "error_feedback residuals are client-held state the sharded "
+            "backend does not fold into its resident shards yet")
     rng = np.random.default_rng(cfg.seed)
     ledger = CommLedger()
     history = RunHistory()
     # global encoder store (initialized lazily from the first upload)
     server_encoders = server_encoders if server_encoders is not None else {}
 
-    resident = backend == "engine"
-    batched = backend in ("batched", "engine")
+    resident = backend in ("engine", "sharded")
+    batched = backend in ("batched", "engine", "sharded")
     # population decision arrays (recency matrix, exact wire sizes at this
     # run's precision, presence, losses); resident runs also stack params
-    state = FederationState.build(clients, spec, qbits, stack=resident)
+    if backend == "sharded":
+        from repro.core.sharded import ShardedFederationState, client_mesh
+        state = ShardedFederationState.build_sharded(
+            clients, spec, qbits, mesh=client_mesh(cfg.mesh_clients))
+    else:
+        state = FederationState.build(clients, spec, qbits, stack=resident)
     store = state.store if resident else ClientStore()
 
     trace = resolve_trace(cfg)
@@ -516,7 +550,10 @@ def run_federation(clients: List[Client], spec: DatasetSpec,
                 continue
 
             # -- local learning ------------------------------------------
-            if batched:
+            if backend == "sharded":
+                from repro.core.sharded import sharded_local_learning
+                sharded_local_learning(avail, cfg, rng, state)
+            elif batched:
                 from repro.core.batched import batched_local_learning
                 batched_local_learning(avail, cfg, rng, store=store)
             else:
@@ -552,9 +589,15 @@ def run_federation(clients: List[Client], spec: DatasetSpec,
                 c.recency.mark_uploaded(choices[cid], t)   # tracker mirror
             state.mark_uploaded(upload_mask, t)            # Eq. 11, [K, M]
             for m, ups in per_modality.items():
-                server_encoders[m] = aggregate_uploads(
-                    ups, m, [c.train.num_samples for c in ups], qbits,
-                    error_feedback=cfg.error_feedback, store=store)
+                if backend == "sharded":
+                    from repro.core.sharded import aggregate_modality_sharded
+                    server_encoders[m] = aggregate_modality_sharded(
+                        state, ups, m, [c.train.num_samples for c in ups],
+                        qbits)
+                else:
+                    server_encoders[m] = aggregate_uploads(
+                        ups, m, [c.train.num_samples for c in ups], qbits,
+                        error_feedback=cfg.error_feedback, store=store)
 
             # -- local deploying + Stage #2 -------------------------------
             if resident:

@@ -1,0 +1,509 @@
+"""Client-axis sharded resident population — ``backend="sharded"``.
+
+``backend="engine"`` made the population *resident*: one device holds the
+stacked per-shape-family encoder/fusion buckets and the ``[K, M]`` decision
+matrices for the whole run. This module splits that residency row-wise
+across the devices of a 1-D ``clients`` mesh
+(``repro.sharding.partition.client_mesh``), so population capacity scales
+with mesh size while the round structure — and therefore every parity
+oracle — stays the engine's:
+
+- **Layout.** Clients map to shards round-robin (``k % D``). Each bucket's
+  slots are *shard-major* (``repro.sharding.partition.shard_slots``):
+  shard d owns one equal-size block of rows, padded to the largest
+  per-shard group, and every leaf is placed with
+  ``NamedSharding(mesh, P("clients"))``. On a 1×1 mesh the layout (and so
+  the whole backend) degenerates to the engine's bucket order exactly.
+- **Training.** Local learning runs the *full* resident bucket through one
+  ``shard_map``-ped program per epoch — each device scans its own
+  ``[G/D, S, B]`` block with no cross-device communication. Unavailable
+  clients and padding slots carry all-zero sample masks: the masked loss is
+  identically 0 with zero gradient, so their SGD steps are exact no-ops and
+  a fixed program shape serves every round (no per-round gathers, O(1)
+  compilations).
+- **Modality selection.** ``selection_engine._modality_program`` (Eqs.
+  12–16) is row-independent, so it runs as one ``shard_map``-ped
+  ``[Kc/D, M]`` program over the shard-major-permuted candidate block —
+  same f64 math, AOT-compiled at ``xla_backend_optimization_level=0``, so
+  outcomes stay bit-identical to the numpy reference. Client selection
+  (Eqs. 17–19) is a global rank over ⌈δK⌉ — inherently cross-shard, and
+  tiny — and stays on the engine path.
+- **Aggregation.** Eq. 21 is a masked ``psum``: each shard contracts its
+  own block's upload-weighted rows, weights sum-normalized by a global
+  ``psum`` with the engine's ``max(Σw, 1e-12)`` guard — a shard whose
+  clients all sat out contributes an exact zero term, never NaN. At
+  reduced precision the PR 3 quantizer fuses in: each shard quantizes,
+  dequantizes, and contracts its rows in one program (per-row ranges make
+  the codes independent of which rows share a shard).
+- **Edge→cloud reading.** The two-tier wireless-MFL topology (Han et al.,
+  2509.12930) maps onto this mesh: a shard's local contraction is the edge
+  server's aggregate over its associated clients, the ``psum`` is the
+  cloud's aggregate over edges, and the PR 5 staleness machinery (buffered
+  flushes on the virtual clock) gives the per-edge flush cadence.
+
+Host-sync discipline: per round, the sharded backend fetches exactly what
+the engine fetches — final-epoch losses (one per bucket), the three
+modality-selection outputs, the client-selection mask, and the evaluation
+reductions. Nothing scales with mesh size (``bench_sharded_population``
+measures this via ``repro.core.hostsync``).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import hostsync
+from repro.core.encoders import masked_encoder_loss
+from repro.core.federation_state import (FederationState, StateStore,
+                                         _EncoderBucket, _FusionBucket)
+from repro.core.quantize import dequantize_tensor, quantize_population
+from repro.core.selection_engine import (_COMPILER_OPTIONS, ModalityDecision,
+                                         _f64, _modality_program, _pow2)
+from repro.sharding.partition import (CLIENT_AXIS, client_mesh, client_spec,
+                                      shard_rows, shard_slots)
+
+__all__ = ["ShardedFederationState", "ShardedStore", "client_mesh",
+           "sharded_local_learning", "aggregate_modality_sharded",
+           "select_modalities_sharded"]
+
+
+# ---------------------------------------------------------------------------
+# sharded resident state
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _ShardedEncBucket(_EncoderBucket):
+    """Engine bucket + the shard-major slot map. ``pairs[i]`` lives in
+    padded row ``slots[i]``; ``size`` counts padded rows (G·D ≥ len(pairs))."""
+    slots: List[int] = field(default_factory=list)
+    size: int = 0
+
+
+@dataclass
+class _ShardedFusionBucket(_FusionBucket):
+    slots: List[int] = field(default_factory=list)
+    size: int = 0
+
+
+def _row_gather(tree, idx):
+    return jax.tree.map(lambda v: v[idx], tree)
+
+
+def _row_scatter(tree, idx, sub):
+    return jax.tree.map(lambda v, s: v.at[idx].set(s), tree, sub)
+
+
+class ShardedStore(StateStore):
+    """StateStore over shard-major padded buckets.
+
+    Differences from the engine store: the zero-copy identity fast path
+    keys on the *padded* bucket size (slot i ≠ index i once padding rows
+    exist); gathers run as ONE jit'd program whose output lands on the
+    mesh's first device (the cross-tier phases that consume subsets —
+    predictions, fusion, Shapley, evaluation — are small and run fastest
+    concentrated, instead of strewn across shards with per-op collectives);
+    and scatters jit with ``out_shardings`` pinned back to
+    ``P("clients")`` — an unpinned ``.at[idx].set`` output would silently
+    de-shard the population."""
+
+    def __init__(self, state: "ShardedFederationState"):
+        super().__init__(state)
+        mesh = state.mesh
+        self._sharding = jax.sharding.NamedSharding(mesh, client_spec())
+        self._replicated = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec())
+        self._dev0 = jax.sharding.SingleDeviceSharding(
+            np.asarray(mesh.devices).flat[0])
+        self._gather = jax.jit(_row_gather)
+        self._scatter = jax.jit(_row_scatter, out_shardings=self._sharding)
+
+    def _gather_to_dev0(self, params, idx):
+        # one jit'd gather (not leaf-by-leaf eager dispatch), landed on the
+        # first device so downstream consumers compile single-device
+        return jax.device_put(self._gather(params, idx), self._dev0)
+
+    def _scatter_rows(self, params, idx, sub):
+        # jit rejects mixed input device sets: replicate the (dev0-committed)
+        # subset onto the mesh before the pinned-output scatter
+        sub = jax.device_put(sub, self._replicated)
+        return self._scatter(params, idx, sub)
+
+    def gather_encoders(self, pairs):
+        bucket, idx = self._encoder_slots(pairs)
+        if self._is_identity(idx, bucket.size):
+            return bucket.params
+        return self._gather_to_dev0(bucket.params, idx)
+
+    def scatter_encoders(self, pairs, stacked):
+        bucket, idx = self._encoder_slots(pairs)
+        if self._is_identity(idx, bucket.size):
+            bucket.params = shard_rows(stacked, self.state.mesh)
+        else:
+            bucket.params = self._scatter_rows(bucket.params, idx, stacked)
+
+    def gather_fusion(self, clients):
+        bucket, idx = self._fusion_slots(clients)
+        if self._is_identity(idx, bucket.size):
+            return bucket.params
+        return self._gather_to_dev0(bucket.params, idx)
+
+    def scatter_fusion(self, clients, stacked):
+        bucket, idx = self._fusion_slots(clients)
+        if self._is_identity(idx, bucket.size):
+            bucket.params = shard_rows(stacked, self.state.mesh)
+        else:
+            bucket.params = self._scatter_rows(bucket.params, idx, stacked)
+
+
+def _stack_padded(trees, slots: Sequence[int], size: int):
+    """Stack pytrees into a [size, ...] stack at the given slots; unassigned
+    slots are zero rows (masked to weight 0 by every consumer)."""
+    idx = np.asarray(slots, np.int64)
+
+    def leaf(*leaves):
+        x = jnp.stack(leaves)
+        if size == len(leaves) and np.array_equal(idx, np.arange(size)):
+            return x
+        return jnp.zeros((size,) + x.shape[1:], x.dtype).at[idx].set(x)
+
+    return jax.tree.map(leaf, *trees)
+
+
+@dataclass
+class ShardedFederationState(FederationState):
+    """FederationState whose resident stacks are sharded over a client mesh.
+
+    The decision matrices (presence/sizes/recency/losses) stay host-side
+    numpy exactly like the engine's — they are O(K·M) scalars consumed by
+    the selection programs, which shard their own inputs — but the
+    parameter buckets live shard-major padded on the mesh."""
+    mesh: Optional[Mesh] = None
+    shard_of: Optional[np.ndarray] = None      # [K] shard id per client row
+
+    @classmethod
+    def build_sharded(cls, clients, spec, qbits: int, *, mesh: Mesh,
+                      shard_of: Optional[np.ndarray] = None
+                      ) -> "ShardedFederationState":
+        state = cls.build(clients, spec, qbits, stack=False)
+        K = len(state.clients)
+        D = mesh.shape[CLIENT_AXIS]
+        if shard_of is None:
+            shard_of = np.arange(K, dtype=np.int64) % D
+        shard_of = np.asarray(shard_of, np.int64)
+        if shard_of.shape != (K,) or (K and not
+                                      (0 <= shard_of.min() and
+                                       shard_of.max() < D)):
+            raise ValueError(f"shard_of must map {K} clients into [0, {D})")
+        state.mesh = mesh
+        state.shard_of = shard_of
+        state.store = ShardedStore(state)
+        state._stack_population()
+        return state
+
+    def _stack_population(self) -> None:
+        from repro.core.batched import _fusion_key
+        D = self.mesh.shape[CLIENT_AXIS]
+        enc_groups: Dict[Tuple, List[Tuple[int, str]]] = {}
+        for k, c in enumerate(self.clients):
+            for m in c.modality_names:
+                key = (tuple(np.asarray(c.train.modalities[m]).shape[1:]),
+                       c.spec.num_classes)
+                enc_groups.setdefault(key, []).append((k, m))
+        for b, key in enumerate(sorted(enc_groups, key=repr)):
+            pairs = enc_groups[key]
+            slots, size = shard_slots([self.shard_of[k] for k, _ in pairs], D)
+            params = shard_rows(_stack_padded(
+                [self.clients[k].encoders[m] for k, m in pairs],
+                slots, size), self.mesh)
+            self.enc_buckets[b] = _ShardedEncBucket(key, pairs, params,
+                                                    slots=slots, size=size)
+            for (k, m), s in zip(pairs, slots):
+                self.enc_slot[(k, m)] = (b, s)
+        fus_groups: Dict[Tuple, List[int]] = {}
+        for k, c in enumerate(self.clients):
+            fus_groups.setdefault(_fusion_key(c), []).append(k)
+        for b, key in enumerate(sorted(fus_groups, key=repr)):
+            rows = fus_groups[key]
+            slots, size = shard_slots([self.shard_of[k] for k in rows], D)
+            params = shard_rows(_stack_padded(
+                [self.clients[k].fusion for k in rows], slots, size),
+                self.mesh)
+            self.fusion_buckets[b] = _ShardedFusionBucket(key, rows, params,
+                                                          slots=slots,
+                                                          size=size)
+            for k, s in zip(rows, slots):
+                self.fusion_slot[k] = (b, s)
+
+    def write_back(self) -> None:
+        # padded slot ids, not enumerate order (the engine's assumption)
+        for bucket in self.enc_buckets.values():
+            for (k, m), s in zip(bucket.pairs, bucket.slots):
+                self.clients[k].encoders[m] = jax.tree.map(
+                    lambda v: v[s], bucket.params)
+        for bucket in self.fusion_buckets.values():
+            for k, s in zip(bucket.rows, bucket.slots):
+                self.clients[k].fusion = jax.tree.map(
+                    lambda v: v[s], bucket.params)
+
+
+# ---------------------------------------------------------------------------
+# shard_map'ped local learning
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _epoch_program(mesh: Mesh, lr: float):
+    """``masked_batched_epoch``'s body under ``shard_map``: each device runs
+    the vmapped scan over its own rows — per-row math is lane-independent,
+    so results match the engine's whole-bucket vmap."""
+    def body(params, xs, ys, ws):
+        def client_epoch(p, bx, by, bw):
+            def step(pp, xyw):
+                x, y, w = xyw
+                loss, g = jax.value_and_grad(masked_encoder_loss)(pp, x, y, w)
+                return jax.tree.map(lambda a, b: a - lr * b, pp, g), loss
+            return jax.lax.scan(step, p, (bx, by, bw))
+        return jax.vmap(client_epoch)(params, xs, ys, ws)
+
+    spec = client_spec()
+    return jax.jit(shard_map(body, mesh=mesh,
+                             in_specs=(spec, spec, spec, spec),
+                             out_specs=(spec, spec)))
+
+
+def _train_encoder_bucket(state: ShardedFederationState, bucket, plan_of,
+                          cfg) -> None:
+    """One resident bucket's encoder phase, full padded stack.
+
+    Only clients in ``plan_of`` (this round's available cohort) get real
+    sample masks; every other slot — absent client or padding — trains as
+    an exact no-op and keeps its params bit-identical."""
+    from repro.core.batched import num_steps, padded_perm_indices
+    B, E = cfg.batch_size, cfg.local_epochs
+    live = []                               # (slot, client, modality, plan)
+    for (k, m), s in zip(bucket.pairs, bucket.slots):
+        c = state.clients[k]
+        p = plan_of.get(c.client_id)
+        if p is not None:
+            live.append((s, c, m, p))
+    if not live:
+        return
+    if not E:
+        for _, c, m, _ in live:
+            c.losses[m] = 0.0
+        return
+    size = bucket.size
+    feat = bucket.key[0]
+    n_max = max(c.train.num_samples for _, c, _, _ in live)
+    steps = max(num_steps(c.train.num_samples, B) for _, c, _, _ in live)
+    x = np.zeros((size, n_max) + tuple(feat), np.float32)
+    y = np.zeros((size, n_max), np.int32)
+    for s, c, m, _ in live:
+        x[s] = c.padded_modality(c.train, m, n_max)
+        y[s] = c.padded_labels(c.train, n_max)
+    perms: List[np.ndarray] = [np.zeros(0, np.int64)] * size
+    ns = [0] * size
+    for s, c, _, _ in live:
+        ns[s] = c.train.num_samples
+    gather = np.arange(size)[:, None]
+    sharding = jax.sharding.NamedSharding(state.mesh, client_spec())
+    program = _epoch_program(state.mesh, float(cfg.lr_encoder))
+    params, le = bucket.params, None
+    for e in range(E):
+        for s, _, m, p in live:
+            perms[s] = p.encoder_perms[m][e]
+        idx, w = padded_perm_indices(perms, ns, steps, B)
+        xe = x[gather, idx].reshape(size, steps, B, *x.shape[2:])
+        ye = y[gather, idx].reshape(size, steps, B)
+        ws = w.reshape(size, steps, B)
+        params, le = program(params,
+                             jax.device_put(xe, sharding),
+                             jax.device_put(ye, sharding),
+                             jax.device_put(ws, sharding))
+    bucket.params = params
+    last = hostsync.fetch(le).astype(np.float64)   # one fetch per bucket
+    for s, c, m, _ in live:
+        c.losses[m] = float(last[s, :num_steps(c.train.num_samples,
+                                               B)].mean())
+
+
+def sharded_local_learning(avail, cfg, rng: np.random.Generator,
+                           state: ShardedFederationState) -> None:
+    """Algorithm 1's Local Learning on the sharded population.
+
+    Draws the loop-order permutation plan first (the backends' RNG-parity
+    contract), trains every encoder bucket's full padded stack under
+    ``shard_map``, then runs Stage-#1 fusion through the shared batched
+    path against the sharded store (fusion stacks are tiny; the gathers go
+    through :class:`ShardedStore`)."""
+    from repro.core.batched import (_fusion_buckets, plan_permutations,
+                                    train_population_fusion)
+    plans = plan_permutations(avail, cfg.local_epochs, rng)
+    plan_of = {p.client.client_id: p for p in plans}
+    for p in plans:
+        p.client.losses = {}
+    for b in sorted(state.enc_buckets):
+        _train_encoder_bucket(state, state.enc_buckets[b], plan_of, cfg)
+    for idxs in _fusion_buckets(avail, cfg.batch_size):
+        train_population_fusion([avail[i] for i in idxs],
+                                [plans[i].fusion_perms for i in idxs],
+                                epochs=cfg.local_epochs, lr=cfg.lr_fusion,
+                                batch_size=cfg.batch_size,
+                                store=state.store)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 21 as a masked psum
+# ---------------------------------------------------------------------------
+
+def _psum_normalized(local, w):
+    """Weighted contraction of one shard's rows + the global reduction:
+    normalize by the cross-shard weight sum (engine guard: ``max(Σw,
+    1e-12)``, so an all-zero shard — or round — yields zeros, not NaN)."""
+    wsum = jax.lax.psum(jnp.sum(w), CLIENT_AXIS)
+    wn = w / jnp.maximum(wsum, 1e-12)
+    part = jax.tree.map(
+        lambda x: jnp.einsum("k,k...->...", wn, x.astype(jnp.float32)),
+        local)
+    return jax.lax.psum(part, CLIENT_AXIS)
+
+
+@functools.lru_cache(maxsize=None)
+def _aggregate_program(mesh: Mesh):
+    def body(stacked, w):
+        return _psum_normalized(stacked, w.astype(jnp.float32))
+    spec = client_spec()
+    return jax.jit(shard_map(body, mesh=mesh, in_specs=(spec, spec),
+                             out_specs=P()))
+
+
+@functools.lru_cache(maxsize=None)
+def _aggregate_quantized_program(mesh: Mesh, bits: int):
+    """§4.10 uplink fused into the psum: each shard quantizes its rows
+    (per-row per-tensor ranges — codes are independent of shard layout;
+    all-zero padding rows quantize safely under the zero-range guard),
+    dequantizes, and contracts, and only the [leaf]-shaped partial sums
+    cross shards."""
+    def body(stacked, w):
+        codes, scales, zeros = quantize_population(stacked, bits=bits)
+        deq = jax.tree.map(
+            lambda c, s, z: jax.vmap(dequantize_tensor)(c, s, z),
+            codes, scales, zeros)
+        return _psum_normalized(deq, w.astype(jnp.float32))
+    spec = client_spec()
+    return jax.jit(shard_map(body, mesh=mesh, in_specs=(spec, spec),
+                             out_specs=P()))
+
+
+def aggregate_modality_sharded(state: ShardedFederationState,
+                               clients, modality: str,
+                               sample_counts: Sequence[int],
+                               bits: int) -> Dict:
+    """One modality's Eq. 21 over the resident sharded bucket.
+
+    Instead of gathering the selected rows (a cross-shard reshuffle every
+    round), the *whole* bucket contracts under a [size] weight vector that
+    is ``num_samples`` on this round's selected uploads and 0 elsewhere —
+    unselected, unavailable, and padding rows all contribute exact zero
+    terms to the psum."""
+    locs = [state.enc_slot[(state.row_of[c.client_id], modality)]
+            for c in clients]
+    bids = {b for b, _ in locs}
+    assert len(bids) == 1, "uploads span shape-family buckets"
+    bucket = state.enc_buckets[bids.pop()]
+    w = np.zeros(bucket.size, np.float32)
+    for (_, s), n in zip(locs, sample_counts):
+        w[s] = float(n)
+    wdev = jax.device_put(
+        w, jax.sharding.NamedSharding(state.mesh, client_spec()))
+    if bits >= 32:
+        agg = _aggregate_program(state.mesh)(bucket.params, wdev)
+    else:
+        agg = _aggregate_quantized_program(state.mesh, int(bits))(
+            bucket.params, wdev)
+    ref = state.clients[state.row_of[clients[0].client_id]]\
+        .encoders[modality]
+    return jax.tree.map(lambda a, r: a.astype(r.dtype), agg, ref)
+
+
+# ---------------------------------------------------------------------------
+# shard_map'ped modality selection (Eqs. 12–16)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _sharded_modality_program(mesh: Mesh, rows_per_shard: int, M: int,
+                              gamma: int, alpha_s: float, alpha_c: float,
+                              alpha_r: float):
+    """The engine's AOT modality program under ``shard_map``: every device
+    ranks its own ``[rows_per_shard, M]`` candidate block (the math is
+    row-wise — no collectives), compiled exactly like the engine's (f64,
+    backend opt level 0) so outcomes stay bit-identical to numpy."""
+    fn = functools.partial(_modality_program, gamma=gamma, alpha_s=alpha_s,
+                           alpha_c=alpha_c, alpha_r=alpha_r)
+    spec = client_spec()
+    mapped = shard_map(fn, mesh=mesh,
+                       in_specs=(spec, spec, spec, spec, spec, P()),
+                       out_specs=(spec, spec, spec, spec))
+    D = mesh.shape[CLIENT_AXIS]
+    kp = rows_per_shard * D
+    with enable_x64():
+        lowered = jax.jit(mapped).lower(
+            _f64(kp, M), _f64(kp, M), _f64(kp, M),
+            jax.ShapeDtypeStruct((kp, M), jnp.bool_),
+            jax.ShapeDtypeStruct((kp, M), jnp.int64), _f64())
+        return lowered.compile(compiler_options=_COMPILER_OPTIONS)
+
+
+def select_modalities_sharded(phi, sizes, recency, presence, name_rank,
+                              shard_ids, mesh: Mesh, *, t: int, gamma: int,
+                              alpha_s: float, alpha_c: float, alpha_r: float
+                              ) -> ModalityDecision:
+    """Population top-γ (Eqs. 12–16) with the candidate block sharded over
+    the client mesh — outcome-identical to
+    ``selection_engine.select_modalities_arrays`` row for row.
+
+    Candidates permute to the shard-major layout (each shard's block padded
+    to a shared power-of-two row count, padding rows absent), one
+    ``shard_map`` program ranks all blocks, and the same three host fetches
+    as the engine bring back mask/order/counts — host syncs stay O(1) in
+    mesh size."""
+    phi = np.asarray(phi, np.float64)
+    n, M = phi.shape
+    D = mesh.shape[CLIENT_AXIS]
+    # per-shard block = pow2 of the largest shard group, so a run with §4.9
+    # availability sees O(log K) distinct shapes (the engine's pow2 rule)
+    counts = np.bincount(np.asarray(shard_ids, np.int64), minlength=D) \
+        if n else np.zeros(D, np.int64)
+    rows = _pow2(int(counts.max()) if n else 1)
+    kp = rows * D
+    fill = np.zeros(D, np.int64)
+    pos = np.zeros(n, np.int64)
+    for i, d in enumerate(np.asarray(shard_ids, np.int64)):
+        pos[i] = d * rows + fill[d]
+        fill[d] += 1
+    pphi = np.zeros((kp, M), np.float64)
+    psizes = np.zeros((kp, M), np.float64)
+    prec = np.zeros((kp, M), np.float64)
+    ppres = np.zeros((kp, M), bool)
+    pphi[pos] = phi
+    psizes[pos] = np.asarray(sizes, np.float64)
+    prec[pos] = np.asarray(recency, np.float64)
+    ppres[pos] = np.asarray(presence, bool)
+    prank = np.broadcast_to(np.asarray(name_rank, np.int64),
+                            (kp, M)).copy()
+    comp = _sharded_modality_program(mesh, rows, M, int(gamma),
+                                     float(alpha_s), float(alpha_c),
+                                     float(alpha_r))
+    with enable_x64():
+        mask, order, cnts, _ = comp(pphi, psizes, prec, ppres, prank,
+                                    np.float64(t))
+    return ModalityDecision(hostsync.fetch(mask)[pos],
+                            hostsync.fetch(order)[pos],
+                            hostsync.fetch(cnts)[pos])

@@ -3,7 +3,8 @@ jit'd mesh program.
 
     PYTHONPATH=src python -m repro.launch.fed_train --dataset ucihar \
         --rounds 3 [--devices 8] [--gamma 1] [--scenario natural] \
-        [--hierarchical] [--quantize-bits 8]
+        [--hierarchical] [--quantize-bits 8] \
+        [--backend mesh|async|sharded] [--mesh-clients D]
 
 The K-client population is stacked and sharded over the mesh 'data' axis,
 *per modality*: every modality's encoder population trains E·steps of
@@ -80,11 +81,17 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0,
                     help="rng seed for --client-strategy random")
     ap.add_argument("--backend", default="mesh",
-                    choices=["mesh", "async"],
+                    choices=["mesh", "async", "sharded"],
                     help="mesh: one jit'd multi-modality round sharded "
                          "over the device mesh; async: the event-driven "
                          "virtual-time runtime (repro.core.scheduler) on "
-                         "the same federation")
+                         "the same federation; sharded: the paper-faithful "
+                         "simulator with its population split row-wise "
+                         "over a client mesh (repro.core.sharded)")
+    ap.add_argument("--mesh-clients", type=int, default=0,
+                    help="sharded: number of devices on the 1-D client "
+                         "mesh (0 = every visible device); forces that "
+                         "many host devices if --devices is unset")
     ap.add_argument("--availability-trace", default=None,
                     help="§4.9 churn trace: 'bernoulli:RATE' or "
                          "'markov:P_DROP,P_JOIN' (async backend)")
@@ -110,9 +117,11 @@ def main(argv=None):
     if args.quantize_bits < 32 and not 1 <= args.quantize_bits <= 16:
         ap.error("--quantize-bits must be 1..16 or 32")
 
-    if args.devices:
+    n_force = args.devices or (args.mesh_clients
+                               if args.backend == "sharded" else 0)
+    if n_force:
         os.environ["XLA_FLAGS"] = (
-            f"--xla_force_host_platform_device_count={args.devices}")
+            f"--xla_force_host_platform_device_count={n_force}")
 
     import jax
     import jax.numpy as jnp
@@ -152,17 +161,30 @@ def main(argv=None):
         if unknown:
             raise SystemExit(f"unknown modalities: {sorted(unknown)}")
 
-    if args.backend == "async":
-        # Same partition, but through the virtual-time runtime: an event
-        # heap schedules each client's compute/uplink completion, the
-        # server aggregates buffered arrivals with staleness-discounted
-        # weights, and a reporting deadline preempts stragglers.
+    if args.backend in ("async", "sharded"):
+        # Same partition, but through the simulator: async runs the
+        # event-driven virtual-time runtime (an event heap schedules each
+        # client's compute/uplink completion, buffered arrivals aggregate
+        # with staleness-discounted weights, a reporting deadline preempts
+        # stragglers); sharded runs the synchronous round with the
+        # population split row-wise over a 1-D client mesh and Eq. 21 as a
+        # masked psum (repro.core.sharded).
         from repro.core.rounds import (MFedMCConfig, build_federation,
                                        run_federation)
         # --modalities restricts every client's uplink candidates, the
         # same way the mesh path's masks do
         allowed = (None if args.modalities == "all"
                    else {c.client_id: set(modalities) for c in clients})
+        extra = {}
+        if args.backend == "async":
+            # async-only knobs: run_federation rejects them elsewhere
+            extra = dict(deadline_s=args.deadline,
+                         buffer_size=args.buffer_size,
+                         staleness_discount=args.staleness_discount,
+                         straggler_fraction=args.straggler_fraction,
+                         link_sigma=args.link_sigma)
+        else:
+            extra = dict(mesh_clients=args.mesh_clients or None)
         cfg = MFedMCConfig(
             rounds=args.rounds, local_epochs=1, batch_size=args.batch,
             gamma=args.gamma, delta=args.delta,
@@ -171,24 +193,28 @@ def main(argv=None):
             quantize_bits=args.quantize_bits,
             allowed_modalities=allowed,
             availability_trace=args.availability_trace,
-            deadline_s=args.deadline, buffer_size=args.buffer_size,
-            staleness_discount=args.staleness_discount,
-            straggler_fraction=args.straggler_fraction,
-            link_sigma=args.link_sigma,
-            background_size=24, eval_size=24)
+            background_size=24, eval_size=24, **extra)
         sim_clients, sim_spec = build_federation(
             args.dataset, args.scenario, cfg=cfg, seed=args.seed,
             client_datasets=clients)
-        print(f"{len(sim_clients)} clients on the virtual clock "
-              f"(scenario={args.scenario}, "
-              f"trace={args.availability_trace or 'always'}, "
-              f"deadline={args.deadline}, buffer={args.buffer_size})")
+        if args.backend == "async":
+            print(f"{len(sim_clients)} clients on the virtual clock "
+                  f"(scenario={args.scenario}, "
+                  f"trace={args.availability_trace or 'always'}, "
+                  f"deadline={args.deadline}, buffer={args.buffer_size})")
+        else:
+            print(f"{len(sim_clients)} clients sharded over "
+                  f"{args.mesh_clients or len(jax.devices())} devices "
+                  f"(scenario={args.scenario}, "
+                  f"trace={args.availability_trace or 'always'})")
         h = run_federation(sim_clients, sim_spec, cfg, verbose=True,
-                           backend="async")
-        dropped = sum(len(r.dropped) for r in h.records)
+                           backend=args.backend)
+        tail = ""
+        if args.backend == "async":
+            dropped = sum(len(r.dropped) for r in h.records)
+            tail = f" makespan={h.makespan_s:.1f}s dropped={dropped}"
         print(f"done: acc={h.final_accuracy():.4f} "
-              f"comm={h.comm_mb[-1]:.2f}MB "
-              f"makespan={h.makespan_s:.1f}s dropped={dropped}")
+              f"comm={h.comm_mb[-1]:.2f}MB" + tail)
         return 0
 
     K, M = len(clients), len(modalities)

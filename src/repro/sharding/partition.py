@@ -7,17 +7,79 @@ Axis conventions (see ``launch/mesh.py``):
 
 Param rules are matched on (leaf name, ndim). Leading stack axes (layer /
 period stacks) map to ``None`` by right-aligning the rule with the shape.
+
+A fourth, *federation-level* axis lives here too:
+    clients — the population axis of the sharded federation backend
+              (``repro.core.sharded``): resident ``[G, ...]`` encoder /
+              fusion stacks and ``[K, M]`` decision blocks split row-wise
+              across devices of a 1-D client mesh.
 """
 from __future__ import annotations
 
 import contextvars
-from typing import Any, Optional, Tuple
+from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import InputShape, ModelConfig
+
+# ---------------------------------------------------------------------------
+# client axis (sharded federation population)
+# ---------------------------------------------------------------------------
+
+CLIENT_AXIS = "clients"
+
+
+def client_mesh(n_shards: Optional[int] = None) -> Mesh:
+    """A 1-D mesh over the first ``n_shards`` devices (all devices when
+    ``None``/0) with the federation's ``clients`` axis."""
+    devices = jax.devices()
+    n = len(devices) if not n_shards else int(n_shards)
+    if not 1 <= n <= len(devices):
+        raise ValueError(f"mesh_clients={n_shards} needs 1..{len(devices)} "
+                         f"devices (have {len(devices)}; force more with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count)")
+    return Mesh(np.asarray(devices[:n]), (CLIENT_AXIS,))
+
+
+def client_spec() -> P:
+    """Leading-axis client sharding — rows of the [K, M] decision blocks and
+    the resident [G, ...] parameter stacks."""
+    return P(CLIENT_AXIS)
+
+
+def shard_rows(tree, mesh: Mesh):
+    """Pin every leaf's leading axis to the client axis. Used after host
+    scatters (`.at[idx].set`) whose output sharding XLA would otherwise
+    choose freely."""
+    sharding = NamedSharding(mesh, client_spec())
+    return jax.tree.map(lambda v: jax.device_put(v, sharding), tree)
+
+
+def shard_slots(shard_ids: Sequence[int], n_shards: int
+                ) -> Tuple[List[int], int]:
+    """Shard-major slot layout for an uneven client→shard assignment.
+
+    Item i (living on ``shard_ids[i]``) gets slot ``d * G + j`` where G is
+    the *largest* per-shard group (so every shard's block is the same size —
+    the uniform-block layout ``shard_map`` requires) and j counts the item's
+    shard-local position in input order. Returns (slots, padded total G·D);
+    unassigned slots are padding rows that callers must mask to weight 0.
+    With one shard the layout degenerates to the identity (no padding), so
+    a 1×1 mesh reproduces the engine backend's bucket layout exactly."""
+    per: List[List[int]] = [[] for _ in range(n_shards)]
+    for i, d in enumerate(shard_ids):
+        per[int(d)].append(i)
+    group = max([len(p) for p in per] + [1])
+    slots = [0] * len(list(shard_ids))
+    for d, items in enumerate(per):
+        for j, i in enumerate(items):
+            slots[i] = d * group + j
+    return slots, group * n_shards
+
 
 # ---------------------------------------------------------------------------
 # parameter rules

@@ -1,10 +1,65 @@
-"""Shared fixtures. NOTE: no XLA device-count forcing here — smoke tests and
-benchmarks must see the single real CPU device (the dry-run launcher is the
-only entry point that forces 512 host devices, in its own process)."""
+"""Shared fixtures + the multi-device test tier.
+
+NOTE: no XLA device-count forcing at import here — smoke tests and
+benchmarks must see the single real CPU device. Tests marked
+``@pytest.mark.multidevice`` need a real 8-way mesh instead; since
+``XLA_FLAGS=--xla_force_host_platform_device_count`` only takes effect
+before jax initializes, this conftest re-execs each marked test in a fresh
+subprocess with the flag set (and reports its outcome as the test's own).
+A session that *already* sees ≥8 devices — CI's forced-8 job, or the child
+itself — runs the marked tests inline with zero overhead.
+"""
+import os
+import subprocess
+import sys
+
 import numpy as np
 import pytest
+
+MULTIDEVICE_DEVICES = 8
+_CHILD_ENV = "REPRO_MULTIDEVICE_CHILD"
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+def _device_count() -> int:
+    import jax
+    return jax.device_count()
+
+
+def run_forced_multidevice(nodeid: str) -> subprocess.CompletedProcess:
+    """Re-exec one pytest node under a forced 8-device host platform."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count="
+                        f"{MULTIDEVICE_DEVICES}").strip()
+    env[_CHILD_ENV] = "1"
+    env.setdefault("PYTHONPATH", os.path.join(_ROOT, "src"))
+    return subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "-p", "no:cacheprovider",
+         nodeid],
+        cwd=_ROOT, env=env, capture_output=True, text=True, timeout=1500)
+
+
+def pytest_runtest_setup(item):
+    if item.get_closest_marker("multidevice") is None:
+        return
+    if os.environ.get(_CHILD_ENV):
+        if _device_count() < MULTIDEVICE_DEVICES:
+            pytest.fail(f"multidevice child saw {_device_count()} devices; "
+                        "XLA_FLAGS forcing did not take effect")
+        return                                  # child: run inline
+    if _device_count() >= MULTIDEVICE_DEVICES:
+        return                                  # forced-8 session: inline
+    res = run_forced_multidevice(item.nodeid)
+    if res.returncode != 0:
+        pytest.fail("multidevice subprocess failed "
+                    f"(exit {res.returncode}):\n{res.stdout[-6000:]}\n"
+                    f"{res.stderr[-2000:]}", pytrace=False)
+    # the child already ran (and passed) this exact node on 8 devices;
+    # make the local call a no-op so the node reports one green result
+    item.runtest = lambda: None

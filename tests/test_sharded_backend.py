@@ -1,0 +1,336 @@
+"""Parity oracles for the client-axis sharded population backend.
+
+Three layers of pinning (see ``repro.core.sharded``):
+
+1. **Engine oracle (1×1 mesh, inline).** On a one-device mesh the
+   shard-major layout degenerates to the engine's bucket order, so
+   ``backend="sharded"`` must match ``backend="engine"`` exactly on
+   uploads/ledger/selection outcomes and ≤1e-5 on encoders — the same
+   contract every backend pair in this repo pins.
+2. **Mesh-size invariance (8 devices, ``multidevice`` tier).** The same
+   federation run on a 1-shard and an 8-shard mesh must agree: exact
+   uploads/ledger/selection, ≤1e-5 encoders at full precision. At 8-bit
+   uplink the tolerance is one quantization step: cross-mesh training
+   drift is ~1 ulp (vmap width changes XLA's fp32 codegen), but a 1-ulp
+   shift can flip a row's nearest code, moving its dequantized value by
+   range/(2^8−1) ≈ 4e-3 — amplified drift, not an aggregation bug.
+3. **Masked-psum properties.** Eq. 21's psum is invariant to the
+   client→shard assignment (hypothesis property + a seeded sweep for
+   environments without hypothesis), and an all-empty shard — or an
+   entirely empty weight vector — contributes exact zeros, never NaN.
+"""
+import numpy as np
+import pytest
+
+from repro.core.rounds import MFedMCConfig, build_federation, run_federation
+
+TOL = 1e-5
+# one 8-bit quantization step of the widest encoder tensor (see layer 2)
+QTOL8 = 5e-3
+
+
+def _cfg(**kw):
+    base = dict(rounds=2, local_epochs=1, batch_size=8, seed=0,
+                modality_strategy="priority", client_strategy="low_loss",
+                background_size=12, eval_size=12, gamma=1)
+    base.update(kw)
+    return MFedMCConfig(**base)
+
+
+def _run_built(backend, clients, spec, cfg):
+    server = {}
+    hist = run_federation(clients, spec, cfg, server_encoders=server,
+                          backend=backend)
+    return server, hist, clients
+
+
+def _run_ucihar(backend, mesh=None, **cfg_kw):
+    cfg = _cfg(mesh_clients=mesh, **cfg_kw)
+    clients, spec = build_federation("ucihar", "iid", cfg=cfg, seed=0,
+                                     samples_per_client=24)
+    return _run_built(backend, clients, spec, cfg)
+
+
+def _run_synth(backend, K, mesh=None, n=20, **cfg_kw):
+    from benchmarks.bench_batched_round import synthetic_federation
+    cfg = _cfg(mesh_clients=mesh, **cfg_kw)
+    clients, spec = synthetic_federation(K, n=n, seed=0)
+    return _run_built(backend, clients, spec, cfg)
+
+
+def _assert_records_match(h_a, h_b):
+    assert len(h_a.records) == len(h_b.records)
+    for r_a, r_b in zip(h_a.records, h_b.records):
+        assert r_b.uploads == r_a.uploads, f"round {r_a.round}"
+        assert r_b.comm_mb == r_a.comm_mb, f"round {r_a.round}"
+        assert r_b.shapley.keys() == r_a.shapley.keys()
+
+
+def _assert_server_match(se_a, se_b, atol=TOL):
+    assert set(se_a) == set(se_b)
+    for m in se_a:
+        for k in se_a[m]:
+            np.testing.assert_allclose(np.asarray(se_b[m][k]),
+                                       np.asarray(se_a[m][k]),
+                                       atol=atol, rtol=0,
+                                       err_msg=f"{m}/{k}")
+
+
+def _assert_losses_match(cl_a, cl_b, atol=TOL):
+    for a, b in zip(cl_a, cl_b):
+        for m in a.modality_names:
+            assert b.losses[m] == pytest.approx(a.losses[m], abs=atol), \
+                (a.client_id, m)
+
+
+# ---------------------------------------------------------------------------
+# layer 1: sharded-on-1×1-mesh ≡ engine (inline, single device)
+# ---------------------------------------------------------------------------
+
+class TestShardedEngineOracle:
+    def test_1x1_mesh_matches_engine(self):
+        se_e, h_e, cl_e = _run_ucihar("engine")
+        se_s, h_s, cl_s = _run_ucihar("sharded", mesh=1)
+        _assert_records_match(h_e, h_s)
+        _assert_server_match(se_e, se_s)
+        _assert_losses_match(cl_e, cl_s)
+        np.testing.assert_allclose(h_s.accuracies, h_e.accuracies,
+                                   atol=1e-6)
+
+    def test_1x1_mesh_matches_engine_quantized(self):
+        se_e, h_e, _ = _run_ucihar("engine", quantize_bits=8)
+        se_s, h_s, _ = _run_ucihar("sharded", mesh=1, quantize_bits=8)
+        _assert_records_match(h_e, h_s)
+        _assert_server_match(se_e, se_s)
+
+    def test_1x1_mesh_matches_engine_ragged(self):
+        # three modality sets + skewed sample counts: uneven buckets
+        from benchmarks.bench_batched_round import ragged_federation
+        cfg = _cfg(rounds=1)
+        runs = []
+        for backend, mesh in (("engine", None), ("sharded", 1)):
+            c = _cfg(rounds=1, mesh_clients=mesh)
+            clients, spec = ragged_federation(9, n=20, seed=0)
+            runs.append(_run_built(backend, clients, spec, c))
+        (se_e, h_e, cl_e), (se_s, h_s, cl_s) = runs
+        del cfg
+        _assert_records_match(h_e, h_s)
+        _assert_server_match(se_e, se_s)
+        _assert_losses_match(cl_e, cl_s)
+
+    def test_selection_program_matches_engine(self):
+        # the shard_map'ped Eqs. 12–16 program is outcome-identical to the
+        # engine's, row for row, on a random candidate block
+        from repro.core.selection_engine import (lexicographic_rank,
+                                                 select_modalities_arrays)
+        from repro.core.sharded import client_mesh, select_modalities_sharded
+        rng = np.random.default_rng(3)
+        n, M = 13, 4
+        phi = rng.standard_normal((n, M))
+        sizes = rng.uniform(1e3, 1e6, (n, M))
+        recency = rng.integers(0, 7, (n, M)).astype(float)
+        presence = rng.random((n, M)) < 0.8
+        presence[:, 0] = True                       # no empty rows
+        rank = lexicographic_rank([f"m{j}" for j in range(M)])
+        ref = select_modalities_arrays(phi, sizes, recency, presence, rank,
+                                       t=5, gamma=2, alpha_s=1 / 3,
+                                       alpha_c=1 / 3, alpha_r=1 / 3)
+        dec = select_modalities_sharded(
+            phi, sizes, recency, presence, rank,
+            np.zeros(n, np.int64), client_mesh(1), t=5, gamma=2,
+            alpha_s=1 / 3, alpha_c=1 / 3, alpha_r=1 / 3)
+        np.testing.assert_array_equal(dec.mask, ref.mask)
+        np.testing.assert_array_equal(dec.order, ref.order)
+        np.testing.assert_array_equal(dec.counts, ref.counts)
+
+    def test_config_validation(self):
+        clients, spec = build_federation("ucihar", "iid", cfg=_cfg(),
+                                         seed=0, samples_per_client=16)
+        with pytest.raises(ValueError, match="mesh_clients"):
+            run_federation(clients, spec, _cfg(mesh_clients=1),
+                           backend="engine")
+        with pytest.raises(ValueError, match="error_feedback"):
+            run_federation(clients, spec,
+                           _cfg(quantize_bits=8, error_feedback=True),
+                           backend="sharded")
+        with pytest.raises(ValueError, match="devices"):
+            run_federation(clients, spec, _cfg(mesh_clients=10 ** 6),
+                           backend="sharded")
+
+
+# ---------------------------------------------------------------------------
+# layer 2: mesh-size invariance (forced 8 devices)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.multidevice
+class TestMeshSizeInvariance:
+    def test_mesh8_matches_mesh1_across_k(self):
+        # K=8: one client per shard; K=24: uneven ucihar-style padding
+        # (3 clients on every shard for enc pairs, but selection pads);
+        # K=32: even 4/shard. One test so the compile caches amortize.
+        for K in (8, 24, 32):
+            se_1, h_1, cl_1 = _run_synth("sharded", K, mesh=1)
+            se_8, h_8, cl_8 = _run_synth("sharded", K, mesh=8)
+            _assert_records_match(h_1, h_8)
+            _assert_server_match(se_1, se_8)
+            _assert_losses_match(cl_1, cl_8)
+            np.testing.assert_allclose(h_8.accuracies, h_1.accuracies,
+                                       atol=1e-6)
+
+    def test_mesh8_matches_mesh1_quantized(self):
+        # 8-bit uplink: exact uploads/ledger, one-quant-step encoders
+        se_1, h_1, _ = _run_synth("sharded", 24, mesh=1, quantize_bits=8)
+        se_8, h_8, _ = _run_synth("sharded", 24, mesh=8, quantize_bits=8)
+        _assert_records_match(h_1, h_8)
+        _assert_server_match(se_1, se_8, atol=QTOL8)
+
+    def test_mesh8_matches_engine(self):
+        # transitive closure spelled out: 8-shard sharded vs the engine
+        se_e, h_e, cl_e = _run_synth("engine", 16)
+        se_8, h_8, cl_8 = _run_synth("sharded", 16, mesh=8)
+        _assert_records_match(h_e, h_8)
+        _assert_server_match(se_e, se_8)
+        _assert_losses_match(cl_e, cl_8)
+
+
+# ---------------------------------------------------------------------------
+# layer 3: masked-psum properties (forced 8 devices)
+# ---------------------------------------------------------------------------
+
+def _psum_aggregate(values, weights, assignment, n_shards):
+    """Run the sharded Eq. 21 program under an explicit client→shard
+    assignment; returns the [leaf]-shaped aggregate as numpy."""
+    import jax
+    from repro.core.sharded import _aggregate_program
+    from repro.sharding.partition import client_mesh, client_spec, shard_slots
+    mesh = client_mesh(n_shards)
+    slots, size = shard_slots(assignment, n_shards)
+    stacked = np.zeros((size,) + values.shape[1:], np.float32)
+    w = np.zeros(size, np.float32)
+    stacked[np.asarray(slots)] = values
+    w[np.asarray(slots)] = weights
+    sharding = jax.sharding.NamedSharding(mesh, client_spec())
+    out = _aggregate_program(mesh)(
+        {"p": jax.device_put(stacked, sharding)},
+        jax.device_put(w, sharding))
+    return np.asarray(out["p"])
+
+
+def _reference_aggregate(values, weights):
+    w = np.asarray(weights, np.float32)
+    w = w / max(w.sum(), 1e-12)
+    return np.einsum("k,k...->...", w, np.asarray(values, np.float32))
+
+
+@pytest.mark.multidevice
+class TestMaskedPsumProperties:
+    def test_assignment_invariance_seeded_sweep(self):
+        # runs everywhere; the hypothesis variant below widens the search
+        rng = np.random.default_rng(0)
+        for trial in range(25):
+            K = int(rng.integers(1, 20))
+            values = rng.standard_normal((K, 3, 4)).astype(np.float32)
+            weights = rng.choice([0.0, 1.0, 7.0, 40.0], size=K)
+            ref = _reference_aggregate(values, weights)
+            a = rng.integers(0, 8, K)
+            b = rng.integers(0, 8, K)
+            agg_a = _psum_aggregate(values, weights, a, 8)
+            agg_b = _psum_aggregate(values, weights, b, 8)
+            np.testing.assert_allclose(agg_a, agg_b, atol=TOL, rtol=0)
+            np.testing.assert_allclose(agg_a, ref, atol=TOL, rtol=0)
+
+    def test_assignment_invariance_hypothesis(self):
+        hyp = pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        @settings(max_examples=30, deadline=None)
+        @given(data=st.data())
+        def prop(data):
+            K = data.draw(st.integers(1, 16), label="K")
+            seed = data.draw(st.integers(0, 2 ** 31 - 1), label="seed")
+            rng = np.random.default_rng(seed)
+            values = rng.standard_normal((K, 2, 3)).astype(np.float32)
+            weights = np.array(
+                data.draw(st.lists(st.sampled_from([0.0, 1.0, 5.0, 64.0]),
+                                   min_size=K, max_size=K),
+                          label="weights"), np.float32)
+            a = np.array(data.draw(st.lists(st.integers(0, 7), min_size=K,
+                                            max_size=K), label="a"))
+            b = np.array(data.draw(st.lists(st.integers(0, 7), min_size=K,
+                                            max_size=K), label="b"))
+            agg_a = _psum_aggregate(values, weights, a, 8)
+            agg_b = _psum_aggregate(values, weights, b, 8)
+            np.testing.assert_allclose(agg_a, agg_b, atol=TOL, rtol=0)
+            np.testing.assert_allclose(
+                agg_a, _reference_aggregate(values, weights),
+                atol=TOL, rtol=0)
+
+        prop()
+
+    def test_empty_shards_contribute_zero_not_nan(self):
+        # all clients on shards {0, 1}: shards 2..7 reduce over pure
+        # padding and must contribute exact zero terms
+        rng = np.random.default_rng(1)
+        values = rng.standard_normal((6, 5)).astype(np.float32)
+        weights = np.array([3.0, 0.0, 1.0, 2.0, 0.0, 4.0], np.float32)
+        agg = _psum_aggregate(values, weights, [0, 0, 0, 1, 1, 1], 8)
+        assert np.isfinite(agg).all()
+        np.testing.assert_allclose(agg, _reference_aggregate(values, weights),
+                                   atol=TOL, rtol=0)
+
+    def test_all_zero_weights_yield_zeros_not_nan(self):
+        # nobody uploaded: the max(Σw, 1e-12) guard must hold under psum
+        values = np.ones((4, 3), np.float32)
+        agg = _psum_aggregate(values, np.zeros(4, np.float32),
+                              [0, 2, 4, 6], 8)
+        assert np.isfinite(agg).all()
+        np.testing.assert_array_equal(agg, np.zeros(3, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# layer 3b: empty shard end-to-end (trace-driven, forced 8 devices)
+# ---------------------------------------------------------------------------
+
+class _FixedTrace:
+    """Deterministic §4.9 availability: the same [K] mask every round."""
+
+    def __init__(self, mask):
+        self.mask = np.asarray(mask, bool)
+
+    def step(self, rng, k):
+        assert k == len(self.mask)
+        return self.mask.copy()
+
+
+@pytest.mark.multidevice
+class TestEmptyShardRounds:
+    def test_unavailable_shard_round_end_to_end(self, monkeypatch):
+        # K=16 over D=8 (round-robin: shard d holds rows {d, d+8});
+        # shard 3's clients never report, so every round its block enters
+        # the psum with all-zero weight — results must stay finite and
+        # match the engine run under the same trace
+        K = 16
+        mask = np.ones(K, bool)
+        mask[[3, 11]] = False
+        monkeypatch.setattr("repro.core.rounds.resolve_trace",
+                            lambda cfg: _FixedTrace(mask))
+        se_e, h_e, cl_e = _run_synth("engine", K)
+        se_8, h_8, cl_8 = _run_synth("sharded", K, mesh=8)
+        _assert_records_match(h_e, h_8)
+        assert all(cid not in (3, 11) for r in h_8.records
+                   for cid, _ in r.uploads)
+        _assert_server_match(se_e, se_8)
+        for m in se_8:
+            for k in se_8[m]:
+                assert np.isfinite(np.asarray(se_8[m][k])).all()
+
+    def test_nobody_available_round(self, monkeypatch):
+        # an entirely empty round: explicit empty-upload record, no NaNs
+        monkeypatch.setattr(
+            "repro.core.rounds.resolve_trace",
+            lambda cfg: _FixedTrace(np.zeros(8, bool)))
+        se, hist, cl = _run_synth("sharded", 8, mesh=8,
+                                  rounds=1)
+        assert hist.records[0].uploads == []
+        assert hist.records[0].comm_mb == 0.0
+        assert se == {}
