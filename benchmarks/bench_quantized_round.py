@@ -17,6 +17,15 @@ come out:
   smallest sufficient dtype + per-tensor scale/zero metadata), i.e. the
   compression curve the paper's >20× claim composes with.
 
+It also micro-benchmarks the communication hot path itself
+(:func:`time_comm_path`): the REAL ``aggregate_uploads`` programs at
+K ∈ {32, 128}, ``comm_impl="fused"`` vs ``"reference"`` timed strictly
+interleaved (this host's timings drift ~2× between process phases — only
+alternating reps are comparable), with measured bytes-moved from
+``repro.core.hostsync`` reported against the
+``repro.roofline.quantized_uplink_roofline`` bounds from those same
+programs' jaxprs.
+
 Supports the ``benchmarks.run`` Row contract via :func:`run`.
 """
 from __future__ import annotations
@@ -24,13 +33,19 @@ from __future__ import annotations
 import argparse
 import json
 import time
-from typing import List
+from typing import Dict, List
+
+import jax
 
 from benchmarks.bench_batched_round import synthetic_federation
 from benchmarks.common import Row, Timer
-from repro.core.rounds import MFedMCConfig, run_federation
+from repro.core import hostsync
+from repro.core.rounds import MFedMCConfig, aggregate_uploads, run_federation
+from repro.roofline import quantized_uplink_roofline
 
 BITS = (4, 8, 16, 32)
+COMM_KS = (32, 128)
+COMM_BITS = (4, 8, 16)
 
 
 def _cfg(bits: int, **kw) -> MFedMCConfig:
@@ -53,6 +68,51 @@ def time_quantized_round(K: int, backend: str, bits: int, *, n: int = 48,
     return t.us / 1e6, float(h.records[0].comm_mb)
 
 
+def time_comm_path(K: int, bits: int, *, n: int = 48, reps: int = 7) -> Dict:
+    """Micro-bench the REAL ``aggregate_uploads`` hot path, fused vs
+    reference, strictly interleaved min-of-reps (this host's wall clock
+    drifts between process phases; alternation is the only fair timing),
+    with measured bytes-moved and the roofline bounds for the same shapes."""
+    clients, spec = synthetic_federation(K, n=n)
+    modality = spec.modality_names[0]
+    counts = [n] * K
+
+    def once(impl: str):
+        out = aggregate_uploads(clients, modality, counts, bits,
+                                comm_impl=impl)
+        jax.block_until_ready(out)
+        return out
+
+    for impl in ("fused", "reference"):  # compile both before any timing
+        once(impl)
+
+    bytes_moved = {}
+    for impl in ("fused", "reference"):
+        hostsync.reset()
+        once(impl)
+        bytes_moved[impl] = hostsync.bytes_moved()
+
+    best = {"fused": float("inf"), "reference": float("inf")}
+    for _ in range(reps):
+        for impl in ("fused", "reference"):
+            t0 = time.perf_counter()
+            once(impl)
+            best[impl] = min(best[impl], time.perf_counter() - t0)
+
+    # K here is a power of two, so pad_uploads_pow2 is the identity and the
+    # roofline shapes match the timed program exactly.
+    roof = quantized_uplink_roofline(clients[0].encoders[modality], K, bits)
+    return {
+        "K": K,
+        "bits": bits,
+        "fused_s": round(best["fused"], 6),
+        "reference_s": round(best["reference"], 6),
+        "speedup": round(best["reference"] / best["fused"], 3),
+        "bytes_moved": bytes_moved,
+        "roofline": roof,
+    }
+
+
 def run(fast: bool = True) -> List[Row]:
     K = 8 if fast else 32
     rows: List[Row] = []
@@ -65,6 +125,14 @@ def run(fast: bool = True) -> List[Row]:
         rows.append(Row(f"quantized_round/K{K}/q{bits}/batched",
                         batched_s * 1e6,
                         f"speedup={loop_s / batched_s:.2f}x;MB={mb:.4f}"))
+    r = time_comm_path(32 if fast else 128, 4, reps=3 if fast else 7)
+    wire = r["roofline"]["wire_bytes"]
+    rows.append(Row(f"comm_path/K{r['K']}/q4/reference",
+                    r["reference_s"] * 1e6,
+                    f"bytes={r['bytes_moved']['reference']}"))
+    rows.append(Row(f"comm_path/K{r['K']}/q4/fused", r["fused_s"] * 1e6,
+                    f"speedup={r['speedup']:.2f}x;"
+                    f"bytes={r['bytes_moved']['fused']};wire={wire}"))
     return rows
 
 
@@ -103,6 +171,19 @@ def main(argv=None) -> int:
                   f"uplink={mb:8.4f}MB (total {time.time() - t0:.0f}s)",
                   flush=True)
 
+    comm_path = []
+    for K in COMM_KS:
+        for bits in COMM_BITS:
+            r = time_comm_path(K, bits, n=args.samples)
+            comm_path.append(r)
+            bm = r["bytes_moved"]
+            print(f"comm K={K:4d} bits={bits:2d} "
+                  f"fused={r['fused_s'] * 1e3:7.2f}ms "
+                  f"ref={r['reference_s'] * 1e3:7.2f}ms "
+                  f"speedup={r['speedup']:5.2f}x "
+                  f"bytes fused={bm['fused']} ref={bm['reference']} "
+                  f"wire={r['roofline']['wire_bytes']}", flush=True)
+
     payload = {
         "benchmark": "quantized_round",
         "config": {
@@ -114,8 +195,13 @@ def main(argv=None) -> int:
             "rounds_timed": 1,
             "accounting": "exact wire bytes: bit-packed codes in smallest "
                           "sufficient dtype + 8B scale/zero per tensor",
+            "comm_path": "aggregate_uploads fused vs reference, interleaved "
+                         "min-of-reps; bytes_moved from repro.core.hostsync; "
+                         "roofline from repro.roofline.quantized_uplink_"
+                         "roofline on the same padded [K,...] shapes",
         },
         "results": results,
+        "comm_path": comm_path,
     }
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)

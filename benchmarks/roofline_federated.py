@@ -1,16 +1,28 @@
-"""Roofline of the paper's technique on the production mesh: one MFedMC
-round (local SGD epochs + masked Eq.-21 aggregation) for a K-client LSTM
-encoder population, lowered on the multi-pod mesh.
+"""Roofline of the REAL federation round programs on the sharded mesh.
 
-Modes compared (§Perf hillclimb #3):
-    flat          — cross-(pod×data) masked all-reduce every round
-    hierarchical  — per-step within-pod pmean (cheap axis) + per-round
-                    cross-pod selective aggregation (expensive axis)
+    PYTHONPATH=src python -m benchmarks.roofline_federated \
+        [--out BENCH_roofline_federated.json]
 
-Runs in a subprocess (the 512-device XLA flag must not leak here).
+Historically this bench rooflined a standalone ``make_federated_round``
+step that ``run_federation`` never executes. It now meters the exact
+lru-cached ``jit(shard_map(...))`` programs the ``backend="sharded"``
+round dispatches (via :func:`repro.roofline.sharded_round_programs`):
+
+    epoch                 — vmapped local-SGD epoch over the client axis
+    aggregate_full        — full-precision Eq. 21 psum
+    aggregate_q_reference — quantize → dequantized-stack psum (historical)
+    aggregate_q_fused     — quantize → einsum-from-codes partial → psum
+                            (``repro.kernels.comm`` hot path)
+
+Each program is lowered on a forced-D host mesh (subprocess — the XLA
+device-count flag must not leak into the caller), then we parse
+collective bytes from the compiled HLO, walk the jaxpr for FLOPs, and
+read the compiler's memory analysis. ``main`` records everything in
+``BENCH_roofline_federated.json``; ``run`` keeps the Row contract.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import subprocess
@@ -19,65 +31,115 @@ from typing import List
 
 from benchmarks.common import Row
 
+D, K, STEPS, BATCH, BITS = 8, 512, 15, 32, 4
+FEAT = (16, 8)
+
 _SCRIPT = r"""
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(D)d"
 import json
 import jax, jax.numpy as jnp
-from repro.core.distributed import make_federated_round, federated_input_specs
 from repro.core.encoders import init_encoder
-from repro.launch.mesh import make_production_mesh
-from repro.models.model import param_specs
-from repro.roofline import collective_bytes, count_step_flops
+from repro.roofline import (collective_bytes, count_step_flops,
+                            quantized_uplink_roofline,
+                            sharded_round_programs)
+from repro.sharding.partition import client_mesh
 
-K, STEPS, BATCH = 512, 15, 32          # 512 clients, E*steps local SGD
-FEAT = (16, 8)                          # reduced ActionSense-ish modality
-mesh = make_production_mesh(multi_pod=True)
-enc_spec = jax.eval_shape(lambda: init_encoder(jax.random.key(0), FEAT, 20))
-specs = federated_input_specs(K, STEPS, BATCH, FEAT, enc_spec)
-out = []
-for mode in ("flat", "hierarchical", "flat_bf16_uplink"):
-    rnd = make_federated_round(mesh, local_steps=STEPS, lr=0.1,
-                               hierarchical=(mode == "hierarchical"),
-                               uplink_dtype=(jnp.bfloat16 if "bf16" in mode
-                                             else None))
+K, STEPS, BATCH, BITS = %(K)d, %(STEPS)d, %(BATCH)d, %(BITS)d
+FEAT = %(FEAT)r
+mesh = client_mesh()
+template = jax.eval_shape(lambda: init_encoder(jax.random.key(0), FEAT, 20))
+progs = sharded_round_programs(mesh, k=K, steps=STEPS, batch=BATCH,
+                               feat=FEAT, template=template, lr=0.1,
+                               bits=BITS)
+out = {"D": %(D)d, "K": K, "steps": STEPS, "batch": BATCH, "bits": BITS,
+       "feat": list(FEAT), "programs": [],
+       "uplink": quantized_uplink_roofline(template, K, BITS)}
+for name in ("epoch", "aggregate_full", "aggregate_q_reference",
+             "aggregate_q_fused"):
+    prog, args = progs[name]
     with mesh:
-        lowered = jax.jit(rnd).lower(specs["params"], specs["batches"],
-                                     specs["select"], specs["weight"])
-        compiled = lowered.compile()
+        compiled = prog.lower(*args).compile()
     coll = collective_bytes(compiled.as_text())
-    flops = count_step_flops(rnd, specs["params"], specs["batches"],
-                             specs["select"], specs["weight"])
     mem = compiled.memory_analysis()
-    out.append({
-        "mode": mode,
+    out["programs"].append({
+        "name": name,
         "collective_bytes": coll,
         "collective_total": sum(coll.values()),
-        "flops_total": flops,
+        "flops_total": count_step_flops(prog, *args),
         "peak_bytes": int(mem.argument_size_in_bytes
                           + mem.temp_size_in_bytes),
     })
 print("RESULT_JSON:" + json.dumps(out))
-"""
+""" % {"D": D, "K": K, "STEPS": STEPS, "BATCH": BATCH, "BITS": BITS,
+       "FEAT": FEAT}
 
 
-def run(fast: bool = True) -> List[Row]:
+def _measure() -> dict:
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
     r = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
                        capture_output=True, text=True, timeout=3600)
-    rows: List[Row] = []
     for line in r.stdout.splitlines():
         if line.startswith("RESULT_JSON:"):
-            for entry in json.loads(line[len("RESULT_JSON:"):]):
-                per_chip = entry["collective_total"] / 512
-                rows.append(Row(
-                    f"roofline_federated/{entry['mode']}", 0.0,
-                    f"collective_total={entry['collective_total']:.3e}B;"
-                    f"per_chip={per_chip:.3e}B;"
-                    f"ici_s={per_chip / 50e9:.3e};"
-                    f"flops={entry['flops_total']:.3e}"))
-    if not rows:
-        rows.append(Row("roofline_federated/error", 0.0,
-                        f"stderr={r.stderr[-200:]}"))
+            return json.loads(line[len("RESULT_JSON:"):])
+    raise RuntimeError(f"roofline subprocess failed: {r.stderr[-500:]}")
+
+
+def run(fast: bool = True) -> List[Row]:
+    try:
+        res = _measure()
+    except RuntimeError as e:
+        return [Row("roofline_federated/error", 0.0, str(e)[:200])]
+    rows: List[Row] = []
+    for entry in res["programs"]:
+        per_chip = entry["collective_total"] / res["D"]
+        rows.append(Row(
+            f"roofline_federated/{entry['name']}", 0.0,
+            f"collective_total={entry['collective_total']:.3e}B;"
+            f"per_chip={per_chip:.3e}B;"
+            f"ici_s={per_chip / 50e9:.3e};"
+            f"flops={entry['flops_total']:.3e}"))
+    up = res["uplink"]
+    rows.append(Row(
+        "roofline_federated/uplink_bytes", 0.0,
+        f"wire={up['wire_bytes']};fused={up['payload_bytes']['fused']};"
+        f"reference={up['payload_bytes']['reference']};"
+        f"raw={up['raw_bytes']}"))
     return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_roofline_federated.json")
+    args = ap.parse_args(argv)
+    res = _measure()
+    for entry in res["programs"]:
+        print(f"{entry['name']:24s} "
+              f"collective={entry['collective_total']:.3e}B "
+              f"flops={entry['flops_total']:.3e} "
+              f"peak={entry['peak_bytes']:.3e}B", flush=True)
+    up = res["uplink"]
+    print(f"uplink bytes: wire={up['wire_bytes']} "
+          f"fused={up['payload_bytes']['fused']} "
+          f"reference={up['payload_bytes']['reference']} "
+          f"raw={up['raw_bytes']}")
+    payload = {"benchmark": "roofline_federated",
+               "config": {
+                   "programs": "exact jit(shard_map) programs the sharded "
+                               "backend dispatches (repro.roofline."
+                               "sharded_round_programs)",
+                   "accounting": "collective bytes parsed from compiled HLO; "
+                                 "flops from jaxpr walk; peak from compiler "
+                                 "memory analysis",
+               },
+               "results": res}
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

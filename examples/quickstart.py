@@ -39,6 +39,14 @@ def main():
                     help="async: aggregate every N client arrivals")
     ap.add_argument("--staleness-discount", type=float, default=1.0,
                     help="async buffered-flush weight *= d**staleness")
+    ap.add_argument("--quantize-bits", type=int, default=32,
+                    help="§4.10 uplink precision (1-16; 32 = full)")
+    ap.add_argument("--comm-impl", default="fused",
+                    choices=["fused", "reference"],
+                    help="quantized-upload hot path: fused = one-pass "
+                         "quantize+pack and reduce-from-packed-codes "
+                         "(repro.kernels.comm); reference = historical "
+                         "quantize_population + aggregate_quantized")
     args = ap.parse_args()
 
     if args.mesh_clients > 1:
@@ -61,6 +69,8 @@ def main():
         staleness_discount=args.staleness_discount,
         mesh_clients=(args.mesh_clients or None
                       if args.backend == "sharded" else None),
+        quantize_bits=args.quantize_bits,
+        comm_impl=args.comm_impl,
         seed=0,
     )
     history = run_mfedmc(args.dataset, args.scenario, cfg, verbose=True,

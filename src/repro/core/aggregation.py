@@ -23,7 +23,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.encoders import encoder_param_arrays
-from repro.core.quantize import dequantize_tensor
 
 
 def stack_uploads(encoders: Sequence[Dict]) -> Dict:
@@ -75,15 +74,23 @@ def aggregate_stacked(stacked, weights: jnp.ndarray):
 def aggregate_quantized(codes, scales, zeros, weights: jnp.ndarray):
     """Eq. 21 directly over a quantized population payload
     (``repro.core.quantize.quantize_population`` output: codes ``[K, ...]``,
-    per-client per-tensor scales/zeros ``[K]``): dequantization and the
-    weighted reduction fuse into one program, so the server never
-    materializes K dequantized encoder copies."""
+    per-client per-tensor scales/zeros ``[K]``).
+
+    The affine distributes over the weighted mean, so the reduction
+    contracts the raw codes and applies scale/zero to the *reduced* sums:
+
+        Σ_k wn_k·(c_k·s_k + z_k) = einsum(wn·s, c) + Σ_k wn_k·z_k
+
+    — one einsum per leaf, no ``[K, ...]`` dequantized stack (the old
+    ``vmap(dequantize_tensor)`` materialized one; its output is pinned as a
+    regression oracle in ``tests/test_aggregation.py``)."""
     w = weights.astype(jnp.float32)
     w = w / jnp.maximum(jnp.sum(w), 1e-12)
 
     def leaf(c, s, z):
-        deq = jax.vmap(dequantize_tensor)(c, s, z)
-        return jnp.einsum("k,k...->...", w, deq)
+        return (jnp.einsum("k,k...->...", w * s.astype(jnp.float32),
+                           c.astype(jnp.float32))
+                + jnp.sum(w * z.astype(jnp.float32)))
 
     return jax.tree.map(leaf, codes, scales, zeros)
 

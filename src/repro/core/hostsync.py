@@ -6,12 +6,19 @@ the selection engine's decision fetch — funnels through :func:`fetch` /
 :func:`fetch_scalar`, so ``benchmarks/bench_selection_round.py`` can report
 *measured* host-syncs-per-round instead of an estimate. The counter is
 process-global and costs one integer increment when nobody is measuring.
+
+The module also carries the uplink **bytes-moved** counter: every
+aggregation path (reference or fused, batched/engine/sharded/async)
+reports the device bytes of the payload that crossed its upload program
+boundary via :func:`record_bytes`, so ``benchmarks/bench_quantized_round``
+can compare *measured* bytes against the §4.10 wire-format roofline.
 """
 from __future__ import annotations
 
 import numpy as np
 
 _count = 0
+_bytes = 0
 
 
 def fetch(x) -> np.ndarray:
@@ -28,10 +35,21 @@ def fetch_scalar(x) -> float:
     return float(x)
 
 
+def record_bytes(n: int) -> None:
+    """Account ``n`` payload bytes moved across an upload boundary."""
+    global _bytes
+    _bytes += int(n)
+
+
 def reset() -> None:
-    global _count
+    global _count, _bytes
     _count = 0
+    _bytes = 0
 
 
 def count() -> int:
     return _count
+
+
+def bytes_moved() -> int:
+    return _bytes

@@ -51,6 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import hostsync
 from repro.core.aggregation import (CommLedger, aggregate_quantized,
                                     aggregate_stacked, pad_axis0,
                                     pad_uploads_pow2, stack_uploads)
@@ -91,6 +92,10 @@ class MFedMCConfig:
     background_size: int = 50              # |D'| for Shapley
     eval_size: int = 32
     quantize_bits: int = 32                # 32 = no quantization (§4.10)
+    comm_impl: str = "fused"               # fused (one-pass quantize+pack /
+                                           # reduce-from-packed, kernels/
+                                           # comm.py) | reference (separate
+                                           # quantize + aggregate programs)
     error_feedback: bool = False           # client-held EF residuals
     availability: float = 1.0              # client availability rate (§4.9)
     # -- virtual-time runtime (backend="async"; repro.core.scheduler) ---
@@ -171,26 +176,42 @@ class RunHistory:
 
 def aggregate_uploads(clients: Sequence[Client], modality: str,
                       sample_counts: Sequence[int], bits: int, *,
-                      error_feedback: bool = False, store=None) -> Dict:
+                      error_feedback: bool = False, store=None,
+                      comm_impl: str = "fused") -> Dict:
     """One modality's §4.10 uplink + Eq. 21 aggregation, device-resident.
 
-    The selected clients' encoders stack on a leading K axis; at reduced
-    precision one jit'd program quantizes the population (per-client
-    per-tensor ranges) and fuses dequantization into the weighted
-    reduction — the server never materializes K dequantized copies and no
-    per-leaf scale/zero ever syncs to the host. With ``error_feedback``
-    each client's residual accumulator is folded into its payload and the
-    new residual written back (strictly client-held state).
+    The selected clients' encoders stack on a leading K axis. At reduced
+    precision, ``comm_impl`` picks the communication hot path:
+
+    - ``"fused"`` (default): ``repro.kernels.comm`` — one program
+      quantizes AND bit-packs the population, so only the wire-format
+      payload (packed words + per-tensor scale/zero) crosses the program
+      boundary; a second program computes the Eq. 21 mean straight from
+      the packed words without materializing any dequantized stack.
+    - ``"reference"``: the historical pipeline — ``quantize_population``
+      hands unpacked code containers to ``aggregate_quantized``.
+
+    Both paths produce bit-identical codes (pinned in
+    ``tests/test_comm_kernels.py``) and report the device bytes of the
+    payload that crossed the upload boundary to
+    ``repro.core.hostsync.record_bytes``. With ``error_feedback`` each
+    client's residual accumulator is folded into its payload and the new
+    residual written back (strictly client-held state).
 
     ``store`` selects where the upload population lives: the default
     :class:`ClientStore` stacks from ``Client.encoders`` (loop/batched
     backends); a :class:`~repro.core.federation_state.StateStore` gathers
     rows of the resident stacked buckets instead (engine backend)."""
+    from repro.kernels.comm import (payload_nbytes, quantize_pack_population,
+                                    quantize_pack_population_ef,
+                                    reduce_packed_population)
     store = store or ClientStore()
     stacked = store.gather_encoders([(c, modality) for c in clients])
     w = jnp.asarray(np.asarray(sample_counts, np.float32))
     stacked, w, pad = pad_uploads_pow2(stacked, w, len(clients))
+    ref = clients[0].encoders[modality]
     if bits >= 32:
+        hostsync.record_bytes(payload_nbytes(stacked))
         return aggregate_stacked(stacked, w)
     if error_feedback:
         res = stack_uploads([
@@ -198,14 +219,28 @@ def aggregate_uploads(clients: Sequence[Client], modality: str,
             else zero_residual(c.encoders[modality]) for c in clients])
         if pad:
             res = pad_axis0(res, pad)
-        codes, scales, zeros, new_res = \
-            quantize_population_with_error_feedback(stacked, res, bits=bits)
+        if comm_impl == "fused":
+            packed, scales, zeros, new_res = \
+                quantize_pack_population_ef(stacked, res, bits=bits)
+        else:
+            codes, scales, zeros, new_res = \
+                quantize_population_with_error_feedback(stacked, res,
+                                                        bits=bits)
         for j, c in enumerate(clients):    # padded slots are discarded
             c.residuals[modality] = jax.tree.map(lambda v: v[j], new_res)
+    elif comm_impl == "fused":
+        packed, scales, zeros = quantize_pack_population(stacked, bits=bits)
     else:
         codes, scales, zeros = quantize_population(stacked, bits=bits)
-    agg = aggregate_quantized(codes, scales, zeros, w)
-    ref = clients[0].encoders[modality]
+    if comm_impl == "fused":
+        hostsync.record_bytes(payload_nbytes(packed, scales, zeros))
+        shapes = tuple(tuple(l.shape[1:])
+                       for l in jax.tree_util.tree_leaves(stacked))
+        agg = reduce_packed_population(packed, scales, zeros, w, bits=bits,
+                                       shapes=shapes)
+    else:
+        hostsync.record_bytes(payload_nbytes(codes, scales, zeros))
+        agg = aggregate_quantized(codes, scales, zeros, w)
     return jax.tree.map(lambda a, r: a.astype(r.dtype), agg, ref)
 
 
@@ -479,6 +514,9 @@ def run_federation(clients: List[Client], spec: DatasetSpec,
         raise ValueError(f"unknown backend {backend!r}")
     if cfg.selection_impl not in ("engine", "host"):
         raise ValueError(f"unknown selection_impl {cfg.selection_impl!r}")
+    if cfg.comm_impl not in ("fused", "reference"):
+        raise ValueError(f"unknown comm_impl {cfg.comm_impl!r}: use "
+                         '"fused" or "reference"')
     qbits = cfg.quantize_bits if quantize_bits is None else quantize_bits
     if qbits < 32 and not 1 <= qbits <= 16:
         raise ValueError(f"quantize_bits={qbits} unsupported: use 1..16 "
@@ -593,11 +631,12 @@ def run_federation(clients: List[Client], spec: DatasetSpec,
                     from repro.core.sharded import aggregate_modality_sharded
                     server_encoders[m] = aggregate_modality_sharded(
                         state, ups, m, [c.train.num_samples for c in ups],
-                        qbits)
+                        qbits, comm_impl=cfg.comm_impl)
                 else:
                     server_encoders[m] = aggregate_uploads(
                         ups, m, [c.train.num_samples for c in ups], qbits,
-                        error_feedback=cfg.error_feedback, store=store)
+                        error_feedback=cfg.error_feedback, store=store,
+                        comm_impl=cfg.comm_impl)
 
             # -- local deploying + Stage #2 -------------------------------
             if resident:

@@ -304,7 +304,8 @@ def run_async_federation(clients: List[Client], spec, cfg, *,
                 for m, ups in per_modality.items():
                     avg = aggregate_uploads(
                         ups, m, weights[m], qbits,
-                        error_feedback=cfg.error_feedback, store=store)
+                        error_feedback=cfg.error_feedback, store=store,
+                        comm_impl=cfg.comm_impl)
                     w_f = float(sum(weights[m]))
                     if m in cycle_acc:
                         prev, w_prev = cycle_acc[m]

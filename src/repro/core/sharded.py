@@ -65,6 +65,7 @@ from repro.core.encoders import masked_encoder_loss
 from repro.core.federation_state import (FederationState, StateStore,
                                          _EncoderBucket, _FusionBucket)
 from repro.core.quantize import dequantize_tensor, quantize_population
+from repro.kernels.comm import _quantize_rows as _quantize_rows_fused
 from repro.core.selection_engine import (_COMPILER_OPTIONS, ModalityDecision,
                                          _f64, _modality_program, _pow2)
 from repro.sharding.partition import (CLIENT_AXIS, client_mesh, client_spec,
@@ -386,11 +387,11 @@ def _aggregate_program(mesh: Mesh):
 
 @functools.lru_cache(maxsize=None)
 def _aggregate_quantized_program(mesh: Mesh, bits: int):
-    """§4.10 uplink fused into the psum: each shard quantizes its rows
-    (per-row per-tensor ranges — codes are independent of shard layout;
-    all-zero padding rows quantize safely under the zero-range guard),
-    dequantizes, and contracts, and only the [leaf]-shaped partial sums
-    cross shards."""
+    """§4.10 uplink fused into the psum — reference impl: each shard
+    quantizes its rows (per-row per-tensor ranges — codes are independent
+    of shard layout; all-zero padding rows quantize safely under the
+    zero-range guard), dequantizes, and contracts, and only the
+    [leaf]-shaped partial sums cross shards."""
     def body(stacked, w):
         codes, scales, zeros = quantize_population(stacked, bits=bits)
         deq = jax.tree.map(
@@ -402,17 +403,55 @@ def _aggregate_quantized_program(mesh: Mesh, bits: int):
                              out_specs=P()))
 
 
+@functools.lru_cache(maxsize=None)
+def _aggregate_quantized_fused_program(mesh: Mesh, bits: int):
+    """§4.10 uplink fused into the psum — ``repro.kernels.comm`` impl:
+    each shard runs the one-pass quantizer (paired min/max ``lax.reduce``,
+    bit-identical codes to ``quantize_population``) and contracts its raw
+    codes with the affine applied to the reduced sums
+
+        part = einsum(wn·s, codes) + Σ_local wn·z
+
+    so the per-shard ``[rows, ...]`` dequantized stack of the reference
+    body never materializes; only [leaf]-shaped partials cross shards (the
+    psum adds the locally-weighted zero terms too). Wire packing applies
+    at program *boundaries* — inside one shard program nothing leaves the
+    device, so a pack/unpack round-trip would be pure overhead."""
+    def body(stacked, w):
+        w = w.astype(jnp.float32)
+        wsum = jax.lax.psum(jnp.sum(w), CLIENT_AXIS)
+        wn = w / jnp.maximum(wsum, 1e-12)
+
+        def leaf(x):
+            codes, s, z = _quantize_rows_fused(
+                x.reshape(x.shape[0], -1), bits)
+            part = (jnp.einsum("k,kn->n", wn * s,
+                               codes.astype(jnp.float32))
+                    + jnp.sum(wn * z))
+            return part.reshape(x.shape[1:])
+
+        return jax.lax.psum(jax.tree.map(leaf, stacked), CLIENT_AXIS)
+    spec = client_spec()
+    return jax.jit(shard_map(body, mesh=mesh, in_specs=(spec, spec),
+                             out_specs=P()))
+
+
 def aggregate_modality_sharded(state: ShardedFederationState,
                                clients, modality: str,
                                sample_counts: Sequence[int],
-                               bits: int) -> Dict:
+                               bits: int, *,
+                               comm_impl: str = "fused") -> Dict:
     """One modality's Eq. 21 over the resident sharded bucket.
 
     Instead of gathering the selected rows (a cross-shard reshuffle every
     round), the *whole* bucket contracts under a [size] weight vector that
     is ``num_samples`` on this round's selected uploads and 0 elsewhere —
     unselected, unavailable, and padding rows all contribute exact zero
-    terms to the psum."""
+    terms to the psum. ``comm_impl`` picks the quantized-body flavor (the
+    fused one never materializes a per-shard dequantized stack); what
+    crosses shards is identical either way — D sets of [leaf]-shaped
+    float32 partials — and is what :func:`~repro.core.hostsync.bytes_moved`
+    accounts."""
     locs = [state.enc_slot[(state.row_of[c.client_id], modality)]
             for c in clients]
     bids = {b for b, _ in locs}
@@ -423,8 +462,15 @@ def aggregate_modality_sharded(state: ShardedFederationState,
         w[s] = float(n)
     wdev = jax.device_put(
         w, jax.sharding.NamedSharding(state.mesh, client_spec()))
+    part_bytes = sum(
+        int(np.prod(l.shape[1:], dtype=np.int64)) * 4
+        for l in jax.tree_util.tree_leaves(bucket.params))
+    hostsync.record_bytes(int(state.mesh.devices.size) * part_bytes)
     if bits >= 32:
         agg = _aggregate_program(state.mesh)(bucket.params, wdev)
+    elif comm_impl == "fused":
+        agg = _aggregate_quantized_fused_program(state.mesh, int(bits))(
+            bucket.params, wdev)
     else:
         agg = _aggregate_quantized_program(state.mesh, int(bits))(
             bucket.params, wdev)

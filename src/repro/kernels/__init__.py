@@ -6,7 +6,9 @@ ops.py (jit wrappers, interpret=True on CPU), ref.py (pure-jnp oracles).
 The paper itself (MFedMC) has no GPU-kernel contribution — its hot spot is
 Shapley estimation on CPU-class clients, which is a fully-vectorized jnp
 batched fusion forward (see DESIGN.md §6). These kernels serve the assigned
-architectures' hot paths: attention, RG-LRU scan, mLSTM scan.
+architectures' hot paths — attention, RG-LRU scan, mLSTM scan — plus the
+federation's §4.10 communication hot path (comm.py: fused quantize+pack
+uplink and dequantize+weight+reduce downlink).
 """
 from jax.experimental.pallas import tpu as _pltpu
 
@@ -14,7 +16,14 @@ from jax.experimental.pallas import tpu as _pltpu
 if not hasattr(_pltpu, "CompilerParams"):          # pragma: no cover
     _pltpu.CompilerParams = _pltpu.TPUCompilerParams
 
+from repro.kernels.comm import (dequantize_weight_reduce, payload_nbytes,
+                                quantize_pack, quantize_pack_population,
+                                quantize_pack_population_ef,
+                                reduce_packed_population)
 from repro.kernels.ops import (flash_attention, mlstm_scan, rglru_scan,
                                use_pallas)
 
-__all__ = ["flash_attention", "mlstm_scan", "rglru_scan", "use_pallas"]
+__all__ = ["dequantize_weight_reduce", "flash_attention", "mlstm_scan",
+           "payload_nbytes", "quantize_pack", "quantize_pack_population",
+           "quantize_pack_population_ef", "reduce_packed_population",
+           "rglru_scan", "use_pallas"]

@@ -1,0 +1,448 @@
+"""Fused communication hot path: one-pass quantize+pack (uplink) and
+dequantize+weight+reduce (downlink) for the §4.10/Eq. 21 round.
+
+The reference upload path executes as separate programs that hand each
+other *unpacked* code containers: ``quantize_population`` materializes
+``[K, ...]`` codes in ``code_dtype`` (1 byte per parameter even at 4-bit
+precision), and ``aggregate_quantized`` reads them back. The bit-packed
+wire format (``pack_codes``) is *accounted* by the ledger but never
+executed. This module closes both gaps:
+
+- **Uplink** ``quantize_pack``: min/max → affine codes → bit-packed wire
+  words in ONE pass over a flattened ``[K, n]`` leaf stack. The program
+  boundary then carries exactly the wire format — ``ceil(n·bits/8)``
+  packed bytes plus one (scale, zero) pair per tensor — instead of the
+  unpacked container (2× smaller at 4 bits, 4× at 2 bits).
+- **Downlink** ``dequantize_weight_reduce``: the Eq. 21 weighted mean
+  straight from the packed words, per-tensor (scale, zero) and per-client
+  weights (the async backend's staleness-discounted weights included):
+  ``agg = Σ_k wn_k·(c_k·s_k + z_k) = einsum(wn·s, codes) + Σ_k wn_k·z_k``
+  — no ``[K, ...]`` dequantized payload is ever materialized.
+
+Both exist twice, same numerics:
+
+- Pallas kernels (``*_pallas``), tiled BlockSpecs, run in
+  ``interpret=True`` on CPU like the other kernels in this package and
+  compile through Mosaic on TPU; pure-jnp oracles live in ``ref.py``.
+- XLA population programs (``quantize_pack_population`` /
+  ``reduce_packed_population``) — the production path the federation
+  backends call on CPU, where a Python-interpreted kernel would lose to
+  XLA's fused loops. Two deliberate CPU wins over the reference path:
+  the row min/max is a single ``lax.reduce`` pass computing both bounds
+  at once (min/max are exact reductions, so codes stay bit-identical to
+  ``quantize_tensor``), and packing stays in the uint8 domain (a uint32
+  intermediate would quadruple the pack traffic).
+
+Parity contract (pinned in ``tests/test_comm_kernels.py``): packed words
+bit-identical to ``quantize_pytree`` + ``pack_codes``, scales/zeros
+bit-identical, aggregates within 1e-5 of ``aggregate_quantized``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quantize import TENSOR_METADATA_BYTES, _check_bits, code_dtype
+
+__all__ = ["quantize_pack", "dequantize_weight_reduce",
+           "quantize_pack_population", "quantize_pack_population_ef",
+           "reduce_packed_population", "payload_nbytes", "packed_width"]
+
+_ROWS, _LANES = 8, 128
+_TILE = _ROWS * _LANES           # flat elements per kernel tile
+
+
+def _per(bits: int) -> int:
+    """Codes per packed byte (1 = the code container IS the wire format)."""
+    return 8 // bits if 8 % bits == 0 and bits < 8 else 1
+
+
+def _wire_dtype(bits: int):
+    return jnp.uint8 if _per(bits) > 1 else code_dtype(bits)
+
+
+def packed_width(n: int, bits: int) -> int:
+    """Wire words per row for an ``n``-element tensor (``ceil(n/per)``)."""
+    _check_bits(bits)
+    return -(-n // _per(bits))
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels (interpret=True on CPU; Mosaic on TPU)
+# ---------------------------------------------------------------------------
+
+def _quantize_pack_kernel(x_ref, packed_ref, scale_ref, zero_ref, *,
+                          bits: int, per: int, n: int):
+    """Two-phase pass over one row: grid = (K, 2, nt), tiles innermost.
+
+    Phase 0 carries the running (min, max) in the (1, 1) scale/zero output
+    blocks (their index maps revisit the same block every tile, the
+    ``mlstm_scan`` state idiom) and finalizes ``scale = max((hi−lo)/levels,
+    1e-12)`` on the last tile. Phase 1 re-reads each tile, encodes with the
+    final affine, zero-masks the padded tail, and packs ``per`` codes per
+    byte into the wire-word block."""
+    p = pl.program_id(1)
+    i = pl.program_id(2)
+    nt = pl.num_programs(2)
+    levels = 2 ** bits - 1
+    tile_x = x_ref[0, 0].astype(jnp.float32)            # [ROWS, LANES]
+
+    @pl.when((p == 0) & (i == 0))
+    def _init():
+        zero_ref[0, 0] = jnp.float32(jnp.inf)
+        scale_ref[0, 0] = jnp.float32(-jnp.inf)
+
+    @pl.when(p == 0)
+    def _minmax():
+        zero_ref[0, 0] = jnp.minimum(zero_ref[0, 0], jnp.min(tile_x))
+        scale_ref[0, 0] = jnp.maximum(scale_ref[0, 0], jnp.max(tile_x))
+
+    @pl.when((p == 0) & (i == nt - 1))
+    def _finalize():
+        scale_ref[0, 0] = jnp.maximum(
+            (scale_ref[0, 0] - zero_ref[0, 0]) / levels, 1e-12)
+
+    @pl.when(p == 1)
+    def _encode_pack():
+        lo = zero_ref[0, 0]
+        sc = scale_ref[0, 0]
+        codes = jnp.clip(jnp.round((tile_x - lo) / sc), 0, levels)
+        rr = lax.broadcasted_iota(jnp.int32, tile_x.shape, 0)
+        ll = lax.broadcasted_iota(jnp.int32, tile_x.shape, 1)
+        pos = i * _TILE + rr * _LANES + ll              # flat row position
+        codes = jnp.where(pos < n, codes, 0.0).astype(jnp.int32)
+        lanes = codes.reshape(-1, per)                  # [TILE/per, per]
+        word = lanes[:, 0]
+        for l in range(1, per):
+            word = word | (lanes[:, l] << (l * bits))
+        packed_ref[0, 0] = word.astype(packed_ref.dtype)
+
+
+def quantize_pack_pallas(x: jnp.ndarray, bits: int, *,
+                         interpret: bool = True
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused uplink for a ``[K, ...]`` leaf stack.
+
+    Returns ``(packed [K, W], scale [K], zero [K])`` with
+    ``W = ceil(n/per)`` — exactly ``pack_codes``'s wire buffer per row
+    (bit-identical, including its zero-padded tail)."""
+    _check_bits(bits)
+    kk = x.shape[0]
+    flat = x.reshape(kk, -1)
+    n = flat.shape[1]
+    per = _per(bits)
+    nt = max(-(-n // _TILE), 1)
+    # edge-replicated pad: the tail never perturbs the row min/max, so no
+    # masking is needed in the reduction phase (the encode phase masks)
+    flat = jnp.pad(flat, ((0, 0), (0, nt * _TILE - n)), mode="edge")
+    x3 = flat.reshape(kk, nt, _ROWS, _LANES)
+    bp = _TILE // per
+
+    packed, scale, zero = pl.pallas_call(
+        functools.partial(_quantize_pack_kernel, bits=int(bits), per=per,
+                          n=n),
+        grid=(kk, 2, nt),
+        in_specs=[pl.BlockSpec((1, 1, _ROWS, _LANES),
+                               lambda k, p, i: (k, i, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((1, 1, bp), lambda k, p, i: (k, i, 0)),
+            pl.BlockSpec((1, 1), lambda k, p, i: (k, 0)),
+            pl.BlockSpec((1, 1), lambda k, p, i: (k, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((kk, nt, bp), _wire_dtype(bits)),
+            jax.ShapeDtypeStruct((kk, 1), jnp.float32),
+            jax.ShapeDtypeStruct((kk, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(x3)
+    return (packed.reshape(kk, nt * bp)[:, :packed_width(n, bits)],
+            scale[:, 0], zero[:, 0])
+
+
+def _deq_reduce_kernel(packed_ref, a_ref, zsum_ref, out_ref, *,
+                       bits: int, per: int):
+    """grid = (nt, K), clients innermost: the (1, ROWS, LANES) output block
+    is revisited for every k, initialized to the position-independent zero
+    term ``Σ_k wn_k·z_k`` and accumulated with ``a_k = wn_k·s_k`` times the
+    tile's unpacked codes — the Eq. 21 mean without a [K, ...] payload."""
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[0] = jnp.full(out_ref.shape[1:], zsum_ref[0, 0],
+                              out_ref.dtype)
+
+    words = packed_ref[0, 0].astype(jnp.int32)          # [TILE/per]
+    mask = (1 << bits) - 1
+    lanes = [(words >> (l * bits)) & mask for l in range(per)]
+    codes = jnp.stack(lanes, axis=1).reshape(_ROWS, _LANES)
+    out_ref[0] = out_ref[0] + a_ref[0, 0] * codes.astype(jnp.float32)
+
+
+def dequantize_weight_reduce_pallas(packed: jnp.ndarray, scale: jnp.ndarray,
+                                    zero: jnp.ndarray, weights: jnp.ndarray,
+                                    *, bits: int, n: int,
+                                    interpret: bool = True) -> jnp.ndarray:
+    """Fused downlink: Eq. 21 weighted mean from the packed wire buffers.
+
+    ``packed [K, W]``, per-row ``scale``/``zero``/``weights`` ``[K]`` →
+    flat ``[n]`` float32 aggregate. Weights are sum-normalized with the
+    aggregation guard ``max(Σw, 1e-12)`` (all-zero weight vectors — padded
+    slots only — reduce to zeros, never NaN)."""
+    _check_bits(bits)
+    kk = packed.shape[0]
+    per = _per(bits)
+    bp = _TILE // per
+    nt = max(-(-packed.shape[1] // bp), 1)
+    p3 = jnp.pad(packed, ((0, 0), (0, nt * bp - packed.shape[1]))
+                 ).reshape(kk, nt, bp)
+    w = weights.astype(jnp.float32)
+    wn = w / jnp.maximum(jnp.sum(w), 1e-12)
+    a = (wn * scale.astype(jnp.float32)).reshape(kk, 1)
+    zsum = jnp.sum(wn * zero.astype(jnp.float32)).reshape(1, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_deq_reduce_kernel, bits=int(bits), per=per),
+        grid=(nt, kk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bp), lambda i, k: (k, i, 0)),
+            pl.BlockSpec((1, 1), lambda i, k: (k, 0)),
+            pl.BlockSpec((1, 1), lambda i, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, _ROWS, _LANES), lambda i, k: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nt, _ROWS, _LANES), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(p3, a, zsum)
+    return out.reshape(-1)[:n]
+
+
+# ---------------------------------------------------------------------------
+# XLA fused programs — same numerics, the CPU production path
+# ---------------------------------------------------------------------------
+
+def _minmax_rows(x2: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row (min, max) in ONE reduce pass. min/max are exact reductions
+    (no rounding, order-independent), so the results — and every code
+    derived from them — are bit-identical to separate jnp.min/jnp.max."""
+    def comp(acc, val):
+        return (jnp.minimum(acc[0], val[0]), jnp.maximum(acc[1], val[1]))
+    return lax.reduce((x2, x2),
+                      (jnp.float32(jnp.inf), jnp.float32(-jnp.inf)),
+                      comp, (1,))
+
+
+def _quantize_rows(x2: jnp.ndarray, bits: int):
+    """quantize_tensor's affine per row of a [K, n] stack (bit-identical)."""
+    levels = 2 ** int(bits) - 1
+    xf = x2.astype(jnp.float32)
+    lo, hi = _minmax_rows(xf)
+    scale = jnp.maximum((hi - lo) / levels, 1e-12)
+    codes = jnp.clip(jnp.round((xf - lo[:, None]) / scale[:, None]),
+                     0, levels)
+    return codes.astype(code_dtype(bits)), scale, lo
+
+
+def _pack_rows(codes2: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Row-wise pack_codes in the uint8 domain (no uint32 intermediates —
+    on CPU those quadruple the pack traffic and erase the fused win)."""
+    per = _per(bits)
+    if per <= 1:
+        return codes2
+    kk, n = codes2.shape
+    pad = (-n) % per
+    lanes = jnp.pad(codes2, ((0, 0), (0, pad))).reshape(kk, -1, per)
+    word = lanes[:, :, 0]
+    for l in range(1, per):
+        word = word | (lanes[:, :, l] << jnp.uint8(l * bits))
+    return word
+
+
+def _unpack_rows(packed2: jnp.ndarray, bits: int, n: int) -> jnp.ndarray:
+    per = _per(bits)
+    if per <= 1:
+        return packed2
+    kk = packed2.shape[0]
+    mask = jnp.uint8(2 ** bits - 1)
+    lanes = [(packed2 >> jnp.uint8(l * bits)) & mask for l in range(per)]
+    return jnp.stack(lanes, axis=2).reshape(kk, -1)[:, :n]
+
+
+def _uplink_leaf(leaf: jnp.ndarray, bits: int):
+    codes, scale, zero = _quantize_rows(
+        leaf.reshape(leaf.shape[0], -1), bits)
+    return _pack_rows(codes, bits), scale, zero
+
+
+def _tree_uplink(stacked, bits: int):
+    flat, treedef = jax.tree_util.tree_flatten(stacked)
+    ps, ss, zs = [], [], []
+    for leaf in flat:
+        p, s, z = _uplink_leaf(leaf, bits)
+        ps.append(p)
+        ss.append(s)
+        zs.append(z)
+    unflat = functools.partial(jax.tree_util.tree_unflatten, treedef)
+    return unflat(ps), unflat(ss), unflat(zs)
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def quantize_pack_population(stacked, *, bits: int):
+    """Fused uplink over a stacked ``[K, ...]`` pytree, one program:
+    single-pass min/max, affine encode, and the bit-packed wire format per
+    leaf. Returns ``(packed, scales, zeros)`` pytrees — packed leaves are
+    ``[K, ceil(n·bits/8)]`` wire buffers (bit-identical to
+    ``vmap(pack_codes)`` over ``quantize_pytree`` codes), scales/zeros
+    ``[K]``. Only the wire format crosses the program boundary."""
+    return _tree_uplink(stacked, bits)
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def quantize_pack_population_ef(stacked, residuals, *, bits: int):
+    """Fused uplink with error feedback: quantize ``params + residual``,
+    pack, and return the new residual ``compensated − dequantized`` (what
+    the wire could not carry). Same math as
+    ``quantize_population_with_error_feedback`` — codes and residuals stay
+    bit-identical — but only packed wire buffers leave the program."""
+    comp = jax.tree.map(lambda a, b: a.astype(jnp.float32) + b,
+                        stacked, residuals)
+    flat, treedef = jax.tree_util.tree_flatten(comp)
+    ps, ss, zs, rs = [], [], [], []
+    for leaf in flat:
+        kk = leaf.shape[0]
+        codes, scale, zero = _quantize_rows(leaf.reshape(kk, -1), bits)
+        sent = (codes.astype(jnp.float32) * scale[:, None] + zero[:, None])
+        ps.append(_pack_rows(codes, bits))
+        ss.append(scale)
+        zs.append(zero)
+        rs.append((leaf.reshape(kk, -1) - sent).reshape(leaf.shape))
+    unflat = functools.partial(jax.tree_util.tree_unflatten, treedef)
+    return unflat(ps), unflat(ss), unflat(zs), unflat(rs)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "shapes"))
+def reduce_packed_population(packed, scales, zeros, weights, *, bits: int,
+                             shapes: Tuple[Tuple[int, ...], ...]):
+    """Fused downlink over the whole payload pytree: per leaf, unpack and
+    contract ``einsum(wn·s, codes) + Σ_k wn_k·z_k`` — the Eq. 21 weighted
+    mean with the affine applied to the reduced sums, never materializing a
+    ``[K, ...]`` dequantized stack. ``shapes`` restores each leaf's
+    per-client shape (static; the packed width alone is ambiguous)."""
+    w = weights.astype(jnp.float32)
+    wn = w / jnp.maximum(jnp.sum(w), 1e-12)
+    flat_p, treedef = jax.tree_util.tree_flatten(packed)
+    flat_s = treedef.flatten_up_to(scales)
+    flat_z = treedef.flatten_up_to(zeros)
+    out = []
+    for p, s, z, shp in zip(flat_p, flat_s, flat_z, shapes):
+        n = 1
+        for d in shp:
+            n *= d
+        codes = _unpack_rows(p, bits, n).astype(jnp.float32)
+        agg = (jnp.einsum("k,kn->n", wn * s.astype(jnp.float32), codes)
+               + jnp.sum(wn * z.astype(jnp.float32)))
+        out.append(agg.reshape(shp))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# public single-leaf wrappers (kernel on TPU / by request; XLA otherwise)
+# ---------------------------------------------------------------------------
+
+def quantize_pack(x: jnp.ndarray, bits: int, *, use_kernel=None):
+    """Fused uplink for one ``[K, ...]`` leaf stack →
+    ``(packed [K, W], scale [K], zero [K])``. ``use_kernel=None`` routes
+    through the Pallas kernel only on TPU (the interpret-mode kernel is a
+    correctness artifact on CPU, not a fast path); tests pass ``True``."""
+    from repro.kernels.ops import _interpret, use_pallas
+    if use_kernel is None:
+        use_kernel = use_pallas()
+    if use_kernel:
+        return quantize_pack_pallas(x, bits, interpret=_interpret())
+    return _jit_uplink_leaf(x, bits=int(bits))
+
+
+def dequantize_weight_reduce(packed, scale, zero, weights, *, bits: int,
+                             n: int, use_kernel=None):
+    """Fused downlink for one leaf: Eq. 21 mean ``[n]`` from packed words,
+    (scale, zero) and client weights — staleness-discounted weights plug in
+    unchanged (they are just ``w_k``)."""
+    from repro.kernels.ops import _interpret, use_pallas
+    if use_kernel is None:
+        use_kernel = use_pallas()
+    if use_kernel:
+        return dequantize_weight_reduce_pallas(packed, scale, zero, weights,
+                                               bits=bits, n=n,
+                                               interpret=_interpret())
+    return _jit_reduce_leaf(packed, scale, zero, weights, bits=int(bits),
+                            n=int(n))
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def _jit_uplink_leaf(x, *, bits: int):
+    return _uplink_leaf(x, bits)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "n"))
+def _jit_reduce_leaf(packed, scale, zero, weights, *, bits: int, n: int):
+    w = weights.astype(jnp.float32)
+    wn = w / jnp.maximum(jnp.sum(w), 1e-12)
+    codes = _unpack_rows(packed, bits, n).astype(jnp.float32)
+    return (jnp.einsum("k,kn->n", wn * scale.astype(jnp.float32), codes)
+            + jnp.sum(wn * zero.astype(jnp.float32)))
+
+
+# ---------------------------------------------------------------------------
+# bytes-moved accounting
+# ---------------------------------------------------------------------------
+
+def payload_nbytes(*trees) -> int:
+    """Bytes of every device buffer in the given payload pytrees — what
+    actually crosses the uplink program boundary. For the fused path that
+    is the bit-packed wire buffers + [K] scale/zero vectors; for the
+    reference path, the unpacked code containers. Feeds the
+    ``repro.core.hostsync`` bytes-moved counter."""
+    import numpy as np
+    total = 0
+    for tree in trees:
+        for leaf in jax.tree_util.tree_leaves(tree):
+            nbytes = getattr(leaf, "nbytes", None)
+            if nbytes is None:      # ShapeDtypeStruct (roofline metering)
+                nbytes = int(np.prod(leaf.shape, dtype=np.int64)
+                             * np.dtype(leaf.dtype).itemsize)
+            total += int(nbytes)
+    return total
+
+
+def wire_payload_bytes(template, bits: int, k: int) -> int:
+    """Roofline lower bound for a K-client upload of ``template``: exact
+    §4.10 wire bytes (packed codes + per-tensor metadata) — the fewest
+    bytes any uplink implementation can move at this precision."""
+    from repro.core.quantize import pytree_wire_bytes
+    return k * pytree_wire_bytes(template, bits)
+
+
+def container_payload_bytes(template, bits: int, k: int) -> int:
+    """What the reference path moves instead: unpacked ``code_dtype``
+    containers (+ the same per-tensor metadata)."""
+    import numpy as np
+    if bits >= 32:
+        return k * sum(int(np.prod(np.shape(l), dtype=np.int64) or 1) * 4
+                       for l in jax.tree_util.tree_leaves(template))
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(template):
+        n = int(np.prod(np.shape(leaf), dtype=np.int64)) \
+            if np.shape(leaf) else 1
+        total += n * np.dtype(code_dtype(bits)).itemsize \
+            + TENSOR_METADATA_BYTES
+    return k * total

@@ -5,12 +5,15 @@ the same math:
 - flash attention   → unblocked softmax attention (GQA-aware)
 - RG-LRU scan       → gate projections + ``jax.lax.associative_scan``
 - mLSTM chunk scan  → ``repro.models.ssm.mlstm_chunked`` (chunkwise jnp)
+- comm uplink       → per-row ``quantize_tensor`` + ``pack_codes`` (§4.10)
+- comm downlink     → unpack, dequantize the full [K, n] stack, weighted mean
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.quantize import pack_codes, quantize_tensor, unpack_codes
 from repro.models.ssm import mlstm_chunked
 
 NEG_INF = -1e30
@@ -61,3 +64,30 @@ def mlstm_scan_ref(q, k, v, i_pre, f_pre, *, chunk: int = 64):
     Returns (h [B,H,S,dv], (C, n, m))."""
     h, state = mlstm_chunked(q, k, v, i_pre, f_pre, chunk)
     return h, state
+
+
+def quantize_pack_ref(x, bits: int):
+    """Oracle for the fused uplink: the reference §4.10 pipeline applied
+    row-by-row to a ``[K, ...]`` stack — ``quantize_tensor`` then
+    ``pack_codes``. Returns ``(packed [K, W], scale [K], zero [K])``; the
+    fused kernel must match all three bit-for-bit. Jitted like the
+    production ``quantize_population`` so the scale's constant division
+    lowers identically (XLA's compiled divide-by-constant is a
+    reciprocal-multiply, 1 ulp off the eager correctly-rounded divide)."""
+    def one(row):
+        codes, scale, zero = quantize_tensor(row, bits)
+        return pack_codes(codes, bits), scale, zero
+    return jax.jit(jax.vmap(one))(x.reshape(x.shape[0], -1))
+
+
+def dequantize_weight_reduce_ref(packed, scale, zero, weights, *,
+                                 bits: int, n: int):
+    """Oracle for the fused downlink: materialize the full dequantized
+    ``[K, n]`` stack (exactly what the fused path avoids) and take the
+    Eq. 21 weighted mean. Flat ``[n]`` float32."""
+    codes = jax.vmap(lambda p: unpack_codes(p, bits, n, (n,)))(packed)
+    deq = codes.astype(jnp.float32) * scale[:, None].astype(jnp.float32) \
+        + zero[:, None].astype(jnp.float32)
+    w = weights.astype(jnp.float32)
+    wn = w / jnp.maximum(jnp.sum(w), 1e-12)
+    return jnp.einsum("k,kn->n", wn, deq)

@@ -1,9 +1,15 @@
-"""Roofline metering: jaxpr FLOP counter, analytic HBM-traffic model, and
-while-aware collective-bytes parsing (all documented in EXPERIMENTS.md
-§Roofline, including why raw ``cost_analysis()`` is insufficient)."""
+"""Roofline metering: jaxpr FLOP counter, analytic HBM-traffic model,
+while-aware collective-bytes parsing, and the real-round federation
+meters (all documented in EXPERIMENTS.md §Roofline, including why raw
+``cost_analysis()`` is insufficient)."""
 from repro.roofline.collectives import collective_bytes, computation_multipliers
+from repro.roofline.federated import (quantized_uplink_roofline,
+                                      sharded_round_programs,
+                                      stacked_abstract)
 from repro.roofline.jaxpr_flops import count_step_flops
 from repro.roofline.memory import analytic_hbm_bytes
 
 __all__ = ["collective_bytes", "computation_multipliers",
-           "count_step_flops", "analytic_hbm_bytes"]
+           "count_step_flops", "analytic_hbm_bytes",
+           "quantized_uplink_roofline", "sharded_round_programs",
+           "stacked_abstract"]

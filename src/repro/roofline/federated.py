@@ -1,0 +1,128 @@
+"""Roofline metering of the REAL federation round programs.
+
+The historical ``benchmarks/roofline_federated.py`` rooflined a standalone
+``make_federated_round`` step that ``run_federation`` never executes. This
+module meters the programs the backends actually run:
+
+- :func:`quantized_uplink_roofline` — the §4.10 communication hot path of
+  ``aggregate_uploads``: FLOPs of the fused (``repro.kernels.comm``) and
+  reference (``quantize_population`` + ``aggregate_quantized``) programs,
+  walked from their jaxprs at the padded ``[K, ...]`` population shape
+  (nothing materializes — ShapeDtypeStructs in), plus the three byte
+  levels a round can move: the exact wire-format lower bound, each impl's
+  actual program-boundary payload, and the raw float32 ceiling.
+  ``benchmarks/bench_quantized_round.py`` reports achieved
+  (``repro.core.hostsync.bytes_moved``) against these bounds.
+- :func:`sharded_round_programs` — the sharded backend's per-round
+  ``shard_map`` programs (local-SGD epoch, full-precision psum, quantized
+  psum in both impls), returned with representative abstract inputs so
+  ``benchmarks/roofline_federated.py`` can lower them on a forced-D mesh
+  and parse collective bytes from the compiled HLO.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.roofline.jaxpr_flops import count_step_flops
+
+__all__ = ["quantized_uplink_roofline", "sharded_round_programs",
+           "stacked_abstract"]
+
+
+def stacked_abstract(template, k: int):
+    """``[K, ...]`` float32 ShapeDtypeStructs for a stacked population of
+    ``template`` (the shape ``aggregate_uploads`` sees after padding)."""
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((k,) + tuple(np.shape(l)),
+                                       jnp.float32), template)
+
+
+def quantized_uplink_roofline(template, k: int, bits: int) -> Dict:
+    """FLOPs and byte bounds of one modality's K-client upload+reduce.
+
+    Returns::
+
+        {"wire_bytes":      exact §4.10 wire format — the lower bound,
+         "payload_bytes":   {"fused": ..., "reference": ...}  (what each
+                            impl's program boundary actually carries),
+         "raw_bytes":       K × float32 encoder — the uncompressed ceiling,
+         "flops":           {"fused": {"uplink", "downlink"},
+                             "reference": {"uplink", "downlink"}}}
+
+    All numbers come from the REAL jitted programs ``aggregate_uploads``
+    dispatches — metered on abstract shapes via ``count_step_flops``.
+    """
+    from repro.core.aggregation import aggregate_quantized
+    from repro.core.quantize import quantize_population
+    from repro.kernels.comm import (container_payload_bytes, payload_nbytes,
+                                    quantize_pack_population,
+                                    reduce_packed_population,
+                                    wire_payload_bytes)
+    stacked = stacked_abstract(template, k)
+    w = jax.ShapeDtypeStruct((k,), jnp.float32)
+    shapes: Tuple[Tuple[int, ...], ...] = tuple(
+        tuple(l.shape[1:]) for l in jax.tree_util.tree_leaves(stacked))
+    raw_bytes = payload_nbytes(stacked)
+
+    def up_fused(s):
+        return quantize_pack_population(s, bits=bits)
+
+    def up_ref(s):
+        return quantize_population(s, bits=bits)
+
+    payload_f = jax.eval_shape(up_fused, stacked)
+    payload_r = jax.eval_shape(up_ref, stacked)
+    flops = {
+        "fused": {
+            "uplink": count_step_flops(up_fused, stacked),
+            "downlink": count_step_flops(
+                lambda p, sc, z, ww: reduce_packed_population(
+                    p, sc, z, ww, bits=bits, shapes=shapes),
+                *payload_f, w),
+        },
+        "reference": {
+            "uplink": count_step_flops(up_ref, stacked),
+            "downlink": count_step_flops(aggregate_quantized, *payload_r, w),
+        },
+    }
+    return {
+        "wire_bytes": wire_payload_bytes(template, bits, k),
+        "payload_bytes": {"fused": payload_nbytes(*payload_f),
+                          "reference": payload_nbytes(*payload_r)},
+        "raw_bytes": raw_bytes,
+        "flops": flops,
+    }
+
+
+def sharded_round_programs(mesh, *, k: int, steps: int, batch: int,
+                           feat: Tuple[int, ...], template, lr: float,
+                           bits: int) -> Dict:
+    """The sharded backend's per-round programs + abstract inputs.
+
+    Returns ``{name: (program, args)}`` where ``program`` is the exact
+    lru-cached ``jit(shard_map(...))`` object ``run_federation`` with
+    ``backend="sharded"`` dispatches, and ``args`` are ShapeDtypeStructs
+    at a representative round shape — ready for ``.lower(*args)`` (HLO
+    collective parsing) and ``count_step_flops(program, *args)``."""
+    from repro.core.sharded import (_aggregate_program,
+                                    _aggregate_quantized_fused_program,
+                                    _aggregate_quantized_program,
+                                    _epoch_program)
+    params = stacked_abstract(template, k)
+    f32 = jnp.float32
+    xs = jax.ShapeDtypeStruct((k, steps, batch) + tuple(feat), f32)
+    ys = jax.ShapeDtypeStruct((k, steps, batch), jnp.int32)
+    ws = jax.ShapeDtypeStruct((k, steps, batch), f32)
+    w = jax.ShapeDtypeStruct((k,), f32)
+    return {
+        "epoch": (_epoch_program(mesh, lr), (params, xs, ys, ws)),
+        "aggregate_full": (_aggregate_program(mesh), (params, w)),
+        "aggregate_q_reference": (
+            _aggregate_quantized_program(mesh, bits), (params, w)),
+        "aggregate_q_fused": (
+            _aggregate_quantized_fused_program(mesh, bits), (params, w)),
+    }

@@ -1,0 +1,322 @@
+"""Fused communication hot path (``repro.kernels.comm``) parity pinning.
+
+Four layers:
+
+1. **Kernel vs oracle (``kernels`` marker).** The Pallas ``quantize_pack``
+   and ``dequantize_weight_reduce`` kernels (interpret mode on CPU) must be
+   bit-identical to the ``ref.py`` oracles on packed words, scales and
+   zeros, and ≤1e-5 on Eq. 21 aggregates — across bits 1..16, odd leaf
+   sizes, and multi-tile rows.
+2. **Production programs vs oracle.** The XLA population programs the
+   federation backends actually call (``quantize_pack_population`` /
+   ``reduce_packed_population``, plus the error-feedback variant) carry the
+   same bit-identity contract, and their payload bytes equal the §4.10
+   ledger's wire accounting exactly at packable widths.
+3. **pack/unpack content round-trip.** Property test over every bits ∈
+   1..16 × odd sizes (hypothesis where available, seeded sweep otherwise) —
+   the historical tests pinned only the packed *size* at non-divisor
+   widths.
+4. **Full-round fused-vs-reference.** ``comm_impl="fused"`` vs
+   ``"reference"`` through the real backends: batched/engine/async (and
+   sharded at D ∈ {1, 8} via the ``multidevice`` tier), with error
+   feedback, with identical ledgers and ≤1e-5 server encoders — and the
+   fused path must measure *fewer* uplink bytes on the
+   ``repro.core.hostsync`` counter at sub-byte precision.
+
+``REPRO_COMM_IMPL`` (fused|reference) selects the config default exercised
+by the smoke-round test; CI runs this module once per mode.
+"""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hostsync
+from repro.core.encoders import init_encoder
+from repro.core.quantize import (code_dtype, pack_codes, pytree_wire_bytes,
+                                 quantize_population,
+                                 quantize_population_with_error_feedback,
+                                 unpack_codes)
+from repro.core.rounds import MFedMCConfig, build_federation, run_federation
+from repro.kernels.comm import (dequantize_weight_reduce_pallas,
+                                packed_width, payload_nbytes,
+                                quantize_pack_pallas,
+                                quantize_pack_population,
+                                quantize_pack_population_ef,
+                                reduce_packed_population, wire_payload_bytes)
+from repro.kernels.ref import dequantize_weight_reduce_ref, quantize_pack_ref
+
+TOL = 1e-5
+COMM_IMPL = os.environ.get("REPRO_COMM_IMPL", "fused")
+
+ALL_BITS = (1, 2, 3, 4, 5, 8, 12, 16)
+# odd sizes, a sub-tile row, and a >2-tile row (kernel tile = 1024)
+SHAPES = ((4, (7, 9)), (3, (2050,)), (1, (5,)), (2, (13, 3, 5)))
+
+
+def _rows(bits, k, shape, seed_mul=100):
+    key = jax.random.fold_in(jax.random.key(0), bits * seed_mul + k)
+    return jax.random.normal(key, (k,) + shape)
+
+
+# ---------------------------------------------------------------------------
+# layer 1: Pallas kernels vs pure-jnp oracles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.kernels
+class TestKernelVsOracle:
+    @pytest.mark.parametrize("bits", ALL_BITS)
+    def test_quantize_pack_bit_identical(self, bits):
+        for k, shape in SHAPES:
+            x = _rows(bits, k, shape)
+            pr, sr, zr = quantize_pack_ref(x, bits)
+            pk, sk, zk = quantize_pack_pallas(x, bits, interpret=True)
+            n = int(np.prod(shape))
+            assert pk.shape == (k, packed_width(n, bits))
+            assert pk.dtype == pr.dtype
+            np.testing.assert_array_equal(np.asarray(pr), np.asarray(pk),
+                                          err_msg=f"bits={bits} {shape}")
+            np.testing.assert_array_equal(np.asarray(sr), np.asarray(sk))
+            np.testing.assert_array_equal(np.asarray(zr), np.asarray(zk))
+
+    @pytest.mark.parametrize("bits", ALL_BITS)
+    def test_dequantize_weight_reduce(self, bits):
+        for k, shape in SHAPES:
+            x = _rows(bits, k, shape)
+            n = int(np.prod(shape))
+            p, s, z = quantize_pack_ref(x, bits)
+            w = jnp.arange(1.0, k + 1.0)
+            want = dequantize_weight_reduce_ref(p, s, z, w, bits=bits, n=n)
+            got = dequantize_weight_reduce_pallas(p, s, z, w, bits=bits,
+                                                  n=n, interpret=True)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       atol=TOL, rtol=0,
+                                       err_msg=f"bits={bits} {shape}")
+
+    def test_staleness_discounted_weights(self):
+        """Async staleness discounts are plain per-client weights — the
+        fused reduction must honour arbitrary positive w_k."""
+        x = _rows(4, 4, (33,))
+        p, s, z = quantize_pack_ref(x, 4)
+        w = jnp.asarray([24.0 * 0.5 ** 3, 16.0, 8.0 * 0.5, 0.0])
+        want = dequantize_weight_reduce_ref(p, s, z, w, bits=4, n=33)
+        got = dequantize_weight_reduce_pallas(p, s, z, w, bits=4, n=33,
+                                              interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=TOL, rtol=0)
+
+    def test_all_zero_weights_yield_zeros_not_nan(self):
+        x = _rows(4, 2, (17,))
+        p, s, z = quantize_pack_ref(x, 4)
+        out = dequantize_weight_reduce_pallas(p, s, z, jnp.zeros((2,)),
+                                              bits=4, n=17, interpret=True)
+        np.testing.assert_array_equal(np.asarray(out), np.zeros(17))
+
+    def test_constant_row_quantizes_under_zero_range_guard(self):
+        x = jnp.concatenate([jnp.full((1, 40), 3.0),
+                             _rows(2, 1, (40,))])
+        pr, sr, zr = quantize_pack_ref(x, 2)
+        pk, sk, zk = quantize_pack_pallas(x, 2, interpret=True)
+        np.testing.assert_array_equal(np.asarray(pr), np.asarray(pk))
+        assert float(sk[0]) == pytest.approx(1e-12)
+
+
+# ---------------------------------------------------------------------------
+# layer 2: production XLA programs vs oracle + wire-byte identity
+# ---------------------------------------------------------------------------
+
+class TestProductionPrograms:
+    def _tree(self, k=4, seed=0):
+        enc = init_encoder(jax.random.key(seed), (6, 4), 3)
+        return jax.tree.map(
+            lambda v: jnp.stack([v + 0.01 * i for i in range(k)]), enc)
+
+    @pytest.mark.parametrize("bits", (2, 4, 8, 16))
+    def test_population_bit_identical_to_oracle(self, bits):
+        stacked = self._tree()
+        P, S, Z = quantize_pack_population(stacked, bits=bits)
+        w = jnp.asarray([3.0, 1.0, 4.0, 1.5])
+        shapes = tuple(tuple(l.shape[1:])
+                       for l in jax.tree_util.tree_leaves(stacked))
+        agg = reduce_packed_population(P, S, Z, w, bits=bits, shapes=shapes)
+        for name in stacked:
+            pr, sr, zr = quantize_pack_ref(stacked[name], bits)
+            np.testing.assert_array_equal(np.asarray(P[name]),
+                                          np.asarray(pr), err_msg=name)
+            np.testing.assert_array_equal(np.asarray(S[name]),
+                                          np.asarray(sr))
+            np.testing.assert_array_equal(np.asarray(Z[name]),
+                                          np.asarray(zr))
+            n = int(np.prod(stacked[name].shape[1:]))
+            want = dequantize_weight_reduce_ref(pr, sr, zr, w, bits=bits,
+                                                n=n)
+            np.testing.assert_allclose(
+                np.asarray(agg[name]).reshape(-1), np.asarray(want),
+                atol=TOL, rtol=0, err_msg=name)
+
+    @pytest.mark.parametrize("bits", (2, 4, 8))
+    def test_error_feedback_program_bit_identical(self, bits):
+        stacked = self._tree()
+        res = jax.tree.map(
+            lambda v: jnp.full(v.shape, 0.03, jnp.float32), stacked)
+        c0, s0, z0, r0 = quantize_population_with_error_feedback(
+            stacked, res, bits=bits)
+        P, S, Z, R = quantize_pack_population_ef(stacked, res, bits=bits)
+        pack_pop = jax.jit(jax.vmap(
+            lambda row: pack_codes(row.reshape(-1), bits)))
+        for name in stacked:
+            np.testing.assert_array_equal(np.asarray(pack_pop(c0[name])),
+                                          np.asarray(P[name]), err_msg=name)
+            np.testing.assert_array_equal(np.asarray(s0[name]),
+                                          np.asarray(S[name]))
+            np.testing.assert_array_equal(np.asarray(z0[name]),
+                                          np.asarray(Z[name]))
+            np.testing.assert_allclose(np.asarray(r0[name]),
+                                       np.asarray(R[name]), atol=1e-6,
+                                       rtol=0, err_msg=name)
+
+    @pytest.mark.parametrize("bits", (1, 2, 4, 8, 16))
+    def test_payload_bytes_equal_ledger_wire_bytes(self, bits):
+        """At packable widths the fused payload's device bytes ARE the
+        ledger's exact wire count: K × (packed codes + 8B metadata/tensor).
+        The reference payload carries unpacked containers — strictly more
+        below 8 bits."""
+        k = 4
+        stacked = self._tree(k)
+        template = jax.tree.map(lambda v: v[0], stacked)
+        P, S, Z = quantize_pack_population(stacked, bits=bits)
+        fused = payload_nbytes(P, S, Z)
+        assert fused == wire_payload_bytes(template, bits, k)
+        assert fused == k * pytree_wire_bytes(template, bits)
+        codes, scales, zeros = quantize_population(stacked, bits=bits)
+        reference = payload_nbytes(codes, scales, zeros)
+        if bits < 8:
+            assert fused < reference
+        else:
+            assert fused == reference
+
+
+# ---------------------------------------------------------------------------
+# layer 3 (satellite): pack/unpack content round-trip, bits 1..16
+# ---------------------------------------------------------------------------
+
+class TestPackRoundtripContent:
+    @pytest.mark.parametrize("bits", range(1, 17))
+    @pytest.mark.parametrize("n", (1, 3, 7, 17, 63, 255, 257))
+    def test_seeded_roundtrip(self, bits, n):
+        levels = 2 ** bits - 1
+        codes = np.random.default_rng(bits * 1000 + n).integers(
+            0, levels + 1, size=n).astype(np.dtype(code_dtype(bits)))
+        packed = pack_codes(jnp.asarray(codes), bits)
+        back = unpack_codes(packed, bits, n, (n,))
+        np.testing.assert_array_equal(np.asarray(back), codes,
+                                      err_msg=f"bits={bits} n={n}")
+
+    def test_hypothesis_roundtrip(self):
+        hypothesis = pytest.importorskip("hypothesis")
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+
+        @settings(deadline=None, max_examples=60)
+        @given(st.integers(1, 16), st.integers(1, 300), st.integers(0, 2**31))
+        def run(bits, n, seed):
+            levels = 2 ** bits - 1
+            codes = np.random.default_rng(seed).integers(
+                0, levels + 1, size=n).astype(np.dtype(code_dtype(bits)))
+            packed = pack_codes(jnp.asarray(codes), bits)
+            back = unpack_codes(packed, bits, n, (n,))
+            np.testing.assert_array_equal(np.asarray(back), codes)
+
+        run()
+
+
+# ---------------------------------------------------------------------------
+# layer 4: full-round fused vs reference through the real backends
+# ---------------------------------------------------------------------------
+
+def _run(backend, comm_impl, bits=4, **cfg_kw):
+    base = dict(rounds=1, local_epochs=1, batch_size=8, seed=0,
+                modality_strategy="random", gamma=1, quantize_bits=bits,
+                comm_impl=comm_impl, background_size=12, eval_size=12)
+    base.update(cfg_kw)
+    cfg = MFedMCConfig(**base)
+    clients, spec = build_federation("ucihar", "iid", cfg=cfg, seed=0,
+                                     samples_per_client=16)
+    server = {}
+    hist = run_federation(clients, spec, cfg, server_encoders=server,
+                          backend=backend)
+    return server, hist, clients
+
+
+def _assert_server_match(se_a, se_b, atol=TOL):
+    assert set(se_a) == set(se_b)
+    for m in se_a:
+        for k in se_a[m]:
+            np.testing.assert_allclose(np.asarray(se_b[m][k]),
+                                       np.asarray(se_a[m][k]),
+                                       atol=atol, rtol=0,
+                                       err_msg=f"{m}/{k}")
+
+
+class TestFullRoundParity:
+    @pytest.mark.parametrize("backend", ("batched", "engine", "async"))
+    def test_fused_matches_reference(self, backend):
+        se_f, h_f, _ = _run(backend, "fused")
+        se_r, h_r, _ = _run(backend, "reference")
+        _assert_server_match(se_r, se_f)
+        assert h_f.records[0].uploads == h_r.records[0].uploads
+        assert h_f.records[0].comm_mb == h_r.records[0].comm_mb
+
+    def test_fused_matches_reference_with_error_feedback(self):
+        se_f, _, cl_f = _run("batched", "fused", error_feedback=True)
+        se_r, _, cl_r = _run("batched", "reference", error_feedback=True)
+        _assert_server_match(se_r, se_f)
+        # client-held EF residuals stay bit-compatible across impls
+        for a, b in zip(cl_f, cl_r):
+            assert set(a.residuals) == set(b.residuals)
+            for m in a.residuals:
+                for k in a.residuals[m]:
+                    np.testing.assert_allclose(
+                        np.asarray(a.residuals[m][k]),
+                        np.asarray(b.residuals[m][k]), atol=1e-6, rtol=0)
+
+    def test_fused_moves_fewer_bytes_at_4bit(self):
+        hostsync.reset()
+        _run("engine", "fused")
+        fused = hostsync.bytes_moved()
+        hostsync.reset()
+        _run("engine", "reference")
+        reference = hostsync.bytes_moved()
+        hostsync.reset()
+        assert 0 < fused < reference
+
+    def test_invalid_comm_impl_rejected(self):
+        with pytest.raises(ValueError, match="comm_impl"):
+            _run("batched", "fussed")
+
+    def test_env_selected_impl_smokes(self):
+        """CI runs this module under both REPRO_COMM_IMPL values; whatever
+        mode is selected must complete a round and record uplink bytes."""
+        hostsync.reset()
+        _, hist, _ = _run("batched", COMM_IMPL)
+        assert hist.records and hist.records[0].uploads
+        assert hostsync.bytes_moved() > 0
+        hostsync.reset()
+
+
+class TestShardedParity:
+    def test_sharded_d1_fused_matches_reference(self):
+        se_f, h_f, _ = _run("sharded", "fused", mesh_clients=1)
+        se_r, h_r, _ = _run("sharded", "reference", mesh_clients=1)
+        _assert_server_match(se_r, se_f)
+        assert h_f.records[0].comm_mb == h_r.records[0].comm_mb
+
+    @pytest.mark.multidevice
+    def test_sharded_d8_fused_matches_reference(self):
+        se_f, h_f, _ = _run("sharded", "fused", mesh_clients=8)
+        se_r, h_r, _ = _run("sharded", "reference", mesh_clients=8)
+        _assert_server_match(se_r, se_f)
+        assert h_f.records[0].uploads == h_r.records[0].uploads

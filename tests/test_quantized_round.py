@@ -160,6 +160,41 @@ class TestStackedAggregation:
             manual = sum(wi * d for wi, d in zip(wn, deq))
             np.testing.assert_allclose(np.asarray(agg[k]), manual, atol=1e-5)
 
+    @pytest.mark.parametrize("bits", [2, 4, 8, 16])
+    def test_reduce_from_codes_matches_old_dequantize_stack(self, bits):
+        """Regression oracle for the aggregate_quantized rewrite: the
+        einsum-over-codes reduction (affine applied to the reduced sums)
+        must match the historical implementation that materialized the
+        full [K, ...] dequantized stack via vmap(dequantize_tensor)."""
+        from repro.core.quantize import dequantize_tensor
+        encs = [_enc(seed=i) for i in range(5)]
+        w = jnp.asarray([12.0, 0.0, 7.0, 31.0, 3.0])
+        stacked = stack_uploads(encs)
+        codes, scales, zeros = quantize_population(stacked, bits=bits)
+        agg = aggregate_quantized(codes, scales, zeros, w)
+
+        @jax.jit
+        def old_impl(codes, scales, zeros, weights):
+            wn = weights / jnp.maximum(jnp.sum(weights), 1e-12)
+            def leaf(c, s, z):
+                deq = jax.vmap(dequantize_tensor)(c, s, z)
+                return jnp.einsum("k,k...->...", wn, deq)
+            return jax.tree.map(leaf, codes, scales, zeros)
+
+        want = old_impl(codes, scales, zeros, w)
+        for k in encs[0]:
+            np.testing.assert_allclose(np.asarray(agg[k]),
+                                       np.asarray(want[k]),
+                                       atol=1e-5, rtol=0, err_msg=k)
+
+    def test_reduce_from_codes_zero_weights_safe(self):
+        stacked = stack_uploads([_enc(seed=9)])
+        codes, scales, zeros = quantize_population(stacked, bits=4)
+        agg = aggregate_quantized(codes, scales, zeros, jnp.zeros((1,)))
+        for k in agg:
+            np.testing.assert_array_equal(np.asarray(agg[k]),
+                                          np.zeros_like(np.asarray(agg[k])))
+
     def test_stacked_matches_convex_combination(self):
         e1, e2 = _enc(seed=0), _enc(seed=1)
         agg = aggregate_stacked(stack_uploads([e1, e2]),

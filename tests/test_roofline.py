@@ -119,3 +119,45 @@ class TestAnalyticMemory:
         cfg = get_config("yi-34b")
         m = analytic_hbm_bytes(cfg, get_shape("decode_32k"), 256, 16)
         assert m["cache"] > 0
+
+
+class TestQuantizedUplinkRoofline:
+    """The real-round comm meters: byte bounds must order wire ≤ fused ≤
+    reference ≤ raw, with fused exactly the wire format below 8 bits."""
+
+    def _template(self):
+        return {"w": jnp.zeros((17, 9)), "b": jnp.zeros((9,))}
+
+    def test_byte_ordering_and_flops(self):
+        from repro.roofline import quantized_uplink_roofline
+        r = quantized_uplink_roofline(self._template(), k=8, bits=4)
+        assert (r["wire_bytes"] <= r["payload_bytes"]["fused"]
+                <= r["payload_bytes"]["reference"] <= r["raw_bytes"])
+        assert r["payload_bytes"]["fused"] == r["wire_bytes"]
+        assert r["payload_bytes"]["reference"] > r["wire_bytes"]
+        for impl in ("fused", "reference"):
+            assert r["flops"][impl]["uplink"] > 0
+            assert r["flops"][impl]["downlink"] > 0
+
+    def test_payloads_equal_at_byte_aligned_bits(self):
+        from repro.roofline import quantized_uplink_roofline
+        for bits in (8, 16):
+            r = quantized_uplink_roofline(self._template(), k=4, bits=bits)
+            assert (r["payload_bytes"]["fused"]
+                    == r["payload_bytes"]["reference"] == r["wire_bytes"])
+
+    def test_sharded_round_programs_lower(self):
+        from repro.core.encoders import init_encoder
+        from repro.roofline import sharded_round_programs
+        from repro.sharding.partition import client_mesh
+        mesh = client_mesh(1)
+        template = jax.eval_shape(
+            lambda: init_encoder(jax.random.key(0), (4, 3), 5))
+        progs = sharded_round_programs(
+            mesh, k=4, steps=2, batch=4, feat=(4, 3),
+            template=template, lr=0.1, bits=4)
+        assert set(progs) == {"epoch", "aggregate_full",
+                              "aggregate_q_reference", "aggregate_q_fused"}
+        for name, (prog, args) in progs.items():
+            with mesh:
+                prog.lower(*args)  # must trace at the abstract shapes
