@@ -38,7 +38,7 @@ from typing import Dict, List
 import jax
 
 from benchmarks.bench_batched_round import synthetic_federation
-from benchmarks.common import Row, Timer
+from benchmarks.common import Row, Timer, lint_stamp
 from repro.core import hostsync
 from repro.core.rounds import MFedMCConfig, aggregate_uploads, run_federation
 from repro.roofline import quantized_uplink_roofline
@@ -88,9 +88,9 @@ def time_comm_path(K: int, bits: int, *, n: int = 48, reps: int = 7) -> Dict:
 
     bytes_moved = {}
     for impl in ("fused", "reference"):
-        hostsync.reset()
-        once(impl)
-        bytes_moved[impl] = hostsync.bytes_moved()
+        with hostsync.measuring() as m:
+            once(impl)
+        bytes_moved[impl] = m.bytes_moved
 
     best = {"fused": float("inf"), "reference": float("inf")}
     for _ in range(reps):
@@ -202,6 +202,7 @@ def main(argv=None) -> int:
         },
         "results": results,
         "comm_path": comm_path,
+        "lint": lint_stamp(("batched", "engine"), ("fused", "reference")),
     }
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)

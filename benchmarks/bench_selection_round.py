@@ -35,7 +35,7 @@ import time
 from typing import List, Tuple
 
 from benchmarks.bench_batched_round import synthetic_federation
-from benchmarks.common import Row, Timer
+from benchmarks.common import Row, Timer, lint_stamp
 from repro.core import hostsync
 from repro.core.rounds import MFedMCConfig, run_federation
 
@@ -60,11 +60,10 @@ def _cfg(selection_impl: str) -> MFedMCConfig:
 def _one_run(K: int, path: str, n: int) -> Tuple[float, int]:
     spec_of = PATHS[path]
     clients, spec = synthetic_federation(K, n=n)
-    hostsync.reset()
-    with Timer() as t:
+    with hostsync.measuring() as m, Timer() as t:
         run_federation(clients, spec, _cfg(spec_of["selection_impl"]),
                        backend=spec_of["backend"])
-    return t.us / 1e6 / ROUNDS_TIMED, hostsync.count() // ROUNDS_TIMED
+    return t.us / 1e6 / ROUNDS_TIMED, m.syncs // ROUNDS_TIMED
 
 
 def time_paths(K: int, *, n: int = 48, repeats: int = 1) -> dict:
@@ -153,6 +152,7 @@ def main(argv=None) -> int:
                           "(repro.core.hostsync)",
         },
         "results": results,
+        "lint": lint_stamp(("batched", "engine"), ("fused",)),
     }
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)

@@ -7,10 +7,9 @@ contract: ``us_per_call`` is wall-microseconds for the measured unit and
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict
 
 from repro.core.rounds import MFedMCConfig
 
@@ -54,3 +53,32 @@ class Timer:
 
     def __exit__(self, *a):
         self.us = (time.perf_counter() - self.t0) * 1e6
+
+
+def lint_stamp(backends, comm_impls) -> Dict[str, Any]:
+    """Lint verdict + measured budgets for a BENCH json.
+
+    Runs the static passes over the real round programs of the benched
+    backends and re-measures each one's host-sync/byte budget against the
+    pinned manifest, so a benchmark artifact records whether the numbers
+    it reports came from clean programs."""
+    from repro.analysis import budgets as budgets_mod
+    from repro.analysis.lint import lint_static
+    targets = [(b, ci) for b in backends for ci in comm_impls]
+    findings, unknown = lint_static(targets)
+    measured: Dict[str, Any] = {}
+    pinned = budgets_mod.load_budgets()
+    drift = []
+    for b in backends:
+        measured[b] = {}
+        for ci in comm_impls:
+            measured[b][ci] = budgets_mod.measure(b, ci)
+    drift = budgets_mod.compare(
+        {k: v for k, v in measured.items()}, pinned)
+    return {
+        "passed": not findings and not drift,
+        "static_findings": [str(f) for f in findings],
+        "budget_findings": [str(f) for f in drift],
+        "unknown_primitives": unknown,
+        "measured_budgets": measured,
+    }

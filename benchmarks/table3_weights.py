@@ -2,7 +2,6 @@
 without client selection (δ = 1), on ActionSense."""
 from __future__ import annotations
 
-import dataclasses
 from typing import List
 
 from benchmarks.common import Row, Timer, cfg_for, samples_for

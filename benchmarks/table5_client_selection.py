@@ -3,7 +3,6 @@
 histogram skew."""
 from __future__ import annotations
 
-import dataclasses
 from collections import Counter
 from typing import List
 

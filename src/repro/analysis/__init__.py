@@ -1,0 +1,21 @@
+"""Static + dynamic analysis over the REAL round programs.
+
+``repro.analysis`` is the jaxpr-level counterpart of ``repro.roofline``:
+where the roofline *meters* the traced round programs (FLOPs, bytes),
+this package *audits* them — host-transfer freedom, the f64 decision
+wall, divisor guards, collective payload bounds — and pins the dynamic
+communication contract (host syncs, uplink bytes per round) in a
+checked-in manifest. Entry points:
+
+- ``python -m repro.analysis.lint --backend all`` — the CLI;
+- :func:`repro.analysis.lint.run_lint` — the same audits in-process;
+- ``pytest -m lint`` — the self-test tier (each violation class injected
+  and caught).
+"""
+from repro.analysis.framework import (AnalysisPass, Finding, ProgramSpec,
+                                      run_passes)
+from repro.analysis.passes import default_passes
+from repro.analysis.programs import all_round_programs, round_programs
+
+__all__ = ["AnalysisPass", "Finding", "ProgramSpec", "all_round_programs",
+           "default_passes", "round_programs", "run_passes"]

@@ -1,0 +1,154 @@
+"""Host-sync and wire-byte budgets, measured from real rounds and pinned.
+
+Each backend pays a deliberate, *fixed* number of host synchronisation
+points per round (final-epoch losses, the three modality-selection
+outputs, the client mask, evaluation) and moves a deterministic number of
+uplink bytes (pow-2-padded §4.10 payloads make the count independent of
+which modalities win a round). Those two numbers ARE the communication
+contract this repo exists to reproduce — so they are measured from real
+``run_federation`` rounds via :func:`repro.core.hostsync.measuring` and
+pinned in ``budgets.json`` next to this module.
+
+``python -m repro.analysis.lint --backend all`` re-measures and fails on
+ANY drift, printing an expected-vs-measured diff per (backend, comm_impl);
+``--bless`` regenerates the manifest after an intentional change (commit
+the diff with the code that caused it — the manifest is the reviewable
+record of every new host round-trip).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.analysis.framework import Finding
+
+BUDGET_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "budgets.json")
+
+# the measured federation: small enough to run in seconds, big enough to
+# exercise selection (K=8, δ=0.2 → exactly 2 kept clients), quantized
+# uplink, and both epochs; seeded so every measurement is a replay
+_K, _N, _SEED, _ROUNDS, _BITS = 8, 24, 0, 2, 4
+
+
+def mini_federation(k: int = _K, n: int = _N, seed: int = _SEED):
+    """K homogeneous UCI-HAR-shaped clients (the benchmarks' synthetic
+    federation, rebuilt here because ``src`` cannot import
+    ``benchmarks``)."""
+    from repro.core.client import make_client
+    from repro.data.registry import get_dataset_spec
+    from repro.data.synthetic import ClientData
+    spec = get_dataset_spec("ucihar")
+    rng = np.random.default_rng(seed)
+    clients = []
+    for c in range(k):
+        labels = np.tile(np.arange(spec.num_classes),
+                         n // spec.num_classes + 1)[:n]
+        rng.shuffle(labels)
+        mods = {
+            m.name: rng.standard_normal(
+                (n, *m.feature_shape(True))).astype(np.float32)
+            for m in spec.modalities
+        }
+        data = ClientData(c, mods, labels.astype(np.int32),
+                          spec.num_classes)
+        clients.append(make_client(c, spec, data, seed=seed))
+    return clients, spec
+
+
+def federation_config(comm_impl: str, *, bits: int = _BITS,
+                      rounds: int = _ROUNDS):
+    from repro.core.rounds import MFedMCConfig
+    return MFedMCConfig(rounds=rounds, local_epochs=1, batch_size=8,
+                        seed=_SEED, gamma=1, delta=0.2,
+                        modality_strategy="priority",
+                        client_strategy="low_loss",
+                        quantize_bits=bits, comm_impl=comm_impl)
+
+
+def measure(backend: str, comm_impl: str, *, bits: int = _BITS,
+            rounds: int = _ROUNDS) -> Dict:
+    """Host syncs + uplink bytes of a seeded ``rounds``-round federation,
+    scoped atomically via ``hostsync.measuring``."""
+    from repro.core import hostsync
+    from repro.core.rounds import run_federation
+    clients, spec = mini_federation()
+    cfg = federation_config(comm_impl, bits=bits, rounds=rounds)
+    with hostsync.measuring() as m:
+        run_federation(clients, spec, cfg, backend=backend)
+    return {"host_syncs": int(m.syncs), "bytes_moved": int(m.bytes_moved)}
+
+
+def measure_all(backends: Tuple[str, ...] = ("batched", "engine", "async",
+                                             "sharded"),
+                comm_impls: Tuple[str, ...] = ("fused", "reference")
+                ) -> Dict:
+    out: Dict = {
+        "config": {"K": _K, "n": _N, "seed": _SEED, "rounds": _ROUNDS,
+                   "bits": _BITS, "local_epochs": 1, "batch_size": 8,
+                   "gamma": 1, "delta": 0.2},
+    }
+    for b in backends:
+        out[b] = {}
+        for ci in comm_impls:
+            out[b][ci] = measure(b, ci)
+    return out
+
+
+def load_budgets(path: str = BUDGET_PATH) -> Optional[Dict]:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def bless(path: str = BUDGET_PATH, **kw) -> Dict:
+    budgets = measure_all(**kw)
+    with open(path, "w") as f:
+        json.dump(budgets, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return budgets
+
+
+def compare(measured: Dict, pinned: Optional[Dict]) -> List[Finding]:
+    """Exact comparison, one actionable finding per drifted number."""
+    if pinned is None:
+        return [Finding("budget", "<manifest>",
+                        f"no pinned budget manifest at {BUDGET_PATH} — "
+                        "run `python -m repro.analysis.lint --bless`")]
+    findings = []
+    for backend, impls in measured.items():
+        if backend == "config":
+            if impls != pinned.get("config"):
+                findings.append(Finding(
+                    "budget", "<manifest>",
+                    "measurement config drifted from the manifest "
+                    f"(expected {pinned.get('config')}, measured {impls})"
+                    " — re-bless"))
+            continue
+        for ci, m in impls.items():
+            p = (pinned.get(backend) or {}).get(ci)
+            if p is None:
+                findings.append(Finding(
+                    "budget", f"{backend}/{ci}",
+                    "no pinned budget for this (backend, comm_impl) — "
+                    "re-bless the manifest"))
+                continue
+            for key, label, hint in (
+                    ("host_syncs", "host syncs/run",
+                     "a new device->host fetch entered the round path"),
+                    ("bytes_moved", "uplink bytes/run",
+                     "the wire payload changed")):
+                if m[key] != p[key]:
+                    sign = "+" if m[key] > p[key] else ""
+                    findings.append(Finding(
+                        "budget", f"{backend}/{ci}",
+                        f"{label}: expected {p[key]}, measured {m[key]} "
+                        f"({sign}{m[key] - p[key]}) — {hint}; if "
+                        "intentional, re-bless with `python -m "
+                        "repro.analysis.lint --bless` and commit the "
+                        "budgets.json diff"))
+    return findings

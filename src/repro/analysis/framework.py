@@ -1,0 +1,84 @@
+"""Pass framework: programs in, findings out.
+
+A :class:`ProgramSpec` is one REAL round program — traced (never executed)
+from the exact function object a backend dispatches — tagged with the
+*role* that decides which invariants apply to it:
+
+- ``decision``    — the Eq. 13–19 selection math: must be float64 end to
+                    end (PR 4's 1-ulp FMA lesson);
+- ``aggregation`` — Eq. 21 / §4.10 uplink programs: float32 domain, no
+                    silent downcasts, no x64 leakage;
+- ``training``    — the local-SGD epoch programs;
+- ``collective``  — ``shard_map`` programs whose psum payloads the
+                    collective audit cross-checks against the roofline.
+
+An :class:`AnalysisPass` walks one program and returns :class:`Finding`\\ s;
+:func:`run_passes` is the product loop the CLI and the lint test tier both
+call. Passes are pure functions of the jaxpr — the dynamic audits
+(recompilation, budget manifests) live in ``repro.analysis.recompile`` and
+``repro.analysis.budgets``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+DECISION = "decision"
+AGGREGATION = "aggregation"
+TRAINING = "training"
+COLLECTIVE = "collective"
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One lint violation, printable and machine-checkable."""
+    pass_name: str           # e.g. "host-transfer"
+    program: str             # ProgramSpec.name
+    message: str             # what is wrong and where
+    severity: str = "error"  # error | warning
+
+    def __str__(self) -> str:
+        return f"[{self.pass_name}] {self.program}: {self.message}"
+
+
+@dataclass
+class ProgramSpec:
+    """One traced round program.
+
+    ``jaxpr`` is a ClosedJaxpr from ``jax.make_jaxpr`` over the function
+    the backend actually calls (for AOT-compiled decision programs, the
+    same traced form the compile cache holds)."""
+    name: str                        # "engine/uplink_fused/q4"
+    backend: str                     # batched|engine|async|sharded|shared
+    comm_impl: str                   # fused|reference|n/a
+    role: str                        # DECISION|AGGREGATION|TRAINING|COLLECTIVE
+    jaxpr: object                    # ClosedJaxpr
+    mesh_devices: int = 1            # collective programs: mesh size traced
+    meta: Dict = field(default_factory=dict)
+
+
+class AnalysisPass:
+    """Base class: subclasses set ``name``/``roles`` and implement
+    :meth:`run`. ``roles=None`` means the pass sees every program."""
+    name: str = "abstract"
+    roles: Optional[Sequence[str]] = None
+
+    def applies(self, prog: ProgramSpec) -> bool:
+        return self.roles is None or prog.role in self.roles
+
+    def run(self, prog: ProgramSpec) -> List[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+    def check(self, prog: ProgramSpec) -> List[Finding]:
+        return self.run(prog) if self.applies(prog) else []
+
+
+def run_passes(passes: Sequence[AnalysisPass],
+               programs: Sequence[ProgramSpec]) -> List[Finding]:
+    """Every applicable (pass, program) pair, findings concatenated in
+    deterministic (program, pass) order."""
+    findings: List[Finding] = []
+    for prog in programs:
+        for p in passes:
+            findings.extend(p.check(prog))
+    return findings

@@ -1,0 +1,184 @@
+"""Jaxpr IR utilities for the static-analysis passes.
+
+Generalizes the eqn-walker proven in ``repro.roofline.jaxpr_flops``: where
+the FLOP meter folds sub-jaxprs into one scalar, the lint passes need the
+*structure* — every equation with its nesting path (``scan`` bodies,
+``cond`` branches, ``pjit``/``shard_map``/``custom_vjp`` calls), and
+def-use maps inside each (sub-)jaxpr so a pass can walk a value's producer
+chain (the mask-safety pass traces a divisor back to its ``max``/
+``select_n`` guard this way).
+
+Everything operates on open ``core.Jaxpr`` objects; :func:`close` unwraps
+``ClosedJaxpr`` transparently. Nothing here executes or lowers a program.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import jax
+
+Eqn = jax.core.JaxprEqn
+
+# eqn params that carry a nested jaxpr (single)
+_SUBJAXPR_PARAMS = ("jaxpr", "call_jaxpr", "fun_jaxpr", "cond_jaxpr",
+                    "body_jaxpr")
+
+
+def close(j):
+    """ClosedJaxpr | Jaxpr -> open Jaxpr."""
+    return j.jaxpr if hasattr(j, "jaxpr") else j
+
+
+def sub_jaxprs(eqn: Eqn) -> Iterator[Tuple[str, object]]:
+    """Yield ``(slot, open jaxpr)`` for every nested jaxpr of ``eqn``."""
+    for name in _SUBJAXPR_PARAMS:
+        if name in eqn.params:
+            yield name, close(eqn.params[name])
+    for i, b in enumerate(eqn.params.get("branches", ())):
+        yield f"branch{i}", close(b)
+
+
+@dataclass(frozen=True)
+class EqnSite:
+    """One equation plus where it sits in the nested-program tree.
+
+    ``path`` is the chain of enclosing call primitives, e.g.
+    ``("pjit", "shard_map", "scan")`` — enough for a finding to say *the
+    div lives inside the scan body of the shard_map program*. ``frames``
+    is the same chain with the objects themselves — ``(owning jaxpr,
+    call eqn)`` outermost-first — so a dataflow pass can hop a value
+    across a sub-jaxpr boundary back into the caller."""
+    eqn: Eqn
+    jaxpr: object                 # the (sub-)jaxpr that owns the eqn
+    path: Tuple[str, ...]
+    frames: Tuple[Tuple[object, Eqn], ...] = ()
+
+    @property
+    def primitive(self) -> str:
+        return self.eqn.primitive.name
+
+    def describe(self) -> str:
+        loc = "/".join(self.path) or "<top>"
+        outs = ", ".join(str(v.aval) for v in self.eqn.outvars[:2])
+        return f"{self.primitive} -> {outs} @ {loc}"
+
+
+def iter_eqns(jaxpr, path: Tuple[str, ...] = (),
+              frames: Tuple = ()) -> Iterator[EqnSite]:
+    """Depth-first walk over every eqn of ``jaxpr`` and all sub-jaxprs."""
+    jaxpr = close(jaxpr)
+    for eqn in jaxpr.eqns:
+        yield EqnSite(eqn, jaxpr, path, frames)
+        for slot, sub in sub_jaxprs(eqn):
+            yield from iter_eqns(sub, path + (eqn.primitive.name,),
+                                 frames + ((jaxpr, eqn),))
+
+
+def producers(jaxpr) -> Dict[object, Eqn]:
+    """``var -> eqn`` def map for ONE (sub-)jaxpr's body (not recursive —
+    a sub-jaxpr's invars are opaque boundary values by design: a pass that
+    cares must reason per jaxpr, which keeps guard-tracing local and
+    sound)."""
+    jaxpr = close(jaxpr)
+    out: Dict[object, Eqn] = {}
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            out[v] = eqn
+    return out
+
+
+# call-like primitives whose sub-jaxpr outvars correspond 1:1 to the
+# eqn's outvars (and invars positionally to the sub-jaxpr's invars)
+CALL_PRIMITIVES = frozenset({
+    "pjit", "closed_call", "core_call", "xla_call", "remat", "remat2",
+    "checkpoint", "custom_jvp_call", "custom_vjp_call",
+    "custom_jvp_call_jaxpr", "custom_vjp_call_jaxpr", "shard_map",
+})
+
+
+def callee_results(eqn: Eqn, v) -> List[Tuple[object, object]]:
+    """For ``v`` an outvar of a call-like/branching eqn, the sub-jaxpr
+    value(s) it is bound to, as ``(sub_jaxpr, sub_outvar)`` pairs — one per
+    branch for ``cond``, one for plain calls, empty if unmapped."""
+    try:
+        idx = list(eqn.outvars).index(v)
+    except ValueError:
+        return []
+    p = eqn.primitive.name
+    if p in CALL_PRIMITIVES:
+        for _, sub in sub_jaxprs(eqn):
+            if idx < len(sub.outvars):
+                return [(sub, sub.outvars[idx])]
+        return []
+    if p == "cond":
+        out = []
+        for _, sub in sub_jaxprs(eqn):
+            if idx < len(sub.outvars):
+                out.append((sub, sub.outvars[idx]))
+        return out
+    return []
+
+
+def caller_operand(sub_jaxpr, v, call_eqn: Eqn):
+    """For ``v`` an invar of ``sub_jaxpr`` called by ``call_eqn``, the
+    caller-side operand it is bound to — or None where the correspondence
+    is not a sound value identity (a ``scan`` carry changes per iteration;
+    ``while`` loop state likewise)."""
+    sub_jaxpr = close(sub_jaxpr)
+    try:
+        idx = list(sub_jaxpr.invars).index(v)
+    except ValueError:
+        return None
+    p = call_eqn.primitive.name
+    if p in CALL_PRIMITIVES:
+        if idx < len(call_eqn.invars):
+            return call_eqn.invars[idx]
+        return None
+    if p == "cond":                      # invars = [pred, *operands]
+        if idx + 1 < len(call_eqn.invars):
+            return call_eqn.invars[idx + 1]
+        return None
+    if p == "scan":
+        num_consts = call_eqn.params.get("num_consts", 0)
+        num_carry = call_eqn.params.get("num_carry", 0)
+        if idx < num_consts:             # consts: loop-invariant, sound
+            return call_eqn.invars[idx]
+        if idx < num_consts + num_carry:
+            return None                  # carry: changes per iteration
+        # xs element: the outer stacked xs (guard properties that survive
+        # slicing — positivity, guarded-ness — carry over)
+        if idx < len(call_eqn.invars):
+            return call_eqn.invars[idx]
+        return None
+    return None
+
+
+def is_literal(v) -> bool:
+    return isinstance(v, jax.core.Literal)
+
+
+def literal_value(v) -> Optional[float]:
+    """The scalar value of a literal var, else None."""
+    if not is_literal(v):
+        return None
+    try:
+        import numpy as np
+        val = np.asarray(v.val)
+        if val.size == 1:
+            return float(val.reshape(()))
+    except (TypeError, ValueError):
+        return None
+    return None
+
+
+def float_avals(eqn: Eqn) -> List:
+    """The floating-point output avals of an eqn (empty for int/bool ops)."""
+    import numpy as np
+    out = []
+    for v in eqn.outvars:
+        aval = getattr(v, "aval", None)
+        dt = getattr(aval, "dtype", None)
+        if dt is not None and np.issubdtype(dt, np.floating):
+            out.append(aval)
+    return out

@@ -1,0 +1,149 @@
+"""The lint CLI: every audit over every real round program.
+
+    PYTHONPATH=src python -m repro.analysis.lint --backend all
+    PYTHONPATH=src python -m repro.analysis.lint --backend engine \\
+        --comm-impl fused --static-only
+    PYTHONPATH=src python -m repro.analysis.lint --bless
+
+Three layers, strict to slow:
+
+1. **static passes** (seconds) — host-transfer, precision, mask-safety,
+   collective-audit over the traced programs of the selected backends,
+   plus the FLOP meter's unknown-primitive report (an op the roofline has
+   never classified is charged 0 silently — surfacing the union here is
+   what keeps the meter honest as kernels evolve);
+2. **budget audit** — re-measures host syncs + uplink bytes from real
+   seeded federations (``repro.analysis.budgets``) and diffs against the
+   pinned ``budgets.json`` manifest;
+3. **recompile audit** — warms each backend's jit caches with a real
+   federation, then asserts an identically-seeded re-run compiles
+   nothing.
+
+Exit 0 only when every layer is clean. ``--bless`` re-measures and
+rewrites the manifest (commit the diff with the change that moved it).
+"""
+from __future__ import annotations
+
+import argparse
+from collections import Counter
+from typing import Dict, List, Sequence, Tuple
+
+from repro.analysis import budgets as budgets_mod
+from repro.analysis.framework import Finding, run_passes
+from repro.analysis.passes import default_passes
+from repro.analysis.programs import BACKENDS, COMM_IMPLS, round_programs
+
+
+def _targets(backend: str, comm_impl: str
+             ) -> List[Tuple[str, str]]:
+    bs = BACKENDS if backend == "all" else (backend,)
+    cis = COMM_IMPLS if comm_impl == "all" else (comm_impl,)
+    return [(b, ci) for b in bs for ci in cis]
+
+
+def lint_static(targets: Sequence[Tuple[str, str]], *, bits: int = 4
+                ) -> Tuple[List[Finding], Dict[str, int]]:
+    """Static passes + the unknown-primitive union over the real
+    programs of every (backend, comm_impl) target."""
+    from repro.roofline.jaxpr_flops import jaxpr_flops_detailed
+    seen: Dict[str, object] = {}
+    for b, ci in targets:
+        for p in round_programs(b, ci, bits=bits):
+            seen.setdefault(p.name, p)
+    programs = list(seen.values())
+    findings = run_passes(default_passes(), programs)
+    unknown: Counter = Counter()
+    for p in programs:
+        _, unk = jaxpr_flops_detailed(p.jaxpr.jaxpr)
+        unknown.update(unk)
+    for prim, count in sorted(unknown.items()):
+        findings.append(Finding(
+            "flop-meter", "<all programs>",
+            f"primitive {prim!r} ({count} occurrence(s)) is unclassified "
+            "in roofline/jaxpr_flops.py — charged 0 FLOPs; add it to "
+            "_ELEMENTWISE/_REDUCE/_FREE or give it a cost model"))
+    return findings, dict(unknown)
+
+
+def lint_budgets(targets: Sequence[Tuple[str, str]]
+                 ) -> Tuple[List[Finding], Dict]:
+    backends = sorted({b for b, _ in targets})
+    comm_impls = sorted({ci for _, ci in targets})
+    measured = budgets_mod.measure_all(tuple(backends), tuple(comm_impls))
+    pinned = budgets_mod.load_budgets()
+    return budgets_mod.compare(measured, pinned), measured
+
+
+def lint_recompiles(targets: Sequence[Tuple[str, str]]
+                    ) -> List[Finding]:
+    from repro.analysis.recompile import audit_federation
+    findings: List[Finding] = []
+    for b, ci in targets:
+        f, _ = audit_federation(b, ci)
+        findings.extend(f)
+    return findings
+
+
+def run_lint(backend: str = "all", comm_impl: str = "all", *,
+             static_only: bool = False, bits: int = 4
+             ) -> Tuple[List[Finding], Dict]:
+    """All layers over the selected targets; returns (findings, report)."""
+    targets = _targets(backend, comm_impl)
+    findings, unknown = lint_static(targets, bits=bits)
+    report: Dict = {"targets": targets, "unknown_primitives": unknown}
+    if not static_only:
+        budget_findings, measured = lint_budgets(targets)
+        findings.extend(budget_findings)
+        report["budgets"] = measured
+        findings.extend(lint_recompiles(targets))
+    report["findings"] = len(findings)
+    return findings, report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.analysis.lint",
+        description="static + dynamic audits over the real round programs")
+    ap.add_argument("--backend", default="all",
+                    choices=("all",) + BACKENDS)
+    ap.add_argument("--comm-impl", default="all",
+                    choices=("all",) + COMM_IMPLS)
+    ap.add_argument("--static-only", action="store_true",
+                    help="skip the budget + recompile audits (no "
+                         "federations are run; seconds instead of minutes)")
+    ap.add_argument("--bits", type=int, default=4)
+    ap.add_argument("--bless", action="store_true",
+                    help="re-measure and rewrite budgets.json, then exit")
+    args = ap.parse_args(argv)
+
+    if args.bless:
+        budgets = budgets_mod.bless()
+        print(f"blessed {budgets_mod.BUDGET_PATH}")
+        for b, impls in sorted(budgets.items()):
+            if b == "config":
+                continue
+            for ci, m in sorted(impls.items()):
+                print(f"  {b:8s} {ci:10s} host_syncs={m['host_syncs']:4d} "
+                      f"bytes_moved={m['bytes_moved']}")
+        return 0
+
+    findings, report = run_lint(args.backend, args.comm_impl,
+                                static_only=args.static_only,
+                                bits=args.bits)
+    n_programs = len({p for p in report.get('targets', ())})
+    errors = [f for f in findings if f.severity == "error"]
+    warnings = [f for f in findings if f.severity != "error"]
+    for f in findings:
+        print(f"{f.severity.upper()}: {f}")
+    scope = (f"{len(report['targets'])} (backend, comm_impl) target(s)"
+             if n_programs else "no targets")
+    if not findings:
+        print(f"lint clean: {scope}, 0 findings")
+    else:
+        print(f"lint: {len(errors)} error(s), {len(warnings)} warning(s) "
+              f"over {scope}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,18 @@
+"""The static pass inventory.
+
+``default_passes()`` is the set the CLI and the lint test tier run; each
+pass is independently importable for targeted self-tests (the lint tier
+injects one violation class per pass and asserts the finding fires).
+"""
+from repro.analysis.passes.collectives import CollectiveAuditPass
+from repro.analysis.passes.host_transfer import HostTransferPass
+from repro.analysis.passes.mask_safety import MaskSafetyPass
+from repro.analysis.passes.precision import PrecisionPass
+
+__all__ = ["CollectiveAuditPass", "HostTransferPass", "MaskSafetyPass",
+           "PrecisionPass", "default_passes"]
+
+
+def default_passes():
+    return [HostTransferPass(), PrecisionPass(), MaskSafetyPass(),
+            CollectiveAuditPass()]

@@ -1,0 +1,132 @@
+"""Collective audit: what actually crosses shards, vs what should.
+
+The sharded backend's §4.10 contract (see ``core/sharded.py``): only
+[leaf]-shaped float32 partial sums cross shards — never the ``[rows, ...]``
+stacked population. This pass enumerates every collective eqn
+(``psum``/``all_gather``/...) inside the ``shard_map`` round programs,
+sums the tensor payload bytes per device, and checks them against two
+bounds derived from the same program:
+
+- **partial bound** — Σ over the shard-local stacked invars of one row's
+  bytes (``itemsize × prod(shape[1:])``): the exact payload of a correct
+  Eq. 21 contraction. Tensor psum bytes above this means per-row data is
+  crossing shards (the K× blowup the fused program exists to avoid).
+- **raw ceiling** — ``rows × partial`` — the uncompressed
+  ``quantized_uplink_roofline``/``raw_bytes`` ceiling, cross-checked
+  against the roofline module itself when the program's ``meta`` carries
+  a template (mesh-wide moved bytes must stay under it).
+
+Scalar collectives (the ``wsum`` guard psum) ride free under a small
+allowance. A collective-role program with NO collective eqn is also a
+finding: an aggregate that never reduces across the mesh is aggregating
+nothing.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.analysis.framework import (COLLECTIVE, AnalysisPass, Finding,
+                                      ProgramSpec)
+from repro.analysis.ir import close, iter_eqns, sub_jaxprs
+
+COLLECTIVE_PRIMITIVES = frozenset({
+    "psum", "psum2", "pmax", "pmin", "all_gather", "all_to_all",
+    "reduce_scatter", "ppermute", "pbroadcast",
+})
+# scalar control traffic per program: the wsum guard psum plus one
+# zero-offset term per leaf (the fused body's Σ wn·z scalars) — 512B
+# covers a ~100-leaf encoder; anything past that is a real smell
+_SCALAR_ALLOWANCE = 512
+
+
+def _aval_bytes(v) -> int:
+    aval = getattr(v, "aval", None)
+    if aval is None or not hasattr(aval, "shape"):
+        return 0
+    return int(np.prod(aval.shape, dtype=np.int64)) * np.dtype(
+        aval.dtype).itemsize
+
+
+def _shard_map_invars(jaxpr):
+    """The invars of the (first) shard_map sub-jaxpr — the shard-local
+    view of the round inputs."""
+    for site in iter_eqns(jaxpr):
+        if site.primitive == "shard_map":
+            for _, sub in sub_jaxprs(site.eqn):
+                return list(close(sub).invars)
+    return None
+
+
+class CollectiveAuditPass(AnalysisPass):
+    name = "collective-audit"
+    roles = (COLLECTIVE,)
+
+    def run(self, prog: ProgramSpec) -> List[Finding]:
+        findings = []
+        tensor_bytes = 0
+        scalar_bytes = 0
+        n_collectives = 0
+        for site in iter_eqns(prog.jaxpr):
+            if site.primitive not in COLLECTIVE_PRIMITIVES:
+                continue
+            n_collectives += 1
+            for v in site.eqn.invars:
+                b = _aval_bytes(v)
+                size = int(np.prod(getattr(v.aval, "shape", ()),
+                                   dtype=np.int64))
+                if size <= 1:
+                    scalar_bytes += b
+                else:
+                    tensor_bytes += b
+        if n_collectives == 0:
+            findings.append(Finding(
+                self.name, prog.name,
+                "collective-role program contains no collective eqn — it "
+                "never reduces across the mesh"))
+            return findings
+        if scalar_bytes > _SCALAR_ALLOWANCE:
+            findings.append(Finding(
+                self.name, prog.name,
+                f"scalar collective traffic {scalar_bytes}B exceeds the "
+                f"{_SCALAR_ALLOWANCE}B control allowance", severity="warning"))
+
+        invars = _shard_map_invars(prog.jaxpr)
+        if invars is None:
+            return findings
+        partial = 0
+        rows = 1
+        for v in invars:
+            aval = getattr(v, "aval", None)
+            if aval is None or len(getattr(aval, "shape", ())) < 2:
+                continue
+            partial += int(np.prod(aval.shape[1:], dtype=np.int64)) * \
+                np.dtype(aval.dtype).itemsize
+            rows = max(rows, int(aval.shape[0]))
+        if partial and tensor_bytes > partial:
+            findings.append(Finding(
+                self.name, prog.name,
+                f"tensor psum payload {tensor_bytes}B exceeds the "
+                f"[leaf]-shaped partial bound {partial}B — per-row data "
+                "is crossing shards (only partial sums may; see "
+                "core/sharded.py §Aggregation)"))
+        raw_ceiling = rows * partial * max(1, prog.mesh_devices)
+        mesh_moved = tensor_bytes * max(1, prog.mesh_devices)
+        if partial and mesh_moved > raw_ceiling:
+            findings.append(Finding(
+                self.name, prog.name,
+                f"mesh-wide collective bytes {mesh_moved}B exceed the "
+                f"uncompressed roofline ceiling {raw_ceiling}B"))
+        bits = int(prog.meta.get("bits", 32))
+        if prog.meta.get("template") is not None and bits < 32:
+            from repro.roofline.federated import quantized_uplink_roofline
+            rl = quantized_uplink_roofline(
+                prog.meta["template"], k=rows, bits=bits)
+            if mesh_moved > rl["raw_bytes"] * max(1, prog.mesh_devices):
+                findings.append(Finding(
+                    self.name, prog.name,
+                    f"collective bytes {mesh_moved}B exceed "
+                    f"roofline raw_bytes "
+                    f"{rl['raw_bytes'] * max(1, prog.mesh_devices)}B"))
+        return findings

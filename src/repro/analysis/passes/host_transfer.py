@@ -1,0 +1,61 @@
+"""Host-transfer detector.
+
+A round program is the unit the backends dispatch asynchronously; a
+callback primitive inside one stalls the device every round, invisibly —
+exactly the class of regression PR 7's hot-path work removed. This pass
+fails any round program that traces a host callback (``pure_callback``,
+``io_callback``, ``debug_callback``) or a host-pinning transfer
+(``infeed``/``outfeed``, or a ``device_put`` onto a host memory space).
+
+The *budgeted* host syncs — the per-round ``hostsync.fetch`` points every
+backend legitimately pays (losses, selection outputs) — are a dynamic
+property and are audited against ``analysis/budgets.json`` instead; this
+pass guarantees the traced programs themselves stay callback-free.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.framework import AnalysisPass, Finding, ProgramSpec
+from repro.analysis.ir import iter_eqns
+
+# host-callback primitives across jax versions
+CALLBACK_PRIMITIVES = frozenset({
+    "pure_callback", "io_callback", "debug_callback", "callback",
+    "host_callback_call", "outside_call",
+})
+# device<->host pinning / streaming
+HOST_PIN_PRIMITIVES = frozenset({"infeed", "outfeed"})
+
+
+def _device_put_targets_host(eqn) -> bool:
+    # device_put params carry TransferToMemoryKind / sharding objects whose
+    # repr names the memory space; "host" only appears for host targets
+    devices = eqn.params.get("devices", ())
+    return any("host" in repr(d).lower() for d in devices)
+
+
+class HostTransferPass(AnalysisPass):
+    name = "host-transfer"
+    roles = None                     # every round program must be clean
+
+    def run(self, prog: ProgramSpec) -> List[Finding]:
+        findings = []
+        for site in iter_eqns(prog.jaxpr):
+            p = site.primitive
+            if p in CALLBACK_PRIMITIVES:
+                findings.append(Finding(
+                    self.name, prog.name,
+                    f"host callback in round program: {site.describe()} — "
+                    "callbacks stall the dispatch stream every round; move "
+                    "the host work to a budgeted hostsync.fetch point"))
+            elif p in HOST_PIN_PRIMITIVES:
+                findings.append(Finding(
+                    self.name, prog.name,
+                    f"host streaming op in round program: {site.describe()}"))
+            elif p == "device_put" and _device_put_targets_host(site.eqn):
+                findings.append(Finding(
+                    self.name, prog.name,
+                    "device_put onto a host memory space inside a round "
+                    f"program: {site.describe()}"))
+        return findings

@@ -1,0 +1,144 @@
+"""Mask-safety: every float division must have a provably-guarded divisor.
+
+The codebase's masking discipline makes zero-denominators *routine*, not
+exceptional: an all-padding batch has ``Σw == 0``, an absent modality has
+``span == 0``, a constant row quantizes with ``hi - lo == 0``. The code
+guards each with one of three idioms —
+
+- ``jnp.maximum(x, eps)``      (quantizer scale, psum weight norm),
+- ``jnp.maximum(Σw, 1.0)``     (masked CE means),
+- ``jnp.where(ok, span, 1.0)`` (rownorm; lowers to ``select_n``) —
+
+and this pass proves, per ``div``/``rsqrt`` eqn, that the divisor's
+producer chain ends in such a guard (or a nonzero literal, or an
+intrinsically-positive op like ``exp``). The tracer is interprocedural in
+the ways the real programs need and no more: it follows a value INTO a
+``pjit``/``cond``/``custom_vjp`` producer (to the sub-jaxpr eqn that
+computed it) and OUT across a sub-jaxpr boundary to the caller's operand
+(``ir.caller_operand`` — sound for call operands, loop consts, and scanned
+xs; a scan *carry* is a different value each iteration, so the hop refuses
+it and the div is flagged unless guarded locally). Anything unproven is a
+finding — sound by default.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Set, Tuple
+
+import numpy as np
+
+from repro.analysis.framework import AnalysisPass, Finding, ProgramSpec
+from repro.analysis.ir import (callee_results, caller_operand, close,
+                               is_literal, iter_eqns, literal_value,
+                               producers)
+
+# ops that carry their (first) operand's safety level unchanged
+_PASS_THROUGH = frozenset({
+    "broadcast_in_dim", "reshape", "transpose", "squeeze", "expand_dims",
+    "slice", "dynamic_slice", "copy", "rev", "reduce_precision",
+    "convert_element_type", "stop_gradient", "pbroadcast", "sqrt",
+    "integer_pow",
+})
+# ops whose output is strictly positive regardless of input
+_ALWAYS_POSITIVE = frozenset({"exp", "logistic"})
+
+# the safety lattice: what the tracer can prove about a value
+_UNKNOWN, _NONZERO, _POSITIVE = 0, 1, 2
+# call-like producers the tracer steps into
+_ENTERABLE = frozenset({
+    "pjit", "closed_call", "remat", "remat2", "checkpoint", "cond",
+    "custom_jvp_call", "custom_vjp_call", "custom_jvp_call_jaxpr",
+    "custom_vjp_call_jaxpr",
+})
+
+
+class MaskSafetyPass(AnalysisPass):
+    name = "mask-safety"
+    roles = None
+
+    def run(self, prog: ProgramSpec) -> List[Finding]:
+        findings = []
+        self._prods: Dict[int, Dict] = {}
+        for site in iter_eqns(prog.jaxpr):
+            if site.primitive not in ("div", "rsqrt"):
+                continue
+            den = (site.eqn.invars[1] if site.primitive == "div"
+                   else site.eqn.invars[0])
+            dt = getattr(getattr(den, "aval", None), "dtype", None)
+            if dt is None or not np.issubdtype(dt, np.floating):
+                continue                      # integer index math
+            if not self._guarded(den, site.jaxpr, site.frames, set()):
+                findings.append(Finding(
+                    self.name, prog.name,
+                    f"unguarded {site.primitive} divisor: "
+                    f"{site.describe()} — masked data makes zero "
+                    "denominators routine; guard with max(x, eps) / "
+                    "max(Σw, 1) / where(ok, x, 1)"))
+        return findings
+
+    def _producers(self, jaxpr) -> Dict:
+        key = id(jaxpr)
+        if key not in self._prods:
+            self._prods[key] = producers(jaxpr)
+        return self._prods[key]
+
+    def _guarded(self, v, jaxpr, frames: Tuple, seen: Set) -> bool:
+        return self._level(v, jaxpr, frames, seen) >= _NONZERO
+
+    def _level(self, v, jaxpr, frames: Tuple, seen: Set) -> int:
+        """What the producer chain proves about ``v`` (a value in
+        ``jaxpr`` with enclosing call ``frames``): strictly positive,
+        nonzero, or nothing. The distinction matters for the aggregate
+        rules — a product of nonzeros is nonzero, but a SUM is only safe
+        when every term is strictly positive (``Σ exp(x)`` in the softmax
+        VJP; two nonzeros can cancel)."""
+        val = literal_value(v)
+        if val is not None and val != 0:
+            return _POSITIVE if val > 0 else _NONZERO
+        if is_literal(v):
+            return _UNKNOWN                   # zero/array literal
+        key = (id(v), id(jaxpr))
+        if key in seen:
+            return _UNKNOWN                   # cycle
+        seen = seen | {key}
+        eqn = self._producers(jaxpr).get(v)
+        if eqn is None:
+            # boundary value: hop out to the caller's operand
+            if not frames:
+                return _UNKNOWN               # program input: opaque
+            outer_jaxpr, call_eqn = frames[-1]
+            outer_v = caller_operand(jaxpr, v, call_eqn)
+            if outer_v is None:
+                return _UNKNOWN               # scan carry / unmapped
+            return self._level(outer_v, outer_jaxpr, frames[:-1], seen)
+        p = eqn.primitive.name
+        sub = lambda u: self._level(u, jaxpr, frames, seen)  # noqa: E731
+        if p == "max":
+            # max(x, c>0) >= c: positive if ANY operand is positive
+            if any(sub(u) == _POSITIVE for u in eqn.invars):
+                return _POSITIVE
+            return _UNKNOWN
+        if p == "select_n":
+            # the where(ok, x, fallback) idiom IS the guard: the branch
+            # replacing the unsafe case is what makes the div total
+            return _NONZERO
+        if p in _ALWAYS_POSITIVE:
+            return _POSITIVE
+        if p == "abs":
+            return _POSITIVE if sub(eqn.invars[0]) else _UNKNOWN
+        if p in _PASS_THROUGH:
+            return sub(eqn.invars[0])
+        if p == "mul":
+            return min(sub(u) for u in eqn.invars)
+        if p in ("add", "reduce_sum"):
+            # sums are safe only from strictly positive terms
+            levels = [sub(u) for u in eqn.invars]
+            return _POSITIVE if min(levels) == _POSITIVE else _UNKNOWN
+        if p in _ENTERABLE:
+            results = callee_results(eqn, v)
+            if not results:
+                return _UNKNOWN
+            return min(
+                self._level(sub_v, close(sj), frames + ((jaxpr, eqn),),
+                            seen)
+                for sj, sub_v in results)
+        return _UNKNOWN

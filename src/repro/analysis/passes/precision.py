@@ -1,0 +1,88 @@
+"""Precision lint: the f64 decision wall and the f32 aggregation domain.
+
+PR 4's lesson, made permanent: the Eq. 13–19 selection math is compiled in
+float64 at ``xla_backend_optimization_level=0`` because a single-ulp FMA
+difference flips a priority ranking. A ``decision`` program therefore may
+not contain ANY narrower float value — not an f32 intermediate, not a
+silent ``convert_element_type`` downcast, not a weak-typed Python-scalar
+promotion that sneaks a value through f32.
+
+The aggregation/training programs are the opposite wall: an f32 domain.
+An f64 value appearing there means x64 leaked out of the decision scope —
+doubling uplink bytes and halving throughput silently — so the same pass
+flags f64 avals and float→float downcasts (a downcast implies the wide
+value existed) outside decision programs.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.analysis.framework import (DECISION, AnalysisPass, Finding,
+                                      ProgramSpec)
+from repro.analysis.ir import iter_eqns
+
+
+def _float_width(dt) -> int:
+    return np.dtype(dt).itemsize if np.issubdtype(dt, np.floating) else 0
+
+
+class PrecisionPass(AnalysisPass):
+    name = "precision"
+    roles = None
+
+    def run(self, prog: ProgramSpec) -> List[Finding]:
+        return (self._check_decision(prog) if prog.role == DECISION
+                else self._check_f32_domain(prog))
+
+    def _check_decision(self, prog: ProgramSpec) -> List[Finding]:
+        findings = []
+        for site in iter_eqns(prog.jaxpr):
+            for v in site.eqn.outvars:
+                dt = getattr(getattr(v, "aval", None), "dtype", None)
+                if dt is None:
+                    continue
+                w = _float_width(dt)
+                if 0 < w < 8:
+                    findings.append(Finding(
+                        self.name, prog.name,
+                        f"decision-path value is {np.dtype(dt).name}, "
+                        f"not float64: {site.describe()} — Eq. 13–19 "
+                        "rankings are ulp-sensitive; keep the whole "
+                        "program under enable_x64"))
+            if site.primitive == "convert_element_type":
+                src = site.eqn.invars[0].aval.dtype
+                dst = site.eqn.params.get("new_dtype", src)
+                if _float_width(src) > _float_width(dst) > 0:
+                    findings.append(Finding(
+                        self.name, prog.name,
+                        "silent float downcast "
+                        f"{np.dtype(src).name}->{np.dtype(dst).name} in a "
+                        f"decision program: {site.describe()}"))
+        return findings
+
+    def _check_f32_domain(self, prog: ProgramSpec) -> List[Finding]:
+        findings = []
+        for site in iter_eqns(prog.jaxpr):
+            for v in site.eqn.outvars:
+                aval = getattr(v, "aval", None)
+                dt = getattr(aval, "dtype", None)
+                if dt is not None and _float_width(dt) > 4:
+                    findings.append(Finding(
+                        self.name, prog.name,
+                        f"float64 leaked into an f32-domain program: "
+                        f"{site.describe()} — x64 must stay inside the "
+                        "decision scope"))
+            if site.primitive == "convert_element_type":
+                src = site.eqn.invars[0].aval.dtype
+                dst = site.eqn.params.get("new_dtype", src)
+                if _float_width(src) > _float_width(dst) > 0:
+                    sev = "error" if _float_width(src) > 4 else "warning"
+                    findings.append(Finding(
+                        self.name, prog.name,
+                        "silent float downcast "
+                        f"{np.dtype(src).name}->{np.dtype(dst).name}: "
+                        f"{site.describe()} — the wide value should never "
+                        "have existed here", severity=sev))
+        return findings

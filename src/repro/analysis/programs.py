@@ -1,0 +1,268 @@
+"""Trace the REAL round programs every backend dispatches.
+
+Nothing here invents a model: each :class:`ProgramSpec` comes from
+``jax.make_jaxpr`` over the *same function object* ``run_federation``
+executes — ``masked_batched_epoch``, ``quantize_pack_population``,
+``aggregate_quantized``, the selection engine's ``_modality_program`` /
+``_client_program`` (traced in f64 under ``enable_x64``, exactly as their
+AOT compile cache traces them), and the sharded backend's
+``jit(shard_map(...))`` programs via
+``repro.roofline.federated.sharded_round_programs``. Tracing only — no
+compilation, no execution, no devices touched beyond the 1-D mesh object
+the sharded programs close over.
+
+Shapes are a small representative round (LSTM shape family, K=8 uploads,
+4-bit uplink by default): every lint invariant — callbacks, dtype flow,
+guard idioms, collective payloads — is shape-generic, so a violation at
+K=8 is the violation at K=10⁶.
+
+Backends map to program sets as the backends map to code:
+
+- ``batched`` / ``engine`` share the training + uplink program objects
+  (they differ in where the population *lives*, not what compiles);
+- ``async`` flushes through the very same ``aggregate_uploads`` programs
+  (staleness discounts enter as weights, not new programs);
+- ``sharded`` swaps in the ``shard_map`` epoch/psum programs and the
+  shard-mapped modality ranker.
+
+The f64 decision programs are shared by all of them and appear once per
+backend under the backend's name so ``--backend engine`` audits the full
+set that backend runs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from repro.analysis.framework import (AGGREGATION, COLLECTIVE, DECISION,
+                                      TRAINING, ProgramSpec)
+
+BACKENDS = ("batched", "engine", "async", "sharded")
+COMM_IMPLS = ("fused", "reference")
+
+# representative round shapes (lint invariants are shape-generic)
+_K = 8            # upload population rows
+_G = 4            # training-bucket rows
+_S, _B = 2, 8     # padded schedule [S, B]
+_FEAT = (6, 5)    # LSTM family: [T, F]
+_CLASSES = 3
+_M = 2            # modalities
+
+
+def _encoder_template():
+    from repro.core.encoders import init_encoder
+    return jax.eval_shape(
+        lambda: init_encoder(jax.random.PRNGKey(0), _FEAT, _CLASSES))
+
+
+def _fusion_template():
+    from repro.core.fusion import init_fusion
+    return jax.eval_shape(
+        lambda: init_fusion(jax.random.PRNGKey(0), _M, _CLASSES))
+
+
+def _stack(template, k: int):
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((k,) + tuple(l.shape), l.dtype),
+        template)
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _trace(fn, *args, x64: bool = False, **kwargs):
+    if x64:
+        with enable_x64():
+            return jax.make_jaxpr(fn)(*args, **kwargs)
+    return jax.make_jaxpr(fn)(*args, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# shared program groups
+# ---------------------------------------------------------------------------
+
+def _training_programs(backend: str) -> List[ProgramSpec]:
+    from repro.core.batched import (_batched_fusion_eval, _batched_predict,
+                                    masked_batched_epoch,
+                                    masked_fusion_epoch)
+    enc = _stack(_encoder_template(), _G)
+    fus = _stack(_fusion_template(), _G)
+    xs = _f32(_G, _S, _B, *_FEAT)
+    ys = _i32(_G, _S, _B)
+    ws = _f32(_G, _S, _B)
+    preds = _f32(_G, _S, _B, _M, _CLASSES)
+    pmask = _f32(_G, _M)
+    epreds = _f32(_G, _B, _M, _CLASSES)
+    ey = _i32(_G, _B)
+    ew = _f32(_G, _B)
+    return [
+        ProgramSpec(f"{backend}/epoch_encoder", backend, "n/a", TRAINING,
+                    _trace(lambda p, x, y, w: masked_batched_epoch(
+                        p, x, y, w, 0.1), enc, xs, ys, ws)),
+        ProgramSpec(f"{backend}/epoch_fusion", backend, "n/a", TRAINING,
+                    _trace(lambda p, pr, mk, y, w: masked_fusion_epoch(
+                        p, pr, mk, y, w, 0.1), fus, preds, pmask, ys, ws)),
+        ProgramSpec(f"{backend}/predict", backend, "n/a", TRAINING,
+                    _trace(_batched_predict, enc, _f32(_G, _B, *_FEAT))),
+        ProgramSpec(f"{backend}/fusion_eval", backend, "n/a", TRAINING,
+                    _trace(_batched_fusion_eval, fus, epreds, pmask, ey,
+                           ew)),
+    ]
+
+
+def _uplink_programs(backend: str, comm_impl: str,
+                     bits: int) -> List[ProgramSpec]:
+    from repro.core.aggregation import aggregate_quantized, aggregate_stacked
+    from repro.core.quantize import (quantize_population,
+                                     quantize_population_with_error_feedback)
+    from repro.kernels.comm import (quantize_pack_population,
+                                    quantize_pack_population_ef,
+                                    reduce_packed_population)
+    stacked = _stack(_encoder_template(), _K)
+    res = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32), stacked)
+    w = _f32(_K)
+    out = [ProgramSpec(f"{backend}/aggregate_full", backend, comm_impl,
+                       AGGREGATION, _trace(aggregate_stacked, stacked, w))]
+    if comm_impl == "fused":
+        up = _trace(lambda s: quantize_pack_population(s, bits=bits),
+                    stacked)
+        payload = jax.eval_shape(
+            lambda s: quantize_pack_population(s, bits=bits), stacked)
+        shapes = tuple(tuple(l.shape[1:])
+                       for l in jax.tree_util.tree_leaves(stacked))
+        down = _trace(
+            lambda p, sc, z, ww: reduce_packed_population(
+                p, sc, z, ww, bits=bits, shapes=shapes), *payload, w)
+        ef = _trace(
+            lambda s, r: quantize_pack_population_ef(s, r, bits=bits),
+            stacked, res)
+    else:
+        up = _trace(lambda s: quantize_population(s, bits=bits), stacked)
+        payload = jax.eval_shape(
+            lambda s: quantize_population(s, bits=bits), stacked)
+        down = _trace(aggregate_quantized, *payload, w)
+        ef = _trace(
+            lambda s, r: quantize_population_with_error_feedback(
+                s, r, bits=bits), stacked, res)
+    out += [
+        ProgramSpec(f"{backend}/uplink_{comm_impl}/q{bits}", backend,
+                    comm_impl, AGGREGATION, up),
+        ProgramSpec(f"{backend}/downlink_{comm_impl}/q{bits}", backend,
+                    comm_impl, AGGREGATION, down),
+        ProgramSpec(f"{backend}/uplink_ef_{comm_impl}/q{bits}", backend,
+                    comm_impl, AGGREGATION, ef),
+    ]
+    return out
+
+
+def _decision_programs(backend: str) -> List[ProgramSpec]:
+    from repro.core.selection_engine import (_client_program,
+                                             _modality_program)
+    f64 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.float64)
+    km = f64((_K, _M))
+    b_km = jax.ShapeDtypeStruct((_K, _M), jnp.bool_)
+    i_km = jax.ShapeDtypeStruct((_K, _M), jnp.int64)
+    mod = functools.partial(_modality_program, gamma=1, alpha_s=1 / 3,
+                            alpha_c=1 / 3, alpha_r=1 / 3)
+    out = [ProgramSpec(f"{backend}/select_modalities", backend, "n/a",
+                       DECISION,
+                       _trace(mod, km, km, km, b_km, i_km, f64(()),
+                              x64=True))]
+    for crit in ("low_loss", "high_loss", "loss_recency"):
+        cli = functools.partial(_client_program, criterion=crit)
+        out.append(ProgramSpec(
+            f"{backend}/select_clients_{crit}", backend, "n/a", DECISION,
+            _trace(cli, km, b_km, f64((_K,)), f64(()), f64(()), x64=True)))
+    return out
+
+
+def _sharded_programs(comm_impl: str, bits: int) -> List[ProgramSpec]:
+    from repro.core.sharded import client_mesh
+    from repro.core.selection_engine import _modality_program
+    from repro.roofline.federated import sharded_round_programs
+    from jax.experimental.shard_map import shard_map
+    from repro.sharding.partition import client_spec
+    from jax.sharding import PartitionSpec as P
+    mesh = client_mesh(1)
+    progs = sharded_round_programs(
+        mesh, k=_K, steps=_S, batch=_B, feat=_FEAT,
+        template=_encoder_template(), lr=0.1, bits=bits)
+    name_of = {"epoch": ("epoch_encoder", TRAINING),
+               "aggregate_full": ("aggregate_full", COLLECTIVE),
+               ("aggregate_q_fused" if comm_impl == "fused" else
+                "aggregate_q_reference"):
+                   (f"aggregate_q_{comm_impl}/q{bits}", COLLECTIVE)}
+    out = []
+    for key, (suffix, role) in name_of.items():
+        program, args = progs[key]
+        out.append(ProgramSpec(
+            f"sharded/{suffix}", "sharded", comm_impl, role,
+            _trace(program, *args), mesh_devices=mesh.devices.size,
+            meta={"bits": bits if "q_" in key else 32,
+                  "template": _encoder_template()}))
+    # the shard-mapped Eqs. 12–16 ranker, traced exactly as
+    # _sharded_modality_program lowers it (f64, shard_map over the mesh)
+    fn = functools.partial(_modality_program, gamma=1, alpha_s=1 / 3,
+                           alpha_c=1 / 3, alpha_r=1 / 3)
+    spec = client_spec()
+    mapped = shard_map(fn, mesh=mesh,
+                       in_specs=(spec, spec, spec, spec, spec, P()),
+                       out_specs=(spec, spec, spec, spec))
+    f64 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.float64)
+    km = f64((_K, _M))
+    out.append(ProgramSpec(
+        "sharded/select_modalities", "sharded", comm_impl, DECISION,
+        _trace(mapped, km, km, km,
+               jax.ShapeDtypeStruct((_K, _M), jnp.bool_),
+               jax.ShapeDtypeStruct((_K, _M), jnp.int64), f64(()),
+               x64=True), mesh_devices=mesh.devices.size))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# public registry
+# ---------------------------------------------------------------------------
+
+def round_programs(backend: str, comm_impl: str = "fused", *,
+                   bits: int = 4) -> List[ProgramSpec]:
+    """Every program ``run_federation(backend=...)`` dispatches in a
+    quantized round at the given ``comm_impl``, as traced ProgramSpecs."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}: use {BACKENDS}")
+    if comm_impl not in COMM_IMPLS:
+        raise ValueError(f"unknown comm_impl {comm_impl!r}")
+    if backend == "sharded":
+        # training/uplink swap to shard_map forms; fusion stage + decision
+        # client ranking ride the engine programs
+        out = _sharded_programs(comm_impl, bits)
+        out += [p for p in _training_programs(backend)
+                if "epoch_encoder" not in p.name]
+        out += _decision_programs(backend)[1:]      # client ranking only
+        return out
+    return (_training_programs(backend)
+            + _uplink_programs(backend, comm_impl, bits)
+            + _decision_programs(backend))
+
+
+def all_round_programs(backends: Sequence[str] = BACKENDS,
+                       comm_impls: Sequence[str] = COMM_IMPLS, *,
+                       bits: int = 4) -> List[ProgramSpec]:
+    """The full program zoo, deduplicated by name (shared programs appear
+    once per backend, once per comm_impl only where the impl changes the
+    program)."""
+    seen: Dict[str, ProgramSpec] = {}
+    for b in backends:
+        for ci in comm_impls:
+            for p in round_programs(b, ci, bits=bits):
+                seen.setdefault(p.name, p)
+    return list(seen.values())

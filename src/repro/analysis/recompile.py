@@ -1,0 +1,127 @@
+"""Recompilation auditor: steady-state rounds must hit warm jit caches.
+
+The backends' whole performance story (PR 2's batched epochs, PR 6's
+sharded programs, PR 7's fused comm path) assumes each round program
+compiles ONCE and replays. A shape leak — a Python scalar promoted to a
+fresh constant, an upload population that misses the pow-2 pad, an lru
+cache keyed on an unhashed config — turns every round into an XLA compile,
+and nothing in the test suite notices: results stay correct, only 100×
+slower.
+
+:func:`track_compiles` observes the two signals jax exposes:
+
+- the ``/jax/core/compile/backend_compile_duration`` monitoring event,
+  fired once per backend compile (the ground-truth *count*);
+- ``jax_log_compiles`` log records on the pxla logger (the program
+  *names*, so a finding can say WHICH program recompiled).
+
+:func:`audit_federation` runs a real mini federation twice — a warmup run
+that populates every jit cache, then an identically-seeded steady run
+under the tracker. The steady run replays the exact shapes of the warmup
+run, so every compile it triggers is a per-round recompile by
+construction.
+"""
+from __future__ import annotations
+
+import contextlib
+import logging
+import re
+from dataclasses import dataclass, field
+from typing import Iterator, List, Tuple
+
+from repro.analysis.framework import Finding
+
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+_PXLA_LOGGER = "jax._src.interpreters.pxla"
+_NAME_RE = re.compile(r"Compiling ([\w\-<>.]+)")
+
+
+@dataclass
+class CompileReport:
+    """What compiled while a :func:`track_compiles` scope was active."""
+    count: int = 0
+    names: List[str] = field(default_factory=list)
+
+
+class _LogCapture(logging.Handler):
+    def __init__(self, report: CompileReport):
+        super().__init__(level=logging.DEBUG)
+        self.report = report
+
+    def emit(self, record):
+        m = _NAME_RE.search(record.getMessage())
+        if m:
+            self.report.names.append(m.group(1))
+
+
+@contextlib.contextmanager
+def track_compiles() -> Iterator[CompileReport]:
+    """Count (and name) every XLA backend compile inside the scope."""
+    import jax
+    from jax._src import monitoring
+    report = CompileReport()
+
+    def _on_event(event: str, duration: float, **kw) -> None:
+        if event == _COMPILE_EVENT:
+            report.count += 1
+
+    monitoring.register_event_duration_secs_listener(_on_event)
+    logger = logging.getLogger(_PXLA_LOGGER)
+    handler = _LogCapture(report)
+    logger.addHandler(handler)
+    prev_level, prev_prop = logger.level, logger.propagate
+    logger.setLevel(logging.DEBUG)
+    logger.propagate = False             # capture, don't spam the console
+    dispatch = logging.getLogger("jax._src.dispatch")
+    prev_dispatch = dispatch.level
+    dispatch.setLevel(logging.ERROR)     # log_compiles elevates it too
+    prev_log_compiles = jax.config.jax_log_compiles
+    jax.config.update("jax_log_compiles", True)
+    try:
+        yield report
+    finally:
+        jax.config.update("jax_log_compiles", prev_log_compiles)
+        logger.removeHandler(handler)
+        logger.setLevel(prev_level)
+        logger.propagate = prev_prop
+        dispatch.setLevel(prev_dispatch)
+        monitoring._unregister_event_duration_listener_by_callback(_on_event)
+
+
+def audit_rounds(round_fn, rounds: int, *, program: str,
+                 warmup: int = 1) -> Tuple[List[Finding], CompileReport]:
+    """Generic N-round audit: run ``round_fn(i)`` ``warmup`` times cold,
+    then ``rounds`` times under the tracker; any steady-state compile is a
+    finding."""
+    for i in range(warmup):
+        round_fn(i)
+    with track_compiles() as report:
+        for i in range(warmup, warmup + rounds):
+            round_fn(i)
+    findings = []
+    if report.count > 0:
+        names = ", ".join(sorted(set(report.names))[:6]) or "<unnamed>"
+        findings.append(Finding(
+            "recompile", program,
+            f"{report.count} XLA compile(s) during {rounds} post-warmup "
+            f"round(s) (programs: {names}) — steady-state rounds must "
+            "replay warm jit caches; look for shape leaks or unhashed "
+            "cache keys"))
+    return findings, report
+
+
+def audit_federation(backend: str, comm_impl: str, *, bits: int = 4,
+                     rounds: int = 3
+                     ) -> Tuple[List[Finding], CompileReport]:
+    """Warm a real mini federation, then assert an identically-seeded
+    re-run compiles nothing."""
+    from repro.analysis.budgets import federation_config, mini_federation
+
+    def one_run(_):
+        clients, spec = mini_federation()
+        cfg = federation_config(comm_impl, bits=bits, rounds=rounds)
+        from repro.core.rounds import run_federation
+        run_federation(clients, spec, cfg, backend=backend)
+
+    return audit_rounds(one_run, rounds=1, warmup=1,
+                        program=f"{backend}/{comm_impl}/federation")

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import importlib
-from typing import Dict, List
+from typing import List
 
 from repro.configs.base import (INPUT_SHAPES, InputShape, MLAConfig,
                                 ModelConfig, smoke_shape)

@@ -15,7 +15,7 @@ Every assigned architecture is expressed as a ``ModelConfig``. Families:
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 

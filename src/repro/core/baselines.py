@@ -22,7 +22,6 @@ decoupled MFedMC architecture avoids.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 

@@ -12,7 +12,7 @@ module consumes *definitive predicted categories* (one-hot, §4.2) by default.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

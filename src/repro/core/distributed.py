@@ -31,8 +31,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.core.encoders import (encoder_forward, encoder_loss,
-                                 masked_encoder_loss)
+from repro.core.encoders import encoder_loss, masked_encoder_loss
 from repro.core.quantize import code_dtype, fake_quantize_pytree
 
 

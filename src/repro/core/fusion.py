@@ -15,7 +15,7 @@ sample from the client's background dataset), NOT zeroed — this is the
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

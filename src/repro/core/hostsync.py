@@ -12,8 +12,17 @@ aggregation path (reference or fused, batched/engine/sharded/async)
 reports the device bytes of the payload that crossed its upload program
 boundary via :func:`record_bytes`, so ``benchmarks/bench_quantized_round``
 can compare *measured* bytes against the §4.10 wire-format roofline.
+
+Measurements should scope through :func:`measuring`, which snapshots and
+restores the process-global counters atomically — nested measurements and
+surrounding accumulation both stay correct, and a test that forgets to
+reset can no longer leak counts into the next one (the ``lint`` tier and
+``tests/conftest.py``'s autouse fixture both rely on this).
 """
 from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass
 
 import numpy as np
 
@@ -53,3 +62,42 @@ def count() -> int:
 
 def bytes_moved() -> int:
     return _bytes
+
+
+@dataclass
+class Measurement:
+    """One scoped measurement window's counters.
+
+    Inside the ``with`` block the properties read live; after exit they are
+    frozen at the block's totals."""
+    _frozen_syncs: int = 0
+    _frozen_bytes: int = 0
+    _live: bool = True
+
+    @property
+    def syncs(self) -> int:
+        return _count if self._live else self._frozen_syncs
+
+    @property
+    def bytes_moved(self) -> int:
+        return _bytes if self._live else self._frozen_bytes
+
+
+@contextlib.contextmanager
+def measuring():
+    """Scope a measurement: reset the counters on entry, yield a live
+    :class:`Measurement`, and on exit freeze its totals and fold them back
+    into the enclosing scope's counters — so an outer ``measuring()`` (or a
+    caller accumulating across rounds) still sees every sync and byte, and
+    two sequential windows can never bleed into each other."""
+    global _count, _bytes
+    outer_count, outer_bytes = _count, _bytes
+    _count, _bytes = 0, 0
+    m = Measurement()
+    try:
+        yield m
+    finally:
+        m._frozen_syncs, m._frozen_bytes = _count, _bytes
+        m._live = False
+        _count = outer_count + m._frozen_syncs
+        _bytes = outer_bytes + m._frozen_bytes

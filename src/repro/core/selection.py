@@ -11,7 +11,6 @@ with per-criterion min-max normalization (Eq. 12), top-γ modality selection
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple

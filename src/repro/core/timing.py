@@ -39,7 +39,7 @@ from typing import Optional, Sequence, Union
 
 import numpy as np
 
-from repro.core.aggregation import ICI_LINK, IOT_UPLINK, TransportModel
+from repro.core.aggregation import ICI_LINK, IOT_UPLINK
 
 
 # ---------------------------------------------------------------------------

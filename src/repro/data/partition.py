@@ -15,11 +15,10 @@ datasets — given a :class:`SyntheticDataset` source.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+from typing import List, Optional
 
 import numpy as np
 
-from repro.data.registry import DatasetSpec
 from repro.data.synthetic import ClientData, SyntheticDataset
 
 

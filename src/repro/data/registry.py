@@ -14,7 +14,7 @@ tests/benchmarks) truncates the time axis so LSTM scans stay cheap.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 
 @dataclass(frozen=True)

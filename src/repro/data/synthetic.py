@@ -20,11 +20,11 @@ device arrays per minibatch.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Sequence, Tuple
 
 import numpy as np
 
-from repro.data.registry import DatasetSpec, ModalitySpec, get_dataset_spec
+from repro.data.registry import DatasetSpec, get_dataset_spec
 
 
 @dataclass

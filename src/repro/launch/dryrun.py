@@ -14,7 +14,6 @@ tests and benchmarks see the single real CPU device.
 """
 import argparse
 import json
-import re
 import sys
 import time
 from typing import Any, Dict
@@ -27,8 +26,11 @@ from jax.sharding import PartitionSpec as P
 from repro.configs import (INPUT_SHAPES, get_config, get_shape, list_archs,
                            shape_applicable)
 from repro.launch.mesh import make_production_mesh
-from repro.launch.steps import (make_prefill_step, make_serve_step,
-                                make_train_step, shape_window)
+from repro.launch.steps import (
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)
 from repro.models.model import cache_specs, input_specs, param_specs
 from repro.optim import adamw
 from repro.roofline import (analytic_hbm_bytes, collective_bytes,
@@ -45,7 +47,6 @@ ICI_BW = 50e9              # bytes/s/link
 
 def model_flops(cfg, shape) -> float:
     """6·N·D with N = active params (MoE counts routed-active experts)."""
-    from repro.models.layers import count_params
     specs = param_specs(cfg)
     total = sum(int(x.size) for x in jax.tree.leaves(specs))
     if cfg.is_moe:

@@ -19,7 +19,7 @@ import numpy as np
 from repro.configs import get_config, list_archs
 from repro.configs.base import InputShape
 from repro.launch.steps import make_serve_step
-from repro.models.model import init_cache, init_params, input_specs
+from repro.models.model import init_cache, init_params
 
 
 def main(argv=None):

@@ -7,15 +7,13 @@ opt_state, metrics)``; ``make_serve_step`` returns ``(params, cache, batch)
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import InputShape, ModelConfig
-from repro.models.model import (decode_step, forward, forward_hidden,
-                                logits_from_hidden)
+from repro.models.model import decode_step, forward_hidden, logits_from_hidden
 from repro.optim import Optimizer, apply_updates
 
 

@@ -18,7 +18,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding
-from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import save_pytree
 from repro.configs import get_config, list_archs, smoke_shape

@@ -14,8 +14,6 @@ Layout: q [B, KV, G, S, hd]; k, v [B, KV, T, hd] (GQA grouped heads).
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

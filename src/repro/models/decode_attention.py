@@ -17,7 +17,7 @@ any KV bytes: collective traffic is independent of context length.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

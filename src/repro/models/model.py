@@ -15,7 +15,6 @@ Public API:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Tuple
 
 import jax
@@ -27,8 +26,14 @@ from repro.models import attention as attn
 from repro.models import hybrid as hyb
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
-from repro.models.layers import (dense_init, embed_init, ffn, init_ffn,
-                                 init_rmsnorm, rmsnorm, stack_layer_params)
+from repro.models.layers import (
+    dense_init,
+    embed_init,
+    ffn,
+    init_ffn,
+    init_rmsnorm,
+    rmsnorm,
+)
 from repro.sharding.partition import constrain
 
 

@@ -13,15 +13,18 @@ All recurrences are numerically stabilized in log space with a running max
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.layers import (causal_conv1d, dense_init, init_conv1d,
-                                 init_layernorm, init_rmsnorm, layernorm,
-                                 rmsnorm)
+from repro.models.layers import (
+    causal_conv1d,
+    dense_init,
+    init_conv1d,
+    init_rmsnorm,
+    rmsnorm,
+)
 
 NEG_INF = -1e30
 

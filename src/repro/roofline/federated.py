@@ -58,7 +58,7 @@ def quantized_uplink_roofline(template, k: int, bits: int) -> Dict:
     """
     from repro.core.aggregation import aggregate_quantized
     from repro.core.quantize import quantize_population
-    from repro.kernels.comm import (container_payload_bytes, payload_nbytes,
+    from repro.kernels.comm import (payload_nbytes,
                                     quantize_pack_population,
                                     reduce_packed_population,
                                     wire_payload_bytes)

@@ -11,25 +11,49 @@ autodiff transpose, since ``value_and_grad`` traces them into the jaxpr.
 Counted: dot_general (2·B·M·N·K), conv_general_dilated, and a 1-flop/output
 charge for elementwise ops (captures the RG-LRU / xLSTM gate math). Gather /
 dynamic-slice / layout ops are free (they're memory, not compute).
+
+Primitives that are neither counted, known-free, nor carriers of a
+sub-jaxpr are **unknown**: they are still charged 0 FLOPs, but every walk
+now collects them (``count_step_flops_detailed`` returns the tally;
+``repro.analysis.lint`` surfaces the union per program) instead of
+dropping them silently — an op the meter has never seen is a hole in the
+roofline until it is classified.
 """
 from __future__ import annotations
 
 import math
-from typing import Any, Dict
+from collections import Counter
+from typing import Dict, Tuple
 
 import jax
-import numpy as np
 
 _ELEMENTWISE = {
     "add", "sub", "mul", "div", "max", "min", "exp", "log", "tanh",
     "logistic", "rsqrt", "sqrt", "pow", "integer_pow", "neg", "abs",
     "erf", "sign", "cos", "sin", "log1p", "expm1", "cumsum", "cumlogsumexp",
     "cummax", "select_n", "clamp", "and", "or", "not", "xor", "rem",
-    "nextafter", "atan2",
+    "nextafter", "atan2", "add_any", "round", "ceil", "floor",
 }
 _REDUCE = {"reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
            "reduce_and", "reduce_or", "argmax", "argmin", "reduce_precision",
-           "logsumexp"}
+           "logsumexp", "reduce"}
+
+# Deliberately 0-FLOP: data movement, layout, comparisons/bit ops the
+# roofline treats as free, control/annotation, and RNG bookkeeping. An op
+# here is a *decision* that it costs nothing — new primitives land in the
+# unknown tally until someone moves them into a bucket.
+_FREE = {
+    "broadcast_in_dim", "reshape", "transpose", "squeeze", "expand_dims",
+    "concatenate", "pad", "slice", "dynamic_slice", "dynamic_update_slice",
+    "gather", "scatter", "scatter-add", "scatter_add", "rev", "iota",
+    "convert_element_type", "bitcast_convert_type", "copy", "device_put",
+    "stop_gradient", "eq", "ne", "lt", "le", "gt", "ge", "is_finite",
+    "shift_left", "shift_right_logical", "shift_right_arithmetic",
+    "sort", "argsort", "top_k", "select", "split",
+    "random_seed", "random_wrap", "random_unwrap", "random_bits",
+    "threefry2x32", "psum", "psum2", "pmax", "pmin", "all_gather",
+    "ppermute", "pbroadcast", "axis_index", "one_hot", "squeeze_p",
+}
 
 
 def _dot_flops(eqn) -> float:
@@ -69,6 +93,7 @@ def _closed(j):
 
 
 _CACHE: Dict[int, float] = {}
+_UNKNOWN: Counter = Counter()
 
 
 def _jaxpr_flops(jaxpr) -> float:
@@ -93,8 +118,11 @@ def _jaxpr_flops(jaxpr) -> float:
             for scale, sub in _sub_jaxprs(eqn):
                 total += scale * _jaxpr_flops(_closed(sub))
         else:
-            for scale, sub in _sub_jaxprs(eqn):
+            subs = list(_sub_jaxprs(eqn))
+            for scale, sub in subs:
                 total += scale * _jaxpr_flops(_closed(sub))
+            if not subs and p not in _FREE:
+                _UNKNOWN[p] += 1        # charged 0, but no longer silently
     _CACHE[key] = total
     return total
 
@@ -104,6 +132,22 @@ def count_step_flops(fn, *example_args, **example_kwargs) -> float:
 
     ``example_args`` may be ShapeDtypeStructs — nothing is materialized.
     """
-    _CACHE.clear()
+    flops, _ = count_step_flops_detailed(fn, *example_args, **example_kwargs)
+    return flops
+
+
+def count_step_flops_detailed(fn, *example_args, **example_kwargs
+                              ) -> Tuple[float, Dict[str, int]]:
+    """Like :func:`count_step_flops`, plus the walk's unknown-primitive
+    tally ``{primitive name: occurrences}`` — ops the meter charged 0 FLOPs
+    without a classification. ``repro.analysis.lint`` reports the union."""
     jaxpr = jax.make_jaxpr(fn)(*example_args, **example_kwargs)
-    return _jaxpr_flops(jaxpr.jaxpr)
+    return jaxpr_flops_detailed(jaxpr.jaxpr)
+
+
+def jaxpr_flops_detailed(jaxpr) -> Tuple[float, Dict[str, int]]:
+    """Walk an already-traced (open) jaxpr: (FLOPs, unknown tally)."""
+    _CACHE.clear()
+    _UNKNOWN.clear()
+    flops = _jaxpr_flops(jaxpr)
+    return flops, dict(_UNKNOWN)

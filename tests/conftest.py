@@ -26,6 +26,17 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture(autouse=True)
+def _hostsync_isolation():
+    """Zero the process-global host-sync/bytes counters around every test:
+    a module that measures (lint tier, budget round-trips) can never leak
+    counts into — or inherit counts from — an unrelated test."""
+    from repro.core import hostsync
+    hostsync.reset()
+    yield
+    hostsync.reset()
+
+
 def _device_count() -> int:
     import jax
     return jax.device_count()

@@ -8,8 +8,7 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core.aggregation import (CommLedger, IOT_UPLINK, TransportModel,
-                                    aggregate_modality)
+from repro.core.aggregation import CommLedger, IOT_UPLINK, aggregate_modality
 from repro.core.encoders import encoder_bytes, init_encoder
 from repro.core.quantize import (dequantize_tensor, quantize_tensor,
                                  quantized_roundtrip)

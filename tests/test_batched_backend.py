@@ -1,7 +1,6 @@
 """The batched backend is a pure execution-strategy change: round-1 server
 encoders, comm-ledger bytes, uploads, and losses must match the Python-loop
 backend to float tolerance on the same federation."""
-import dataclasses
 
 import numpy as np
 import pytest

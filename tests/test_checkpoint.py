@@ -1,5 +1,4 @@
 """Checkpoint round-trips for model params and federated server state."""
-import os
 
 import jax
 import jax.numpy as jnp

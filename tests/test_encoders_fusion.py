@@ -2,12 +2,16 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.core.encoders import (encoder_eval, encoder_forward,
-                                 encoder_num_params, encoder_predict,
-                                 encoder_sgd_step, init_cnn_encoder,
-                                 init_encoder, init_lstm_encoder)
+from repro.core.encoders import (
+    encoder_forward,
+    encoder_num_params,
+    encoder_predict,
+    encoder_sgd_step,
+    init_cnn_encoder,
+    init_encoder,
+    init_lstm_encoder,
+)
 from repro.core.fusion import (fusion_eval, fusion_forward, fusion_sgd_step,
                                init_fusion)
 

@@ -1,7 +1,6 @@
 """Checkpoint/resume of a federation: a run split across two processes must
 continue from the restored global encoders and recency state."""
 import numpy as np
-import pytest
 
 from repro.core import MFedMCConfig
 from repro.core.checkpoint_io import load_federation, save_federation

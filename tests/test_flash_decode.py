@@ -10,8 +10,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.models.decode_attention import (_merge, _partial_attention,
-                                           flash_decode_reference)
+from repro.models.decode_attention import (
+    _partial_attention,
+    flash_decode_reference,
+)
 
 
 class TestPartialAttention:

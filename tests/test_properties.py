@@ -1,7 +1,6 @@
 """Hypothesis property tests on system invariants that cut across modules:
 quantization error bounds, selection/priority invariances, ledger linearity,
 and data-partitioner conservation laws."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

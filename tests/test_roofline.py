@@ -3,7 +3,6 @@ counts (the exact failure mode of XLA's cost_analysis), and the collective
 parser must weight while-body collectives by their trip count."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.roofline import (analytic_hbm_bytes, collective_bytes,

@@ -2,7 +2,6 @@
 equivalence with raw decode_step."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_config

@@ -1,13 +1,10 @@
 """Sharding-rule regressions found during the dry-run: vocab padding and
 the sequence-sharded decode cache default."""
-import jax
-import jax.numpy as jnp
 import pytest
-from jax.sharding import PartitionSpec as P
 
 from repro.configs import INPUT_SHAPES, get_config, list_archs
 from repro.models.model import cache_specs, param_specs
-from repro.sharding.partition import cache_pspecs, param_pspecs, register_mesh
+from repro.sharding.partition import cache_pspecs, register_mesh
 
 
 class _FakeMesh:

@@ -6,10 +6,10 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import get_config, smoke_shape
+from repro.configs import get_config
 from repro.launch.steps import chunked_cross_entropy, cross_entropy
 from repro.models.blocked_attention import _plain_attention, flash_attention
-from repro.models.model import init_params, param_specs
+from repro.models.model import param_specs
 from repro.optim import adamw, apply_updates, sgd_momentum
 from repro.sharding.partition import opt_state_pspecs, param_pspecs
 
