@@ -1,0 +1,151 @@
+"""Local-training round: fused all-epochs programs vs per-epoch chain.
+
+    PYTHONPATH=src python -m benchmarks.bench_train_step \
+        [--ks 32,128] [--out BENCH_train_step.json]
+
+Times one full ``run_federation`` round per (K, ``train_impl``) pair on
+the batched backend — the ONLY knob moving is the trainer: ``"fused"``
+collapses each bucket's Local Learning into one donated
+``scan(epochs)∘scan(steps)`` program per stage and reuses one cached
+train-split encoder forward across Stage-#1 fusion and the Shapley
+enumeration, while ``"reference"`` dispatches the historical per-epoch
+chain and recomputes that forward. Both trainers run the SAME step body,
+so ledgers, selections, and accuracies are identical (asserted here) and
+the timing gap is pure dispatch/donation/cache structure.
+
+Timings are strictly interleaved min-of-reps (this host's wall clock
+drifts between process phases — only alternating reps are comparable).
+Dispatched-programs/round and host syncs come from
+``repro.core.hostsync.measuring`` over the same runs; the fused trainer
+must show strictly fewer dispatches at every K.
+
+Supports the ``benchmarks.run`` Row contract via :func:`run`.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+from benchmarks.bench_batched_round import synthetic_federation
+from benchmarks.common import Row, Timer, lint_stamp
+from repro.core import hostsync
+from repro.core.rounds import MFedMCConfig, run_federation
+
+IMPLS = ("fused", "reference")
+KS = (32, 128)
+
+
+def _cfg(train_impl: str, **kw) -> MFedMCConfig:
+    base = dict(rounds=1, local_epochs=2, batch_size=16, seed=0,
+                modality_strategy="random", client_strategy="random",
+                gamma=1, quantize_bits=4, train_impl=train_impl)
+    base.update(kw)
+    return MFedMCConfig(**base)
+
+
+def time_train_round(K: int, *, n: int = 48, reps: int = 5,
+                     backend: str = "batched") -> Dict:
+    """One round per trainer impl: steady-state seconds, dispatched
+    programs, host syncs — federation construction stays outside the
+    timed region; only ``run_federation`` is measured."""
+    def once(impl: str):
+        clients, spec = synthetic_federation(K, n=n)
+        return run_federation(clients, spec, _cfg(impl), backend=backend)
+
+    history = {impl: once(impl) for impl in IMPLS}  # compile both first
+    for impl in IMPLS:
+        assert (history[impl].records[0].uploads
+                == history["fused"].records[0].uploads), \
+            "trainer impl must not move selection"
+        assert (history[impl].records[0].accuracy
+                == history["fused"].records[0].accuracy), \
+            "trainer impl must not move accuracy"
+
+    counters = {}
+    for impl in IMPLS:
+        with hostsync.measuring() as m:
+            once(impl)
+        counters[impl] = {"dispatches": m.dispatches,
+                          "host_syncs": m.syncs}
+
+    best = {impl: float("inf") for impl in IMPLS}
+    for _ in range(reps):
+        for impl in IMPLS:
+            clients, spec = synthetic_federation(K, n=n)
+            cfg = _cfg(impl)
+            with Timer() as t:
+                run_federation(clients, spec, cfg, backend=backend)
+            best[impl] = min(best[impl], t.us / 1e6)
+
+    return {
+        "K": K,
+        "backend": backend,
+        "fused_s": round(best["fused"], 6),
+        "reference_s": round(best["reference"], 6),
+        "speedup": round(best["reference"] / best["fused"], 3),
+        "dispatches": {i: counters[i]["dispatches"] for i in IMPLS},
+        "host_syncs": {i: counters[i]["host_syncs"] for i in IMPLS},
+    }
+
+
+def run(fast: bool = True) -> List[Row]:
+    rows: List[Row] = []
+    for K in ((16, 32) if fast else KS):
+        r = time_train_round(K, reps=3 if fast else 5)
+        rows.append(Row(f"train_step/K{K}/reference",
+                        r["reference_s"] * 1e6,
+                        f"dispatches={r['dispatches']['reference']}"))
+        rows.append(Row(f"train_step/K{K}/fused", r["fused_s"] * 1e6,
+                        f"speedup={r['speedup']:.2f}x;"
+                        f"dispatches={r['dispatches']['fused']}"))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ks", default=",".join(str(k) for k in KS),
+                    help="comma-separated client counts")
+    ap.add_argument("--samples", type=int, default=48)
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--out", default="BENCH_train_step.json")
+    args = ap.parse_args(argv)
+
+    results = []
+    for K in (int(k) for k in args.ks.split(",")):
+        t0 = time.time()
+        r = time_train_round(K, n=args.samples, reps=args.reps)
+        results.append(r)
+        d = r["dispatches"]
+        print(f"K={K:4d} fused={r['fused_s']:7.3f}s "
+              f"ref={r['reference_s']:7.3f}s speedup={r['speedup']:5.2f}x "
+              f"dispatches fused={d['fused']} ref={d['reference']} "
+              f"(total {time.time() - t0:.0f}s)", flush=True)
+
+    payload = {
+        "benchmark": "train_step",
+        "config": {
+            "dataset_shapes": "ucihar (reduced)",
+            "modalities": 2,
+            "samples_per_client": args.samples,
+            "local_epochs": 2,
+            "batch_size": 16,
+            "rounds_timed": 1,
+            "accounting": "interleaved min-of-reps over run_federation; "
+                          "dispatches/host_syncs from repro.core.hostsync "
+                          "over the local-training launch path; selection "
+                          "and accuracy asserted identical across impls",
+        },
+        "results": results,
+        "lint": lint_stamp(("batched",), ("fused",)),
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -9,6 +9,8 @@ lru-cached ``jit(shard_map(...))`` programs the ``backend="sharded"``
 round dispatches (via :func:`repro.roofline.sharded_round_programs`):
 
     epoch                 — vmapped local-SGD epoch over the client axis
+    epoch_fused           — all-epochs fused round program (donated
+                            resident param stack, ``train_impl="fused"``)
     aggregate_full        — full-precision Eq. 21 psum
     aggregate_q_reference — quantize → dequantized-stack psum (historical)
     aggregate_q_fused     — quantize → einsum-from-codes partial → psum
@@ -55,8 +57,8 @@ progs = sharded_round_programs(mesh, k=K, steps=STEPS, batch=BATCH,
 out = {"D": %(D)d, "K": K, "steps": STEPS, "batch": BATCH, "bits": BITS,
        "feat": list(FEAT), "programs": [],
        "uplink": quantized_uplink_roofline(template, K, BITS)}
-for name in ("epoch", "aggregate_full", "aggregate_q_reference",
-             "aggregate_q_fused"):
+for name in ("epoch", "epoch_fused", "aggregate_full",
+             "aggregate_q_reference", "aggregate_q_fused"):
     prog, args = progs[name]
     with mesh:
         compiled = prog.lower(*args).compile()

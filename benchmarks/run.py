@@ -27,6 +27,7 @@ MODULES = [
     "fig12_shapley_runtime",
     "bench_batched_round",
     "bench_quantized_round",
+    "bench_train_step",
     "bench_async_round",
     "roofline",
     "roofline_federated",

@@ -1,10 +1,12 @@
-"""Host-sync and wire-byte budgets, measured from real rounds and pinned.
+"""Host-sync, wire-byte, and dispatch budgets, measured and pinned.
 
 Each backend pays a deliberate, *fixed* number of host synchronisation
 points per round (final-epoch losses, the three modality-selection
-outputs, the client mask, evaluation) and moves a deterministic number of
+outputs, the client mask, evaluation), moves a deterministic number of
 uplink bytes (pow-2-padded §4.10 payloads make the count independent of
-which modalities win a round). Those two numbers ARE the communication
+which modalities win a round), and launches a deterministic number of
+local-training programs (``hostsync.record_dispatch`` — the count the
+fused trainer exists to collapse). Those numbers ARE the communication
 contract this repo exists to reproduce — so they are measured from real
 ``run_federation`` rounds via :func:`repro.core.hostsync.measuring` and
 pinned in ``budgets.json`` next to this module.
@@ -60,26 +62,30 @@ def mini_federation(k: int = _K, n: int = _N, seed: int = _SEED):
 
 
 def federation_config(comm_impl: str, *, bits: int = _BITS,
-                      rounds: int = _ROUNDS):
+                      rounds: int = _ROUNDS, train_impl: str = "fused"):
     from repro.core.rounds import MFedMCConfig
     return MFedMCConfig(rounds=rounds, local_epochs=1, batch_size=8,
                         seed=_SEED, gamma=1, delta=0.2,
                         modality_strategy="priority",
                         client_strategy="low_loss",
-                        quantize_bits=bits, comm_impl=comm_impl)
+                        quantize_bits=bits, comm_impl=comm_impl,
+                        train_impl=train_impl)
 
 
 def measure(backend: str, comm_impl: str, *, bits: int = _BITS,
-            rounds: int = _ROUNDS) -> Dict:
-    """Host syncs + uplink bytes of a seeded ``rounds``-round federation,
-    scoped atomically via ``hostsync.measuring``."""
+            rounds: int = _ROUNDS, train_impl: str = "fused") -> Dict:
+    """Host syncs + uplink bytes + training dispatches of a seeded
+    ``rounds``-round federation, scoped atomically via
+    ``hostsync.measuring``."""
     from repro.core import hostsync
     from repro.core.rounds import run_federation
     clients, spec = mini_federation()
-    cfg = federation_config(comm_impl, bits=bits, rounds=rounds)
+    cfg = federation_config(comm_impl, bits=bits, rounds=rounds,
+                            train_impl=train_impl)
     with hostsync.measuring() as m:
         run_federation(clients, spec, cfg, backend=backend)
-    return {"host_syncs": int(m.syncs), "bytes_moved": int(m.bytes_moved)}
+    return {"host_syncs": int(m.syncs), "bytes_moved": int(m.bytes_moved),
+            "dispatches": int(m.dispatches)}
 
 
 def measure_all(backends: Tuple[str, ...] = ("batched", "engine", "async",
@@ -89,7 +95,7 @@ def measure_all(backends: Tuple[str, ...] = ("batched", "engine", "async",
     out: Dict = {
         "config": {"K": _K, "n": _N, "seed": _SEED, "rounds": _ROUNDS,
                    "bits": _BITS, "local_epochs": 1, "batch_size": 8,
-                   "gamma": 1, "delta": 0.2},
+                   "gamma": 1, "delta": 0.2, "train_impl": "fused"},
     }
     for b in backends:
         out[b] = {}
@@ -141,7 +147,19 @@ def compare(measured: Dict, pinned: Optional[Dict]) -> List[Finding]:
                     ("host_syncs", "host syncs/run",
                      "a new device->host fetch entered the round path"),
                     ("bytes_moved", "uplink bytes/run",
-                     "the wire payload changed")):
+                     "the wire payload changed"),
+                    ("dispatches", "training dispatches/run",
+                     "the local-training launch structure changed — a "
+                     "fused round program split into extra launches, or "
+                     "the prediction cache stopped deduplicating the "
+                     "train-split forward")):
+                if key not in p:
+                    findings.append(Finding(
+                        "budget", f"{backend}/{ci}",
+                        f"{label}: no pinned value (manifest predates "
+                        "this budget) — re-bless with `python -m "
+                        "repro.analysis.lint --bless`"))
+                    continue
                 if m[key] != p[key]:
                     sign = "+" if m[key] > p[key] else ""
                     findings.append(Finding(

@@ -124,7 +124,8 @@ def main(argv=None) -> int:
                 continue
             for ci, m in sorted(impls.items()):
                 print(f"  {b:8s} {ci:10s} host_syncs={m['host_syncs']:4d} "
-                      f"bytes_moved={m['bytes_moved']}")
+                      f"bytes_moved={m['bytes_moved']} "
+                      f"dispatches={m['dispatches']}")
         return 0
 
     findings, report = run_lint(args.backend, args.comm_impl,

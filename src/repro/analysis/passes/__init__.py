@@ -5,14 +5,15 @@ pass is independently importable for targeted self-tests (the lint tier
 injects one violation class per pass and asserts the finding fires).
 """
 from repro.analysis.passes.collectives import CollectiveAuditPass
+from repro.analysis.passes.donation import DonationPass
 from repro.analysis.passes.host_transfer import HostTransferPass
 from repro.analysis.passes.mask_safety import MaskSafetyPass
 from repro.analysis.passes.precision import PrecisionPass
 
-__all__ = ["CollectiveAuditPass", "HostTransferPass", "MaskSafetyPass",
-           "PrecisionPass", "default_passes"]
+__all__ = ["CollectiveAuditPass", "DonationPass", "HostTransferPass",
+           "MaskSafetyPass", "PrecisionPass", "default_passes"]
 
 
 def default_passes():
     return [HostTransferPass(), PrecisionPass(), MaskSafetyPass(),
-            CollectiveAuditPass()]
+            CollectiveAuditPass(), DonationPass()]

@@ -1,0 +1,52 @@
+"""Donation audit: resident param stacks must be consumed in place.
+
+The fused round programs (``repro.kernels.train``, the sharded
+``_fused_round_program``) exist to stop XLA double-buffering the
+``[K, ...]`` resident population: their first argument is the live param
+stack and is declared with ``donate_argnums`` so the compiled program
+reuses the input allocation for the output. Losing that donation — a
+refactor that re-jits without the flag, a wrapper that copies the stack
+first — silently doubles the trainer's peak memory and nothing in the
+test suite notices.
+
+``repro.analysis.programs`` records the donation facts of each fused
+spec straight from the real lowering (``lower(...).args_info``) in
+``meta["donation"]``::
+
+    {"resident": (0,),                # which args are resident stacks
+     "donated":  (True, False, ...)}  # per-arg, from the compiler
+
+This pass cross-checks the two: every declared-resident arg must have
+actually been donated. Programs without donation meta (the per-epoch
+reference chain, whose launches are transient by design) are out of
+scope — the pass audits the contract only where the contract exists.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.framework import (TRAINING, AnalysisPass, Finding,
+                                      ProgramSpec)
+
+
+class DonationPass(AnalysisPass):
+    name = "donation"
+    roles = (TRAINING,)
+
+    def run(self, prog: ProgramSpec) -> List[Finding]:
+        don = prog.meta.get("donation")
+        if not don:
+            return []
+        findings = []
+        donated = don.get("donated", ())
+        for idx in don.get("resident", ()):
+            if idx >= len(donated) or not donated[idx]:
+                findings.append(Finding(
+                    self.name, prog.name,
+                    f"resident param stack (arg {idx}) is NOT donated to "
+                    "the round program — the lowering keeps input and "
+                    "output alive together, double-buffering the whole "
+                    "[K, ...] population every launch; declare it with "
+                    "donate_argnums and treat the caller's stack as "
+                    "consumed"))
+        return findings

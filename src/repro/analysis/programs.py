@@ -25,6 +25,12 @@ Backends map to program sets as the backends map to code:
 - ``sharded`` swaps in the ``shard_map`` epoch/psum programs and the
   shard-mapped modality ranker.
 
+Both trainer impls appear: the per-epoch reference programs AND the
+``train_impl="fused"`` all-epochs round programs, whose specs carry
+donation facts read from the REAL lowering (``lower(...).args_info``)
+so the donation pass can prove the resident param stacks update in
+place.
+
 The f64 decision programs are shared by all of them and appear once per
 backend under the backend's name so ``--backend engine`` audits the full
 set that backend runs.
@@ -89,6 +95,43 @@ def _trace(fn, *args, x64: bool = False, **kwargs):
 # ---------------------------------------------------------------------------
 # shared program groups
 # ---------------------------------------------------------------------------
+
+def _donation_meta(jitted, *args, resident=(0,), **kw) -> Dict:
+    """Donation facts straight from the REAL lowering: which positional
+    args the compiled program consumes in place. ``resident`` declares
+    which args are resident population stacks — the donation lint pass
+    cross-checks the two."""
+    arg_info, _ = jitted.lower(*args, **kw).args_info
+    donated = tuple(
+        bool(leaves) and all(a.donated for a in leaves)
+        for leaves in (jax.tree_util.tree_leaves(arg) for arg in arg_info))
+    return {"donation": {"resident": tuple(resident), "donated": donated}}
+
+
+def _fused_training_programs(backend: str) -> List[ProgramSpec]:
+    """The ``train_impl="fused"`` round programs: all E epochs in one
+    launch, resident param stack donated."""
+    from repro.kernels.train import fused_encoder_round, fused_fusion_round
+    enc = _stack(_encoder_template(), _G)
+    fus = _stack(_fusion_template(), _G)
+    e = 2                                   # representative epoch count
+    xs = _f32(_G, e, _S, _B, *_FEAT)
+    ys = _i32(_G, e, _S, _B)
+    ws = _f32(_G, e, _S, _B)
+    preds = _f32(_G, e, _S, _B, _M, _CLASSES)
+    pmask = _f32(_G, _M)
+    out = []
+    for suffix, fn, args in (
+            ("round_encoder_fused", fused_encoder_round,
+             (enc, xs, ys, ws)),
+            ("round_fusion_fused", fused_fusion_round,
+             (fus, preds, pmask, ys, ws))):
+        out.append(ProgramSpec(
+            f"{backend}/{suffix}", backend, "n/a", TRAINING,
+            _trace(functools.partial(fn, lr=0.1), *args),
+            meta=_donation_meta(fn, *args, lr=0.1)))
+    return out
+
 
 def _training_programs(backend: str) -> List[ProgramSpec]:
     from repro.core.batched import (_batched_fusion_eval, _batched_predict,
@@ -198,6 +241,7 @@ def _sharded_programs(comm_impl: str, bits: int) -> List[ProgramSpec]:
         mesh, k=_K, steps=_S, batch=_B, feat=_FEAT,
         template=_encoder_template(), lr=0.1, bits=bits)
     name_of = {"epoch": ("epoch_encoder", TRAINING),
+               "epoch_fused": ("round_encoder_fused", TRAINING),
                "aggregate_full": ("aggregate_full", COLLECTIVE),
                ("aggregate_q_fused" if comm_impl == "fused" else
                 "aggregate_q_reference"):
@@ -205,11 +249,14 @@ def _sharded_programs(comm_impl: str, bits: int) -> List[ProgramSpec]:
     out = []
     for key, (suffix, role) in name_of.items():
         program, args = progs[key]
+        meta = {"bits": bits if "q_" in key else 32,
+                "template": _encoder_template()}
+        if key == "epoch_fused":
+            meta.update(_donation_meta(program, *args))
         out.append(ProgramSpec(
             f"sharded/{suffix}", "sharded", comm_impl, role,
             _trace(program, *args), mesh_devices=mesh.devices.size,
-            meta={"bits": bits if "q_" in key else 32,
-                  "template": _encoder_template()}))
+            meta=meta))
     # the shard-mapped Eqs. 12–16 ranker, traced exactly as
     # _sharded_modality_program lowers it (f64, shard_map over the mesh)
     fn = functools.partial(_modality_program, gamma=1, alpha_s=1 / 3,
@@ -242,14 +289,17 @@ def round_programs(backend: str, comm_impl: str = "fused", *,
     if comm_impl not in COMM_IMPLS:
         raise ValueError(f"unknown comm_impl {comm_impl!r}")
     if backend == "sharded":
-        # training/uplink swap to shard_map forms; fusion stage + decision
-        # client ranking ride the engine programs
+        # training/uplink swap to shard_map forms (incl. the fused encoder
+        # round program); fusion stage + decision client ranking ride the
+        # engine programs
         out = _sharded_programs(comm_impl, bits)
         out += [p for p in _training_programs(backend)
                 if "epoch_encoder" not in p.name]
-        out += _decision_programs(backend)[1:]      # client ranking only
-        return out
+        out += [p for p in _fused_training_programs(backend)
+                if "round_encoder" not in p.name]
+        return out + _decision_programs(backend)[1:]  # client ranking only
     return (_training_programs(backend)
+            + _fused_training_programs(backend)
             + _uplink_programs(backend, comm_impl, bits)
             + _decision_programs(backend))
 

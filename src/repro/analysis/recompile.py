@@ -111,17 +111,21 @@ def audit_rounds(round_fn, rounds: int, *, program: str,
 
 
 def audit_federation(backend: str, comm_impl: str, *, bits: int = 4,
-                     rounds: int = 3
+                     rounds: int = 3, train_impl: str = "fused"
                      ) -> Tuple[List[Finding], CompileReport]:
     """Warm a real mini federation, then assert an identically-seeded
-    re-run compiles nothing."""
+    re-run compiles nothing. ``train_impl="fused"`` (the default) puts
+    the donated all-epochs round programs under the tracker — donation
+    must not defeat jit-cache reuse across rounds."""
     from repro.analysis.budgets import federation_config, mini_federation
 
     def one_run(_):
         clients, spec = mini_federation()
-        cfg = federation_config(comm_impl, bits=bits, rounds=rounds)
+        cfg = federation_config(comm_impl, bits=bits, rounds=rounds,
+                                train_impl=train_impl)
         from repro.core.rounds import run_federation
         run_federation(clients, spec, cfg, backend=backend)
 
     return audit_rounds(one_run, rounds=1, warmup=1,
-                        program=f"{backend}/{comm_impl}/federation")
+                        program=f"{backend}/{comm_impl}/"
+                                f"{train_impl}-train/federation")

@@ -46,6 +46,30 @@ unstacks to ``Client`` objects each call — Tier 2's historical behavior.
 training code gathers/scatters rows of the resident
 :class:`~repro.core.federation_state.FederationState` buckets and the round
 never restacks the population.
+
+Two trainer implementations share every phase
+(``MFedMCConfig.train_impl``, mirroring ``comm_impl``):
+
+- ``"fused"`` (default) — each bucket's E-epoch chain runs as ONE jitted
+  program (``repro.kernels.train.fused_encoder_round`` /
+  ``fused_fusion_round``) with ``donate_argnums`` on the resident param
+  stack: one dispatch and zero param-stack copies per bucket per phase.
+- ``"reference"`` — the historical chain: one ``masked_batched_epoch`` /
+  ``masked_fusion_epoch`` launch per epoch, params round-tripping through
+  the dispatch boundary each time.
+
+Both consume identical schedules and run the identical step body, so they
+match bit-for-bit on CPU and selection outcomes never depend on the choice
+(``tests/test_train_fused.py`` pins 1e-5 with exact ledger/selection).
+Every training-path launch reports through ``hostsync.record_dispatch``,
+so benchmarks and the budget manifest meter dispatched-programs-per-round.
+
+A :class:`PredictionCache` dedupes the round's train-split encoder
+forwards: Stage-#1 fusion fills it and the Shapley enumeration reuses it
+(previously both recomputed the same ``_population_predictions``), for
+both trainer impls. The round loop drops the cache when Local Deploying
+overwrites encoders, so Stage-#2 and evaluation always see fresh
+forwards.
 """
 from __future__ import annotations
 
@@ -63,11 +87,41 @@ from repro.core.client import Client
 from repro.core.encoders import masked_encoder_loss
 from repro.core.fusion import masked_fusion_eval, masked_fusion_loss
 from repro.core.shapley import exact_shapley_population
+from repro.kernels.train import fused_encoder_round, fused_fusion_round
 
 
 def _default_store():
     from repro.core.federation_state import ClientStore
     return ClientStore()
+
+
+TRAIN_IMPLS = ("fused", "reference")
+
+
+class PredictionCache:
+    """Per-round cache of train-split encoder predictions.
+
+    One entry per client: the ``[n_k, M, C]`` prediction block its trained
+    encoders produce on its own train split. Stage-#1 fusion training fills
+    it; the Shapley enumeration reads it back — one forward per (client,
+    round) instead of two — and the round loop constructs a fresh cache
+    each round (deploying aggregated encoders invalidates every entry, so
+    Stage-#2 and evaluation never consult it). Blocks are keyed by
+    ``client_id`` rather than bucket, because fusion *training* buckets
+    (keyed on schedule length) group clients differently from the Shapley
+    and evaluation buckets."""
+
+    def __init__(self):
+        self._blocks: Dict[int, np.ndarray] = {}
+
+    def get(self, client_id: int) -> Optional[np.ndarray]:
+        return self._blocks.get(client_id)
+
+    def put(self, client_id: int, block: np.ndarray) -> None:
+        self._blocks[client_id] = block
+
+    def __len__(self) -> int:
+        return len(self._blocks)
 
 
 # ---------------------------------------------------------------------------
@@ -242,15 +296,17 @@ def _fusion_buckets(clients: Sequence[Client],
 # ---------------------------------------------------------------------------
 
 def train_population_encoders(plans: Sequence[ClientPlan], *, epochs: int,
-                              lr: float, batch_size: int,
-                              store=None) -> None:
+                              lr: float, batch_size: int, store=None,
+                              train_impl: str = "fused") -> None:
     """Local Learning's encoder phase for the whole (client, modality)
     population, bucketed by coarse shape family.
 
     Mirrors ``Client.train_encoders`` exactly on the real samples: E epochs,
     each a padded [S, B] schedule whose real slots are the loop's ⌊n/B⌋ full
     batches plus trailing partial batch, with per-epoch shuffles from the
-    plan; caches the final-epoch mean loss ℓ_m^k per (client, modality)."""
+    plan; caches the final-epoch mean loss ℓ_m^k per (client, modality).
+    ``train_impl="fused"`` runs all E epochs as one donated program per
+    bucket; ``"reference"`` dispatches one program per epoch."""
     store = store or _default_store()
     for p in plans:
         p.client.losses = {}
@@ -275,17 +331,38 @@ def train_population_encoders(plans: Sequence[ClientPlan], *, epochs: int,
         last = np.zeros((kg, steps), np.float64)     # epochs == 0 -> loss 0.0
         valid = np.zeros((kg, steps), bool)
         le = None
-        for e in range(epochs):
-            idx, w = padded_perm_indices(
+        if train_impl == "fused" and epochs:
+            idx_w = [padded_perm_indices(
                 [p.encoder_perms[m][e] for p, m in pairs], ns, steps,
-                batch_size)
-            xe = x[gather, idx].reshape(kg, steps, batch_size, *x.shape[2:])
-            ye = y[gather, idx].reshape(kg, steps, batch_size)
-            ws = w.reshape(kg, steps, batch_size)
-            valid = ws.sum(axis=-1) > 0
-            stacked, le = masked_batched_epoch(stacked, jnp.asarray(xe),
-                                               jnp.asarray(ye),
-                                               jnp.asarray(ws), lr)
+                batch_size) for e in range(epochs)]
+            idx = np.stack([iw[0] for iw in idx_w], axis=1)  # [kg, E, L]
+            w = np.stack([iw[1] for iw in idx_w], axis=1)
+            xe = x[gather[:, None], idx].reshape(
+                kg, epochs, steps, batch_size, *x.shape[2:])
+            ye = y[gather[:, None], idx].reshape(
+                kg, epochs, steps, batch_size)
+            ws = w.reshape(kg, epochs, steps, batch_size)
+            valid = ws[:, -1].sum(axis=-1) > 0
+            hostsync.record_dispatch()
+            # `stacked` is donated: with a resident store this updates the
+            # population bucket in place (scatter below re-binds it)
+            stacked, le = fused_encoder_round(stacked, jnp.asarray(xe),
+                                              jnp.asarray(ye),
+                                              jnp.asarray(ws), lr)
+        else:
+            for e in range(epochs):
+                idx, w = padded_perm_indices(
+                    [p.encoder_perms[m][e] for p, m in pairs], ns, steps,
+                    batch_size)
+                xe = x[gather, idx].reshape(kg, steps, batch_size,
+                                            *x.shape[2:])
+                ye = y[gather, idx].reshape(kg, steps, batch_size)
+                ws = w.reshape(kg, steps, batch_size)
+                valid = ws.sum(axis=-1) > 0
+                hostsync.record_dispatch()
+                stacked, le = masked_batched_epoch(stacked, jnp.asarray(xe),
+                                                   jnp.asarray(ye),
+                                                   jnp.asarray(ws), lr)
         if le is not None:
             # ℓ_m^k is the FINAL epoch's losses: one fetch after the loop,
             # not one blocking sync per epoch
@@ -309,22 +386,37 @@ def _batched_predict_probs(stacked_params, xs):
     return jax.vmap(enc.encoder_predict_probs)(stacked_params, xs)
 
 
-def _population_predictions(clients: Sequence[Client], datas,
-                            store=None) -> np.ndarray:
+def _population_predictions(clients: Sequence[Client], datas, store=None,
+                            cache: Optional[PredictionCache] = None
+                            ) -> np.ndarray:
     """Stacked ``Client.predictions``: [K, n_pad, M, C] with zero columns at
     absent (client, modality) pairs, padded over the sample axis.
 
     Encoder forwards batch by shape family across clients, so structurally
     missing modalities cost nothing — they are zeros by construction, exactly
     the loop's convention (padded rows carry garbage predictions and are
-    excluded downstream by sample masks)."""
+    excluded downstream by sample masks). With a ``cache`` (train split
+    only — the caller guarantees ``datas`` are the splits the cache was
+    built over), clients whose block is already cached skip their forward
+    entirely; fresh blocks are stored back, so the second consumer of a
+    round's train-split predictions (the Shapley enumeration) dispatches
+    zero encoder programs. Rows past a cached client's n_k stay zero where
+    an uncached forward leaves padded garbage — both are excluded by the
+    sample masks everywhere downstream."""
     store = store or _default_store()
     c0 = clients[0]
     M, C = len(c0.all_modalities), c0.spec.num_classes
     n_pad = max(d.num_samples for d in datas)
     out = np.zeros((len(clients), n_pad, M, C), np.float32)
+    hits = set()
     buckets: Dict[Tuple, List[Tuple[int, int, Client, object, str]]] = {}
     for k, (c, d) in enumerate(zip(clients, datas)):
+        block = cache.get(c.client_id) if cache is not None else None
+        if block is not None:
+            n = min(block.shape[0], n_pad)
+            out[k, :n] = block[:n]
+            hits.add(k)
+            continue
         for mi, m in enumerate(c.all_modalities):
             if m in c.encoders and m in d.modalities:
                 key = (tuple(np.asarray(d.modalities[m]).shape[1:]), C)
@@ -336,24 +428,33 @@ def _population_predictions(clients: Sequence[Client], datas,
         stacked = store.gather_encoders([(c, m) for _, _, c, _, m in entries])
         xs = jnp.asarray(np.stack([c.padded_modality(d, m, n_pad)
                                    for _, _, c, d, m in entries]))
+        hostsync.record_dispatch()
         pr = hostsync.fetch(fn(stacked, xs))         # [Kg, n_pad, C]
         for j, (k, mi, *_rest) in enumerate(entries):
             out[k, :, mi] = pr[j]
+    if cache is not None:
+        for k, (c, d) in enumerate(zip(clients, datas)):
+            if k not in hits:
+                cache.put(c.client_id, out[k, :d.num_samples].copy())
     return out
 
 
 def train_population_fusion(clients: Sequence[Client],
                             perms: Sequence[Sequence[np.ndarray]], *,
                             epochs: int, lr: float, batch_size: int,
-                            store=None) -> None:
+                            store=None, train_impl: str = "fused",
+                            cache: Optional[PredictionCache] = None) -> None:
     """Stage-#1/#2 fusion training for one fusion bucket, batched.
 
     Mirrors ``Client.train_fusion``: predictions computed once with frozen
-    encoders, then E epochs of planned-shuffle minibatch SGD over the padded
-    schedule, each client gated by its own [M] presence mask."""
+    encoders (through the round's :class:`PredictionCache` when given, so
+    Shapley can reuse them), then E epochs of planned-shuffle minibatch SGD
+    over the padded schedule, each client gated by its own [M] presence
+    mask — one donated program (``"fused"``) or one launch per epoch
+    (``"reference"``)."""
     store = store or _default_store()
     preds = _population_predictions(clients, [c.train for c in clients],
-                                    store)
+                                    store, cache=cache)
     n_pad = preds.shape[1]
     y = np.stack([c.padded_labels(c.train, n_pad) for c in clients])
     presence = jnp.asarray(np.stack([c.avail_mask() for c in clients]))
@@ -362,15 +463,30 @@ def train_population_fusion(clients: Sequence[Client],
     stacked = store.gather_fusion(clients)
     kg = len(clients)
     gather = np.arange(kg)[:, None]
-    for e in range(epochs):
-        idx, w = padded_perm_indices([p[e] for p in perms], ns, steps,
-                                     batch_size)
-        pe = preds[gather, idx].reshape(kg, steps, batch_size,
-                                        *preds.shape[2:])
-        ye = y[gather, idx].reshape(kg, steps, batch_size)
-        ws = w.reshape(kg, steps, batch_size)
-        stacked, _ = masked_fusion_epoch(stacked, jnp.asarray(pe), presence,
-                                         jnp.asarray(ye), jnp.asarray(ws), lr)
+    if train_impl == "fused" and epochs:
+        idx_w = [padded_perm_indices([p[e] for p in perms], ns, steps,
+                                     batch_size) for e in range(epochs)]
+        idx = np.stack([iw[0] for iw in idx_w], axis=1)      # [kg, E, L]
+        w = np.stack([iw[1] for iw in idx_w], axis=1)
+        pe = preds[gather[:, None], idx].reshape(
+            kg, epochs, steps, batch_size, *preds.shape[2:])
+        ye = y[gather[:, None], idx].reshape(kg, epochs, steps, batch_size)
+        ws = w.reshape(kg, epochs, steps, batch_size)
+        hostsync.record_dispatch()
+        stacked, _ = fused_fusion_round(stacked, jnp.asarray(pe), presence,
+                                        jnp.asarray(ye), jnp.asarray(ws), lr)
+    else:
+        for e in range(epochs):
+            idx, w = padded_perm_indices([p[e] for p in perms], ns, steps,
+                                         batch_size)
+            pe = preds[gather, idx].reshape(kg, steps, batch_size,
+                                            *preds.shape[2:])
+            ye = y[gather, idx].reshape(kg, steps, batch_size)
+            ws = w.reshape(kg, steps, batch_size)
+            hostsync.record_dispatch()
+            stacked, _ = masked_fusion_epoch(stacked, jnp.asarray(pe),
+                                             presence, jnp.asarray(ye),
+                                             jnp.asarray(ws), lr)
     store.scatter_fusion(clients, stacked)
 
 
@@ -379,23 +495,27 @@ def train_population_fusion(clients: Sequence[Client],
 # ---------------------------------------------------------------------------
 
 def batched_local_learning(clients: Sequence[Client], cfg,
-                           rng: np.random.Generator, store=None) -> None:
+                           rng: np.random.Generator, store=None,
+                           cache: Optional[PredictionCache] = None) -> None:
     """Algorithm 1's Local Learning phase, batched end-to-end.
 
     1. plan all shuffles (loop-order RNG parity);
     2. encoder populations train per coarse shape family — ragged clients
        included, no per-client fallback;
-    3. Stage-#1 fusion trains per fusion bucket with presence masks."""
+    3. Stage-#1 fusion trains per fusion bucket with presence masks,
+       filling the round's prediction ``cache`` for Shapley to reuse."""
     store = store or _default_store()
+    impl = getattr(cfg, "train_impl", "fused")
     plans = plan_permutations(clients, cfg.local_epochs, rng)
     train_population_encoders(plans, epochs=cfg.local_epochs,
                               lr=cfg.lr_encoder, batch_size=cfg.batch_size,
-                              store=store)
+                              store=store, train_impl=impl)
     for idxs in _fusion_buckets(clients, cfg.batch_size):
         train_population_fusion([clients[i] for i in idxs],
                                 [plans[i].fusion_perms for i in idxs],
                                 epochs=cfg.local_epochs, lr=cfg.lr_fusion,
-                                batch_size=cfg.batch_size, store=store)
+                                batch_size=cfg.batch_size, store=store,
+                                train_impl=impl, cache=cache)
 
 
 def batched_fusion_stage(clients: Sequence[Client], cfg,
@@ -406,13 +526,15 @@ def batched_fusion_stage(clients: Sequence[Client], cfg,
     order the loop backend consumes ``rng`` — then trains fusion buckets
     stacked with presence masks."""
     store = store or _default_store()
+    impl = getattr(cfg, "train_impl", "fused")
     perms = [[rng.permutation(c.train.num_samples)
               for _ in range(cfg.local_epochs)] for c in clients]
     for idxs in _fusion_buckets(clients, cfg.batch_size):
         train_population_fusion([clients[i] for i in idxs],
                                 [perms[i] for i in idxs],
                                 epochs=cfg.local_epochs, lr=cfg.lr_fusion,
-                                batch_size=cfg.batch_size, store=store)
+                                batch_size=cfg.batch_size, store=store,
+                                train_impl=impl)
 
 
 # ---------------------------------------------------------------------------
@@ -421,14 +543,18 @@ def batched_fusion_stage(clients: Sequence[Client], cfg,
 
 def batched_shapley_values(clients: Sequence[Client], background_size: int,
                            eval_size: int, rng: np.random.Generator,
-                           store=None) -> Dict[int, np.ndarray]:
+                           store=None,
+                           cache: Optional[PredictionCache] = None
+                           ) -> Dict[int, np.ndarray]:
     """Exact interventional Shapley for a whole population: one vmapped 2^M
     enumeration per fusion bucket instead of one per client per round.
 
     Draws each client's background/eval subsets from ``rng`` in client order
     — exactly the draws ``Client.shapley_values`` makes in the loop backend,
-    so both backends leave the generator in the same state. Returns
-    {client_id: φ over that client's modality_names}."""
+    so both backends leave the generator in the same state. With the
+    round's ``cache``, the train-split encoder forwards Stage-#1 already
+    ran are reused instead of recomputed. Returns {client_id: φ over that
+    client's modality_names}."""
     store = store or _default_store()
     draws = []
     for c in clients:
@@ -442,7 +568,8 @@ def batched_shapley_values(clients: Sequence[Client], background_size: int,
         cs = [clients[i] for i in idxs]
         kg = len(cs)
         M = len(cs[0].all_modalities)
-        preds = _population_predictions(cs, [c.train for c in cs], store)
+        preds = _population_predictions(cs, [c.train for c in cs], store,
+                                        cache=cache)
         n_pad = preds.shape[1]
         g_max = max(len(draws[i][0]) for i in idxs)
         b_max = max(len(draws[i][1]) for i in idxs)
@@ -459,6 +586,7 @@ def batched_shapley_values(clients: Sequence[Client], background_size: int,
         gather = np.arange(kg)[:, None]
         y = np.stack([c.padded_labels(c.train, n_pad) for c in cs])
         avail = np.stack([c.avail_mask() for c in cs])
+        hostsync.record_dispatch()
         phi = hostsync.fetch(exact_shapley_population(
             store.gather_fusion(cs),
             jnp.asarray(preds[gather, ev_idx]),
@@ -492,6 +620,7 @@ def batched_evaluate(clients: Sequence[Client],
         y = np.stack([c.padded_labels(d, n_pad) for c, d in zip(cs, datas)])
         w = np.stack([c.sample_mask(d, n_pad) for c, d in zip(cs, datas)])
         presence = np.stack([c.avail_mask() for c in cs])
+        hostsync.record_dispatch()
         loss, acc = _batched_fusion_eval(
             store.gather_fusion(cs), jnp.asarray(preds),
             jnp.asarray(presence), jnp.asarray(y), jnp.asarray(w))

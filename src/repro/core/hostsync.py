@@ -13,6 +13,15 @@ reports the device bytes of the payload that crossed its upload program
 boundary via :func:`record_bytes`, so ``benchmarks/bench_quantized_round``
 can compare *measured* bytes against the §4.10 wire-format roofline.
 
+Third counter: **dispatches** — the number of jitted programs the
+local-training path launches (encoder epochs, fusion epochs, prediction
+forwards, the Shapley enumeration, evaluation). Every training-path call
+site in ``repro.core.batched`` / ``repro.core.sharded`` reports through
+:func:`record_dispatch`, so ``benchmarks/bench_train_step.py`` and the
+budget manifest can pin *measured* dispatched-programs-per-round for the
+fused (one multi-epoch program per bucket) vs reference (one program per
+epoch per bucket) trainers.
+
 Measurements should scope through :func:`measuring`, which snapshots and
 restores the process-global counters atomically — nested measurements and
 surrounding accumulation both stay correct, and a test that forgets to
@@ -28,6 +37,7 @@ import numpy as np
 
 _count = 0
 _bytes = 0
+_dispatches = 0
 
 
 def fetch(x) -> np.ndarray:
@@ -50,10 +60,17 @@ def record_bytes(n: int) -> None:
     _bytes += int(n)
 
 
+def record_dispatch(n: int = 1) -> None:
+    """Account ``n`` jitted local-training program launches."""
+    global _dispatches
+    _dispatches += int(n)
+
+
 def reset() -> None:
-    global _count, _bytes
+    global _count, _bytes, _dispatches
     _count = 0
     _bytes = 0
+    _dispatches = 0
 
 
 def count() -> int:
@@ -64,6 +81,10 @@ def bytes_moved() -> int:
     return _bytes
 
 
+def dispatches() -> int:
+    return _dispatches
+
+
 @dataclass
 class Measurement:
     """One scoped measurement window's counters.
@@ -72,6 +93,7 @@ class Measurement:
     frozen at the block's totals."""
     _frozen_syncs: int = 0
     _frozen_bytes: int = 0
+    _frozen_dispatches: int = 0
     _live: bool = True
 
     @property
@@ -82,6 +104,10 @@ class Measurement:
     def bytes_moved(self) -> int:
         return _bytes if self._live else self._frozen_bytes
 
+    @property
+    def dispatches(self) -> int:
+        return _dispatches if self._live else self._frozen_dispatches
+
 
 @contextlib.contextmanager
 def measuring():
@@ -90,14 +116,16 @@ def measuring():
     into the enclosing scope's counters — so an outer ``measuring()`` (or a
     caller accumulating across rounds) still sees every sync and byte, and
     two sequential windows can never bleed into each other."""
-    global _count, _bytes
-    outer_count, outer_bytes = _count, _bytes
-    _count, _bytes = 0, 0
+    global _count, _bytes, _dispatches
+    outer = (_count, _bytes, _dispatches)
+    _count, _bytes, _dispatches = 0, 0, 0
     m = Measurement()
     try:
         yield m
     finally:
         m._frozen_syncs, m._frozen_bytes = _count, _bytes
+        m._frozen_dispatches = _dispatches
         m._live = False
-        _count = outer_count + m._frozen_syncs
-        _bytes = outer_bytes + m._frozen_bytes
+        _count = outer[0] + m._frozen_syncs
+        _bytes = outer[1] + m._frozen_bytes
+        _dispatches = outer[2] + m._frozen_dispatches

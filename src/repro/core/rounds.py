@@ -96,6 +96,10 @@ class MFedMCConfig:
                                            # reduce-from-packed, kernels/
                                            # comm.py) | reference (separate
                                            # quantize + aggregate programs)
+    train_impl: str = "fused"              # fused (one donated multi-epoch
+                                           # program per bucket, kernels/
+                                           # train.py) | reference (one
+                                           # program per epoch per bucket)
     error_feedback: bool = False           # client-held EF residuals
     availability: float = 1.0              # client availability rate (§4.9)
     # -- virtual-time runtime (backend="async"; repro.core.scheduler) ---
@@ -347,7 +351,8 @@ def _joint_selection(avail: List[Client], state: FederationState,
                      cfg: MFedMCConfig, rng: np.random.Generator, t: int,
                      qbits: int, batched: bool, store, *,
                      recency_matrix: Optional[np.ndarray] = None,
-                     client_staleness: Optional[np.ndarray] = None
+                     client_staleness: Optional[np.ndarray] = None,
+                     cache=None
                      ) -> Tuple[Dict[int, List[str]], List[int],
                                 Dict[str, List[float]]]:
     """Algorithm 1 steps 2–3 (modality selection §3.2, client selection
@@ -387,7 +392,7 @@ def _joint_selection(avail: List[Client], state: FederationState,
         if shap_clients:
             phi_by_cid = batched_shapley_values(
                 shap_clients, cfg.background_size, cfg.eval_size,
-                rng, store=store)
+                rng, store=store, cache=cache)
     phi_by_name: Dict[int, Dict[str, float]] = {}
     for c in avail:
         if c.client_id not in names_by_cid:
@@ -517,6 +522,9 @@ def run_federation(clients: List[Client], spec: DatasetSpec,
     if cfg.comm_impl not in ("fused", "reference"):
         raise ValueError(f"unknown comm_impl {cfg.comm_impl!r}: use "
                          '"fused" or "reference"')
+    if cfg.train_impl not in ("fused", "reference"):
+        raise ValueError(f"unknown train_impl {cfg.train_impl!r}: use "
+                         '"fused" or "reference"')
     qbits = cfg.quantize_bits if quantize_bits is None else quantize_bits
     if qbits < 32 and not 1 <= qbits <= 16:
         raise ValueError(f"quantize_bits={qbits} unsupported: use 1..16 "
@@ -588,12 +596,20 @@ def run_federation(clients: List[Client], spec: DatasetSpec,
                 continue
 
             # -- local learning ------------------------------------------
+            # one train-split prediction cache per round: filled by
+            # Stage-#1 fusion, reused by Shapley, dropped before deploy
+            # overwrites the encoders it was computed from
+            cache = None
+            if batched:
+                from repro.core.batched import PredictionCache
+                cache = PredictionCache()
             if backend == "sharded":
                 from repro.core.sharded import sharded_local_learning
-                sharded_local_learning(avail, cfg, rng, state)
+                sharded_local_learning(avail, cfg, rng, state, cache=cache)
             elif batched:
                 from repro.core.batched import batched_local_learning
-                batched_local_learning(avail, cfg, rng, store=store)
+                batched_local_learning(avail, cfg, rng, store=store,
+                                       cache=cache)
             else:
                 for c in avail:
                     c.train_encoders(cfg.local_epochs, cfg.lr_encoder,
@@ -607,7 +623,8 @@ def run_federation(clients: List[Client], spec: DatasetSpec,
 
             # -- joint selection (§3.2 + §3.3, shared with async) ---------
             choices, selected, round_shapley = _joint_selection(
-                avail, state, cfg, rng, t, qbits, batched, store)
+                avail, state, cfg, rng, t, qbits, batched, store,
+                cache=cache)
 
             # -- upload + server aggregation (Eq. 21, §4.10 uplink) -------
             by_id = {c.client_id: c for c in clients}

@@ -171,7 +171,8 @@ def run_async_federation(clients: List[Client], spec, cfg, *,
     the run — plus per-cycle ``flushes`` and deadline-``dropped`` ids)."""
     from repro.core.rounds import (RoundRecord, RunHistory, _joint_selection,
                                    aggregate_uploads)
-    from repro.core.batched import (batched_evaluate, batched_fusion_stage,
+    from repro.core.batched import (PredictionCache, batched_evaluate,
+                                    batched_fusion_stage,
                                     batched_local_learning)
 
     if cfg.recency_unit == "time" and cfg.selection_impl != "engine":
@@ -238,7 +239,10 @@ def run_async_federation(clients: List[Client], spec, cfg, *,
                 # at flush time is measured against this version
                 state.model_version[state.row_of[c.client_id]] = \
                     server_version
-            batched_local_learning(avail, cfg, rng, store=store)
+            # per-cycle train-split prediction cache (Stage-#1 fills it,
+            # Shapley reuses it; dropped before the flushes deploy)
+            cache = PredictionCache()
+            batched_local_learning(avail, cfg, rng, store=store, cache=cache)
             for c in avail:                 # mirror ℓ_m^k into the state
                 k = state.row_of[c.client_id]
                 for m, v in c.losses.items():
@@ -254,7 +258,7 @@ def run_async_federation(clients: List[Client], spec, cfg, *,
             choices, selected, round_shapley = _joint_selection(
                 avail, state, cfg, rng, t, qbits, True, store,
                 recency_matrix=recency_matrix,
-                client_staleness=client_staleness)
+                client_staleness=client_staleness, cache=cache)
 
             # -- schedule completions ------------------------------------
             for c in avail:

@@ -279,13 +279,42 @@ def _epoch_program(mesh: Mesh, lr: float):
                              out_specs=(spec, spec)))
 
 
+@functools.lru_cache(maxsize=None)
+def _fused_round_program(mesh: Mesh, lr: float):
+    """``fused_encoder_round``'s body under ``shard_map``: each device runs
+    all E epochs over its own rows in ONE program, with the resident param
+    shard donated (``donate_argnums``) so the bucket updates in place.
+    Inputs carry an epoch axis — xs [size, E, S, B, ...] — and the program
+    returns (params, final-epoch losses [size, S]), exactly E chained
+    :func:`_epoch_program` launches in one dispatch."""
+    def body(params, xs, ys, ws):
+        def client_round(p, ex, ey, ew):
+            def epoch(pp, xyw):
+                def step(q, s):
+                    x, y, w = s
+                    loss, g = jax.value_and_grad(masked_encoder_loss)(
+                        q, x, y, w)
+                    return jax.tree.map(lambda a, b: a - lr * b, q, g), loss
+                return jax.lax.scan(step, pp, xyw)
+            pe, losses = jax.lax.scan(epoch, p, (ex, ey, ew))
+            return pe, losses[-1]
+        return jax.vmap(client_round)(params, xs, ys, ws)
+
+    spec = client_spec()
+    return jax.jit(shard_map(body, mesh=mesh,
+                             in_specs=(spec, spec, spec, spec),
+                             out_specs=(spec, spec)), donate_argnums=(0,))
+
+
 def _train_encoder_bucket(state: ShardedFederationState, bucket, plan_of,
                           cfg) -> None:
     """One resident bucket's encoder phase, full padded stack.
 
     Only clients in ``plan_of`` (this round's available cohort) get real
     sample masks; every other slot — absent client or padding — trains as
-    an exact no-op and keeps its params bit-identical."""
+    an exact no-op and keeps its params bit-identical.
+    ``cfg.train_impl="fused"`` dispatches one donated E-epoch program;
+    ``"reference"`` keeps the per-epoch chain."""
     from repro.core.batched import num_steps, padded_perm_indices
     B, E = cfg.batch_size, cfg.local_epochs
     live = []                               # (slot, client, modality, plan)
@@ -315,19 +344,40 @@ def _train_encoder_bucket(state: ShardedFederationState, bucket, plan_of,
         ns[s] = c.train.num_samples
     gather = np.arange(size)[:, None]
     sharding = jax.sharding.NamedSharding(state.mesh, client_spec())
-    program = _epoch_program(state.mesh, float(cfg.lr_encoder))
     params, le = bucket.params, None
-    for e in range(E):
-        for s, _, m, p in live:
-            perms[s] = p.encoder_perms[m][e]
-        idx, w = padded_perm_indices(perms, ns, steps, B)
-        xe = x[gather, idx].reshape(size, steps, B, *x.shape[2:])
-        ye = y[gather, idx].reshape(size, steps, B)
-        ws = w.reshape(size, steps, B)
+    if getattr(cfg, "train_impl", "fused") == "fused":
+        idx_w = []
+        for e in range(E):
+            for s, _, m, p in live:
+                perms[s] = p.encoder_perms[m][e]
+            idx_w.append(padded_perm_indices(perms, ns, steps, B))
+        idx = np.stack([iw[0] for iw in idx_w], axis=1)      # [size, E, L]
+        w = np.stack([iw[1] for iw in idx_w], axis=1)
+        xe = x[gather[:, None], idx].reshape(size, E, steps, B, *x.shape[2:])
+        ye = y[gather[:, None], idx].reshape(size, E, steps, B)
+        ws = w.reshape(size, E, steps, B)
+        program = _fused_round_program(state.mesh, float(cfg.lr_encoder))
+        hostsync.record_dispatch()
+        # the resident shard is donated: the bucket updates in place and
+        # the old `params` buffers are consumed by the dispatch
         params, le = program(params,
                              jax.device_put(xe, sharding),
                              jax.device_put(ye, sharding),
                              jax.device_put(ws, sharding))
+    else:
+        program = _epoch_program(state.mesh, float(cfg.lr_encoder))
+        for e in range(E):
+            for s, _, m, p in live:
+                perms[s] = p.encoder_perms[m][e]
+            idx, w = padded_perm_indices(perms, ns, steps, B)
+            xe = x[gather, idx].reshape(size, steps, B, *x.shape[2:])
+            ye = y[gather, idx].reshape(size, steps, B)
+            ws = w.reshape(size, steps, B)
+            hostsync.record_dispatch()
+            params, le = program(params,
+                                 jax.device_put(xe, sharding),
+                                 jax.device_put(ye, sharding),
+                                 jax.device_put(ws, sharding))
     bucket.params = params
     last = hostsync.fetch(le).astype(np.float64)   # one fetch per bucket
     for s, c, m, _ in live:
@@ -336,7 +386,8 @@ def _train_encoder_bucket(state: ShardedFederationState, bucket, plan_of,
 
 
 def sharded_local_learning(avail, cfg, rng: np.random.Generator,
-                           state: ShardedFederationState) -> None:
+                           state: ShardedFederationState,
+                           cache=None) -> None:
     """Algorithm 1's Local Learning on the sharded population.
 
     Draws the loop-order permutation plan first (the backends' RNG-parity
@@ -357,7 +408,10 @@ def sharded_local_learning(avail, cfg, rng: np.random.Generator,
                                 [plans[i].fusion_perms for i in idxs],
                                 epochs=cfg.local_epochs, lr=cfg.lr_fusion,
                                 batch_size=cfg.batch_size,
-                                store=state.store)
+                                store=state.store,
+                                train_impl=getattr(cfg, "train_impl",
+                                                   "fused"),
+                                cache=cache)
 
 
 # ---------------------------------------------------------------------------

@@ -8,7 +8,9 @@ Shapley estimation on CPU-class clients, which is a fully-vectorized jnp
 batched fusion forward (see DESIGN.md §6). These kernels serve the assigned
 architectures' hot paths — attention, RG-LRU scan, mLSTM scan — plus the
 federation's §4.10 communication hot path (comm.py: fused quantize+pack
-uplink and dequantize+weight+reduce downlink).
+uplink and dequantize+weight+reduce downlink) and its local-training hot
+path (train.py: donated multi-epoch masked-SGD round programs and the
+one-kernel fusion-MLP SGD step).
 """
 from jax.experimental.pallas import tpu as _pltpu
 
@@ -22,8 +24,11 @@ from repro.kernels.comm import (dequantize_weight_reduce, payload_nbytes,
                                 reduce_packed_population)
 from repro.kernels.ops import (flash_attention, mlstm_scan, rglru_scan,
                                use_pallas)
+from repro.kernels.train import (fused_encoder_round, fused_fusion_round,
+                                 fusion_sgd_step)
 
-__all__ = ["dequantize_weight_reduce", "flash_attention", "mlstm_scan",
-           "payload_nbytes", "quantize_pack", "quantize_pack_population",
-           "quantize_pack_population_ef", "reduce_packed_population",
-           "rglru_scan", "use_pallas"]
+__all__ = ["dequantize_weight_reduce", "flash_attention",
+           "fused_encoder_round", "fused_fusion_round", "fusion_sgd_step",
+           "mlstm_scan", "payload_nbytes", "quantize_pack",
+           "quantize_pack_population", "quantize_pack_population_ef",
+           "reduce_packed_population", "rglru_scan", "use_pallas"]

@@ -7,6 +7,7 @@ the same math:
 - mLSTM chunk scan  → ``repro.models.ssm.mlstm_chunked`` (chunkwise jnp)
 - comm uplink       → per-row ``quantize_tensor`` + ``pack_codes`` (§4.10)
 - comm downlink     → unpack, dequantize the full [K, n] stack, weighted mean
+- fusion SGD step   → jitted manual softmax-CE backward + SGD update
 """
 from __future__ import annotations
 
@@ -78,6 +79,43 @@ def quantize_pack_ref(x, bits: int):
         codes, scale, zero = quantize_tensor(row, bits)
         return pack_codes(codes, bits), scale, zero
     return jax.jit(jax.vmap(one))(x.reshape(x.shape[0], -1))
+
+
+def fusion_sgd_step_ref(params, preds, mask, y, w, *, lr: float):
+    """Oracle for the fused fusion-MLP SGD step: the same hand-derived
+    softmax-CE backward the kernel runs, written in plain jnp and jitted so
+    both execute through XLA on this backend — the kernel must match
+    bit-for-bit. ``tests/test_train_fused.py`` separately pins this closed
+    form against the autodiff step at float tolerance.
+
+    params: {"w1","b1","w2","b2"} with leading K axis; preds: [K, B, M, C];
+    mask: [K, M]; y: [K, B]; w: [K, B]. Returns (params, loss [K])."""
+    def one(p, bp, mk, by, bw):
+        bb, mm, cc = bp.shape
+        x = jnp.concatenate(
+            [(bp * mk[None, :, None]).reshape(bb, mm * cc),
+             jnp.broadcast_to(mk[None], (bb, mm))], axis=-1)
+        z1 = x @ p["w1"] + p["b1"]
+        h = jnp.maximum(z1, 0.0)
+        logits = h @ p["w2"] + p["b2"]
+        logp = jax.nn.log_softmax(logits)
+        onehot = (by[:, None] == jax.lax.broadcasted_iota(
+            jnp.int32, (bb, cc), 1)).astype(jnp.float32)
+        ce = -jnp.sum(onehot * logp, axis=-1)
+        denom = jnp.maximum(jnp.sum(bw), 1.0)
+        loss = jnp.sum(bw * ce) / denom
+        dlogits = (jnp.exp(logp) - onehot) * (bw / denom)[:, None]
+        dw2 = h.T @ dlogits
+        db2 = jnp.sum(dlogits, axis=0)
+        dh = (dlogits @ p["w2"].T) * (z1 > 0.0).astype(jnp.float32)
+        dw1 = x.T @ dh
+        db1 = jnp.sum(dh, axis=0)
+        return {"w1": p["w1"] - lr * dw1, "b1": p["b1"] - lr * db1,
+                "w2": p["w2"] - lr * dw2, "b2": p["b2"] - lr * db2}, loss
+    return jax.jit(jax.vmap(one))(
+        jax.tree.map(lambda l: l.astype(jnp.float32), params),
+        preds.astype(jnp.float32), mask.astype(jnp.float32),
+        y.astype(jnp.int32), w.astype(jnp.float32))
 
 
 def dequantize_weight_reduce_ref(packed, scale, zero, weights, *,

@@ -1,0 +1,201 @@
+"""Fused local-training hot path: masked-SGD round programs with donated
+resident buffers, plus a one-kernel fusion-MLP SGD step.
+
+The reference trainer (``repro.core.batched``) dispatches Local Learning as
+a chain of separate jitted programs — one ``masked_batched_epoch`` /
+``masked_fusion_epoch`` launch per epoch per bucket — and every launch
+re-reads and re-writes the whole ``[K, ...]`` population param stack. This
+module collapses each bucket's epoch chain into ONE program:
+
+- :func:`fused_encoder_round` / :func:`fused_fusion_round` — all E epochs
+  of per-client masked SGD in a single jitted program,
+  ``scan(epochs) ∘ scan(steps)`` of exactly the reference step body
+  (``value_and_grad`` of the same masked loss, same update arithmetic), so
+  the fused trainer stays within float tolerance of the reference path and
+  selection outcomes never move. ``donate_argnums=(0,)`` donates the
+  resident param stack: XLA updates the population in place instead of
+  allocating a second copy per launch (the caller must treat its input
+  stack as consumed — ``tests/test_train_fused.py`` pins the deletion).
+  Encoder gradients (BPTT through the LSTM scan / conv) stay XLA autodiff
+  *inside* the fused program: for the encoders the win is dispatch
+  collapse + donation, not a hand-written backward.
+- :func:`fusion_sgd_step_pallas` — the fusion MLP's masked-SGD step as ONE
+  Pallas kernel per client: forward, closed-form softmax-CE backward, and
+  the parameter update in a single pass, gated by both the [M] presence
+  mask and the [B] sample mask so padded lanes are exact no-ops. Runs in
+  ``interpret=True`` on CPU like the other kernels in this package and
+  compiles through Mosaic on TPU; :func:`fusion_sgd_step` routes through
+  it when ``use_pallas()`` and otherwise falls back to the XLA autodiff
+  step. The jitted manual-backward oracle lives in ``kernels/ref.py``
+  (``fusion_sgd_step_ref``); the kernel must match it bit-for-bit and the
+  oracle must match autodiff to float tolerance.
+
+Parity contract (pinned in ``tests/test_train_fused.py``): fused round
+programs ≡ the reference per-epoch chain at 1e-5 on params with identical
+final-epoch losses to float tolerance; kernel ≡ oracle bit-identical over
+odd shapes; ledger/selection outcomes of a fused run ≡ a reference run
+exactly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.encoders import masked_encoder_loss
+from repro.core.fusion import masked_fusion_loss
+
+__all__ = ["fused_encoder_round", "fused_fusion_round", "fusion_sgd_step",
+           "fusion_sgd_step_pallas"]
+
+
+# ---------------------------------------------------------------------------
+# fused multi-epoch round programs (the production path, all backends)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("lr",), donate_argnums=(0,))
+def fused_encoder_round(params, xs, ys, ws, lr: float):
+    """All E encoder epochs for one bucket in ONE donated program.
+
+    params: pytree with leading K axis (donated — the caller's stack is
+    consumed); xs: [K, E, S, B, ...]; ys/ws: [K, E, S, B] with 0/1 sample
+    masks. Returns (new params, final-epoch per-step losses [K, S]) — the
+    same pair E chained ``masked_batched_epoch`` calls produce, in one
+    launch."""
+    def client_round(p, ex, ey, ew):
+        def epoch(pp, xyw):
+            def step(q, s):
+                x, y, w = s
+                loss, g = jax.value_and_grad(masked_encoder_loss)(q, x, y, w)
+                return jax.tree.map(lambda a, b: a - lr * b, q, g), loss
+            return jax.lax.scan(step, pp, xyw)
+        pe, losses = jax.lax.scan(epoch, p, (ex, ey, ew))   # losses [E, S]
+        return pe, losses[-1]
+
+    return jax.vmap(client_round)(params, xs, ys, ws)
+
+
+@functools.partial(jax.jit, static_argnames=("lr",), donate_argnums=(0,))
+def fused_fusion_round(params, preds, mask, ys, ws, lr: float):
+    """All E fusion epochs for one bucket in ONE donated program.
+
+    params: pytree with leading K axis (donated); preds: [K, E, S, B, M, C]
+    per-epoch shuffled prediction schedules; mask: [K, M] presence;
+    ys/ws: [K, E, S, B]."""
+    def client_round(p, ep, mk, ey, ew):
+        def epoch(pp, pyw):
+            def step(q, s):
+                bp, y, w = s
+                loss, g = jax.value_and_grad(masked_fusion_loss)(
+                    q, bp, mk, y, w)
+                return jax.tree.map(lambda a, b: a - lr * b, q, g), loss
+            return jax.lax.scan(step, pp, pyw)
+        pe, losses = jax.lax.scan(epoch, p, (ep, ey, ew))
+        return pe, losses[-1]
+
+    return jax.vmap(client_round)(params, preds, mask, ys, ws)
+
+
+# ---------------------------------------------------------------------------
+# Pallas fusion-MLP SGD step (interpret=True on CPU; Mosaic on TPU)
+# ---------------------------------------------------------------------------
+
+def _fusion_sgd_kernel(w1_ref, b1_ref, w2_ref, b2_ref, p_ref, m_ref, y_ref,
+                       sw_ref, ow1_ref, ob1_ref, ow2_ref, ob2_ref, loss_ref,
+                       *, lr: float):
+    """One client per grid step: forward, closed-form backward, update.
+
+    The backward is the hand-derived softmax-CE chain — dlogits folds the
+    normalized sample mask, so padded rows (w = 0) contribute neither loss
+    nor gradient and a fully-padded step is an exact no-op update."""
+    w1 = w1_ref[0].astype(jnp.float32)                  # [in_dim, H]
+    b1 = b1_ref[0].astype(jnp.float32)                  # [H]
+    w2 = w2_ref[0].astype(jnp.float32)                  # [H, C]
+    b2 = b2_ref[0].astype(jnp.float32)                  # [C]
+    preds = p_ref[0].astype(jnp.float32)                # [B, M, C]
+    mk = m_ref[0].astype(jnp.float32)                   # [M]
+    y = y_ref[0]                                        # [B] int32
+    sw = sw_ref[0].astype(jnp.float32)                  # [B]
+    bb, mm, cc = preds.shape
+
+    x = jnp.concatenate([(preds * mk[None, :, None]).reshape(bb, mm * cc),
+                         jnp.broadcast_to(mk[None], (bb, mm))], axis=-1)
+    z1 = x @ w1 + b1
+    h = jnp.maximum(z1, 0.0)
+    logits = h @ w2 + b2
+    logp = jax.nn.log_softmax(logits)
+    onehot = (y[:, None] == lax.broadcasted_iota(jnp.int32, (bb, cc), 1)
+              ).astype(jnp.float32)
+    ce = -jnp.sum(onehot * logp, axis=-1)
+    denom = jnp.maximum(jnp.sum(sw), 1.0)
+    loss_ref[0, 0] = jnp.sum(sw * ce) / denom
+
+    dlogits = (jnp.exp(logp) - onehot) * (sw / denom)[:, None]
+    dw2 = h.T @ dlogits
+    db2 = jnp.sum(dlogits, axis=0)
+    dh = (dlogits @ w2.T) * (z1 > 0.0).astype(jnp.float32)
+    dw1 = x.T @ dh
+    db1 = jnp.sum(dh, axis=0)
+    ow1_ref[0] = w1 - lr * dw1
+    ob1_ref[0] = b1 - lr * db1
+    ow2_ref[0] = w2 - lr * dw2
+    ob2_ref[0] = b2 - lr * db2
+
+
+def fusion_sgd_step_pallas(params, preds, mask, y, w, *, lr: float,
+                           interpret: bool = True):
+    """Fused masked-SGD step for a stacked fusion-MLP population.
+
+    params: {"w1" [K, in_dim, H], "b1" [K, H], "w2" [K, H, C], "b2" [K, C]};
+    preds: [K, B, M, C]; mask: [K, M]; y: [K, B] int32; w: [K, B] sample
+    mask. Returns (updated params, per-client loss [K]) — bit-identical to
+    ``ref.fusion_sgd_step_ref``."""
+    kk, bb, mm, cc = preds.shape
+    in_dim, hh = params["w1"].shape[1:]
+    f32 = jnp.float32
+    one = lambda *t: pl.BlockSpec((1,) + t, lambda k: (k,) + (0,) * len(t))
+    nw1, nb1, nw2, nb2, loss = pl.pallas_call(
+        functools.partial(_fusion_sgd_kernel, lr=float(lr)),
+        grid=(kk,),
+        in_specs=[one(in_dim, hh), one(hh), one(hh, cc), one(cc),
+                  one(bb, mm, cc), one(mm), one(bb), one(bb)],
+        out_specs=[one(in_dim, hh), one(hh), one(hh, cc), one(cc), one(1)],
+        out_shape=[jax.ShapeDtypeStruct((kk, in_dim, hh), f32),
+                   jax.ShapeDtypeStruct((kk, hh), f32),
+                   jax.ShapeDtypeStruct((kk, hh, cc), f32),
+                   jax.ShapeDtypeStruct((kk, cc), f32),
+                   jax.ShapeDtypeStruct((kk, 1), f32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(params["w1"], params["b1"], params["w2"], params["b2"],
+      preds, mask, y.astype(jnp.int32), w)
+    return {"w1": nw1, "b1": nb1, "w2": nw2, "b2": nb2}, loss[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("lr",))
+def _fusion_sgd_step_xla(params, preds, mask, y, w, lr: float):
+    """XLA autodiff fallback: the reference per-client step, vmapped."""
+    def one(p, bp, mk, by, bw):
+        loss, g = jax.value_and_grad(masked_fusion_loss)(p, bp, mk, by, bw)
+        return jax.tree.map(lambda a, b: a - lr * b, p, g), loss
+    return jax.vmap(one)(params, preds, mask, y, w)
+
+
+def fusion_sgd_step(params, preds, mask, y, w, *, lr: float,
+                    use_kernel: Optional[bool] = None
+                    ) -> Tuple[dict, jnp.ndarray]:
+    """Public fused step: Pallas on TPU, XLA autodiff elsewhere (override
+    with ``use_kernel``). Same (params, loss [K]) contract either way."""
+    from repro.kernels.ops import _interpret, use_pallas
+    if use_kernel is None:
+        use_kernel = use_pallas()
+    if use_kernel:
+        return fusion_sgd_step_pallas(params, preds, mask, y, w, lr=lr,
+                                      interpret=_interpret())
+    return _fusion_sgd_step_xla(params, preds, mask, y, w, lr)

@@ -14,10 +14,11 @@ module meters the programs the backends actually run:
   ``benchmarks/bench_quantized_round.py`` reports achieved
   (``repro.core.hostsync.bytes_moved``) against these bounds.
 - :func:`sharded_round_programs` — the sharded backend's per-round
-  ``shard_map`` programs (local-SGD epoch, full-precision psum, quantized
-  psum in both impls), returned with representative abstract inputs so
-  ``benchmarks/roofline_federated.py`` can lower them on a forced-D mesh
-  and parse collective bytes from the compiled HLO.
+  ``shard_map`` programs (per-epoch local-SGD, the fused all-epochs
+  round program with its donated param stack, full-precision psum,
+  quantized psum in both impls), returned with representative abstract
+  inputs so ``benchmarks/roofline_federated.py`` can lower them on a
+  forced-D mesh and parse collective bytes from the compiled HLO.
 """
 from __future__ import annotations
 
@@ -100,26 +101,36 @@ def quantized_uplink_roofline(template, k: int, bits: int) -> Dict:
 
 def sharded_round_programs(mesh, *, k: int, steps: int, batch: int,
                            feat: Tuple[int, ...], template, lr: float,
-                           bits: int) -> Dict:
+                           bits: int, epochs: int = 2) -> Dict:
     """The sharded backend's per-round programs + abstract inputs.
 
     Returns ``{name: (program, args)}`` where ``program`` is the exact
     lru-cached ``jit(shard_map(...))`` object ``run_federation`` with
     ``backend="sharded"`` dispatches, and ``args`` are ShapeDtypeStructs
     at a representative round shape — ready for ``.lower(*args)`` (HLO
-    collective parsing) and ``count_step_flops(program, *args)``."""
+    collective parsing) and ``count_step_flops(program, *args)``.
+
+    ``epoch`` is the reference trainer's single-epoch program;
+    ``epoch_fused`` is the ``train_impl="fused"`` all-``epochs`` round
+    program (its first argument — the resident param stack — is donated,
+    which the lowering's ``args_info`` records)."""
     from repro.core.sharded import (_aggregate_program,
                                     _aggregate_quantized_fused_program,
                                     _aggregate_quantized_program,
-                                    _epoch_program)
+                                    _epoch_program, _fused_round_program)
     params = stacked_abstract(template, k)
     f32 = jnp.float32
     xs = jax.ShapeDtypeStruct((k, steps, batch) + tuple(feat), f32)
     ys = jax.ShapeDtypeStruct((k, steps, batch), jnp.int32)
     ws = jax.ShapeDtypeStruct((k, steps, batch), f32)
+    exs = jax.ShapeDtypeStruct((k, epochs, steps, batch) + tuple(feat), f32)
+    eys = jax.ShapeDtypeStruct((k, epochs, steps, batch), jnp.int32)
+    ews = jax.ShapeDtypeStruct((k, epochs, steps, batch), f32)
     w = jax.ShapeDtypeStruct((k,), f32)
     return {
         "epoch": (_epoch_program(mesh, lr), (params, xs, ys, ws)),
+        "epoch_fused": (
+            _fused_round_program(mesh, lr), (params, exs, eys, ews)),
         "aggregate_full": (_aggregate_program(mesh), (params, w)),
         "aggregate_q_reference": (
             _aggregate_quantized_program(mesh, bits), (params, w)),

@@ -25,9 +25,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro.analysis.framework import (AGGREGATION, COLLECTIVE, DECISION,
                                       TRAINING, ProgramSpec, run_passes)
-from repro.analysis.passes import (CollectiveAuditPass, HostTransferPass,
-                                   MaskSafetyPass, PrecisionPass,
-                                   default_passes)
+from repro.analysis.passes import (CollectiveAuditPass, DonationPass,
+                                   HostTransferPass, MaskSafetyPass,
+                                   PrecisionPass, default_passes)
 from repro.core import hostsync
 
 pytestmark = pytest.mark.lint
@@ -159,6 +159,47 @@ def test_unguarded_rsqrt_is_flagged():
     good = _spec("ctl/rsqrt", TRAINING,
                  lambda a: jax.lax.rsqrt(jnp.maximum(a, 1e-6)), x)
     assert MaskSafetyPass().check(good) == []
+
+
+def test_undonated_resident_stack_is_flagged():
+    """Satellite: a fused round program that loses its donate_argnums —
+    re-jitted without the flag — must fail the donation audit."""
+    x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+
+    def prog(meta):
+        return _spec("inj/undonated", TRAINING, lambda p, g: p - 0.1 * g,
+                     x, x, meta=meta)
+
+    bad = DonationPass().check(prog(
+        {"donation": {"resident": (0,), "donated": (False, False)}}))
+    assert len(bad) == 1 and "NOT donated" in bad[0].message
+    assert "donate_argnums" in bad[0].message
+    good = DonationPass().check(prog(
+        {"donation": {"resident": (0,), "donated": (True, False)}}))
+    assert good == []
+    # programs without a donation contract (the per-epoch reference
+    # chain) are out of scope, as are non-training roles
+    assert DonationPass().check(prog({})) == []
+    agg = ProgramSpec("ctl/agg", "test", "n/a", AGGREGATION,
+                      jax.make_jaxpr(lambda p: p * 2)(x),
+                      meta={"donation": {"resident": (0,),
+                                         "donated": (False,)}})
+    assert DonationPass().check(agg) == []
+
+
+def test_real_fused_programs_record_donation():
+    """The lowering-derived meta on the real fused specs proves the
+    resident stacks ARE donated, for every backend including the sharded
+    shard_map form."""
+    from repro.analysis.programs import round_programs
+    fused = [p for b in BACKENDS for p in round_programs(b, COMM_IMPL)
+             if "round_encoder_fused" in p.name
+             or "round_fusion_fused" in p.name]
+    assert len(fused) >= 2 * len(BACKENDS)
+    for p in fused:
+        don = p.meta["donation"]
+        assert don["donated"][0] is True, p.name
+        assert DonationPass().check(p) == [], p.name
 
 
 def test_overbudget_psum_is_flagged():

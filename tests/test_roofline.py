@@ -155,7 +155,7 @@ class TestQuantizedUplinkRoofline:
         progs = sharded_round_programs(
             mesh, k=4, steps=2, batch=4, feat=(4, 3),
             template=template, lr=0.1, bits=4)
-        assert set(progs) == {"epoch", "aggregate_full",
+        assert set(progs) == {"epoch", "epoch_fused", "aggregate_full",
                               "aggregate_q_reference", "aggregate_q_fused"}
         for name, (prog, args) in progs.items():
             with mesh:

@@ -1,0 +1,308 @@
+"""Fused local-training path (``repro.kernels.train``) parity pinning.
+
+Four layers, mirroring ``test_comm_kernels``:
+
+1. **Kernel vs oracle (``kernels`` marker).** The Pallas one-kernel fusion
+   SGD step (interpret mode on CPU) must be bit-identical to the
+   ``ref.py`` manual-backward oracle over odd shapes, and the oracle must
+   match XLA autodiff at ≤1e-5; padded lanes and absent modalities are
+   exact no-ops.
+2. **Fused round programs vs the per-epoch chain.** ``fused_encoder_round``
+   / ``fused_fusion_round`` (all E epochs, one launch) must match E
+   chained ``masked_batched_epoch`` / ``masked_fusion_epoch`` calls at
+   ≤1e-5 with identical final-epoch losses — and must CONSUME their
+   donated param stack (use-after-donate is pinned as deleted, so a future
+   refactor cannot silently re-read a donated buffer).
+3. **Prediction cache.** One train-split encoder forward per (client,
+   round): the second ``_population_predictions`` consumer over a shared
+   round cache dispatches zero programs and returns identical blocks.
+4. **Full-round fused-vs-reference.** ``train_impl="fused"`` vs
+   ``"reference"`` through batched/engine/async (and sharded at D ∈ {1, 8}
+   via the ``multidevice`` tier), quantized uplink on: identical uploads,
+   ledgers, and accuracies, ≤1e-5 server encoders, and strictly fewer
+   local-training dispatches on the ``repro.core.hostsync`` counter.
+
+``REPRO_TRAIN_IMPL`` (fused|reference) selects the config default
+exercised by the smoke-round test; CI runs this module once per mode.
+"""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hostsync
+from repro.core.batched import (PredictionCache, _population_predictions,
+                                masked_batched_epoch, masked_fusion_epoch)
+from repro.core.encoders import init_encoder
+from repro.core.fusion import init_fusion
+from repro.core.rounds import MFedMCConfig, build_federation, run_federation
+from repro.kernels.ref import fusion_sgd_step_ref
+from repro.kernels.train import (_fusion_sgd_step_xla, fused_encoder_round,
+                                 fused_fusion_round, fusion_sgd_step,
+                                 fusion_sgd_step_pallas)
+
+TOL = 1e-5
+LR = 0.1
+TRAIN_IMPL = os.environ.get("REPRO_TRAIN_IMPL", "fused")
+
+# odd population/batch/modality/class sizes — nothing tile-aligned
+FUSION_SHAPES = ((3, 5, 3, 4), (1, 7, 2, 3), (5, 2, 4, 5))
+
+
+def _fusion_batch(k, b, m, c, seed=0):
+    keys = jax.random.split(jax.random.key(seed), 4)
+    params = jax.vmap(lambda kk: init_fusion(kk, m, c))(
+        jax.random.split(keys[0], k))
+    preds = jax.random.normal(keys[1], (k, b, m, c))
+    mask = (jax.random.uniform(keys[2], (k, m)) > 0.3).astype(jnp.float32)
+    y = jax.random.randint(keys[3], (k, b), 0, c)
+    w = (jax.random.uniform(keys[1], (k, b)) > 0.25).astype(jnp.float32)
+    return params, preds, mask, y, w
+
+
+def _tree_equal(a, b, err=""):
+    for ka in a:
+        np.testing.assert_array_equal(np.asarray(a[ka]), np.asarray(b[ka]),
+                                      err_msg=f"{err}{ka}")
+
+
+def _tree_close(a, b, atol=TOL, err=""):
+    la = jax.tree_util.tree_leaves_with_path(a)
+    lb = jax.tree_util.tree_leaves(b)
+    for (path, va), vb in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(va), np.asarray(vb),
+                                   atol=atol, rtol=0,
+                                   err_msg=f"{err}{jax.tree_util.keystr(path)}")
+
+
+# ---------------------------------------------------------------------------
+# layer 1: Pallas fusion SGD kernel vs oracle vs autodiff
+# ---------------------------------------------------------------------------
+
+@pytest.mark.kernels
+class TestFusionKernelVsOracle:
+    @pytest.mark.parametrize("shape", FUSION_SHAPES)
+    def test_kernel_bit_identical_to_oracle(self, shape):
+        params, preds, mask, y, w = _fusion_batch(*shape)
+        pr, lr_ = fusion_sgd_step_ref(params, preds, mask, y, w, lr=LR)
+        pk, lk = fusion_sgd_step_pallas(params, preds, mask, y, w, lr=LR,
+                                        interpret=True)
+        _tree_equal(pr, pk, err=f"{shape} ")
+        np.testing.assert_array_equal(np.asarray(lr_), np.asarray(lk))
+
+    @pytest.mark.parametrize("shape", FUSION_SHAPES)
+    def test_oracle_matches_autodiff(self, shape):
+        params, preds, mask, y, w = _fusion_batch(*shape)
+        pr, lr_ = fusion_sgd_step_ref(params, preds, mask, y, w, lr=LR)
+        pa, la = _fusion_sgd_step_xla(params, preds, mask, y, w, LR)
+        _tree_close(pr, pa, err=f"{shape} ")
+        np.testing.assert_allclose(np.asarray(lr_), np.asarray(la),
+                                   atol=TOL, rtol=0)
+
+    def test_fully_padded_client_is_exact_noop(self):
+        params, preds, mask, y, w = _fusion_batch(3, 5, 3, 4)
+        w = w.at[1].set(0.0)                      # client 1: all padding
+        pk, lk = fusion_sgd_step_pallas(params, preds, mask, y, w, lr=LR,
+                                        interpret=True)
+        for ka in params:
+            np.testing.assert_array_equal(np.asarray(pk[ka][1]),
+                                          np.asarray(params[ka][1]),
+                                          err_msg=ka)
+        assert float(lk[1]) == 0.0
+
+    def test_absent_modality_blind_to_its_predictions(self):
+        params, preds, mask, y, w = _fusion_batch(3, 5, 3, 4)
+        mask = mask.at[:, 2].set(0.0)
+        a = fusion_sgd_step_pallas(params, preds, mask, y, w, lr=LR,
+                                   interpret=True)
+        garbage = preds.at[:, :, 2].set(1e6)
+        b = fusion_sgd_step_pallas(params, garbage, mask, y, w, lr=LR,
+                                   interpret=True)
+        _tree_equal(a[0], b[0])
+        np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+    def test_dispatch_wrapper_both_routes_agree(self):
+        params, preds, mask, y, w = _fusion_batch(3, 5, 3, 4)
+        pk, lk = fusion_sgd_step(params, preds, mask, y, w, lr=LR,
+                                 use_kernel=True)
+        px, lx = fusion_sgd_step(params, preds, mask, y, w, lr=LR,
+                                 use_kernel=False)
+        _tree_close(pk, px)
+        np.testing.assert_allclose(np.asarray(lk), np.asarray(lx),
+                                   atol=TOL, rtol=0)
+
+
+# ---------------------------------------------------------------------------
+# layer 2: fused round programs vs the per-epoch chain + donation
+# ---------------------------------------------------------------------------
+
+def _enc_stack(k, feat=(6, 5), classes=3):
+    return jax.vmap(lambda kk: init_encoder(kk, feat, classes))(
+        jax.random.split(jax.random.key(7), k))
+
+
+def _enc_schedule(k=3, e=3, s=2, b=4, feat=(6, 5), classes=3, seed=1):
+    keys = jax.random.split(jax.random.key(seed), 3)
+    xs = jax.random.normal(keys[0], (k, e, s, b) + feat)
+    ys = jax.random.randint(keys[1], (k, e, s, b), 0, classes)
+    ws = (jax.random.uniform(keys[2], (k, e, s, b)) > 0.2).astype(
+        jnp.float32)
+    ws = ws.at[0, :, -1].set(0.0)          # client 0: fully-padded tail step
+    return xs, ys, ws
+
+
+class TestFusedRoundPrograms:
+    def test_encoder_round_matches_epoch_chain(self):
+        k, e = 3, 3
+        xs, ys, ws = _enc_schedule(k=k, e=e)
+        p_ref = _enc_stack(k)
+        for ei in range(e):
+            p_ref, losses_ref = masked_batched_epoch(
+                p_ref, xs[:, ei], ys[:, ei], ws[:, ei], LR)
+        p_fused, losses = fused_encoder_round(_enc_stack(k), xs, ys, ws, LR)
+        _tree_close(p_fused, p_ref)
+        np.testing.assert_allclose(np.asarray(losses),
+                                   np.asarray(losses_ref), atol=TOL, rtol=0)
+
+    def test_fusion_round_matches_epoch_chain(self):
+        k, e, s, b, m, c = 3, 2, 2, 5, 3, 4
+        params, _, mask, _, _ = _fusion_batch(k, b, m, c)
+        keys = jax.random.split(jax.random.key(9), 3)
+        preds = jax.random.normal(keys[0], (k, e, s, b, m, c))
+        ys = jax.random.randint(keys[1], (k, e, s, b), 0, c)
+        ws = (jax.random.uniform(keys[2], (k, e, s, b)) > 0.2).astype(
+            jnp.float32)
+        p_ref = params
+        for ei in range(e):
+            p_ref, losses_ref = masked_fusion_epoch(
+                p_ref, preds[:, ei], mask, ys[:, ei], ws[:, ei], LR)
+        p_fused, losses = fused_fusion_round(
+            jax.tree.map(jnp.copy, params), preds, mask, ys, ws, LR)
+        _tree_close(p_fused, p_ref)
+        np.testing.assert_allclose(np.asarray(losses),
+                                   np.asarray(losses_ref), atol=TOL, rtol=0)
+
+    def test_donated_stack_is_consumed(self):
+        """Use-after-donate safety: the fused programs take ownership of
+        the resident stack — the caller's buffers are DELETED, so any
+        code path still holding the input must fail loudly, not read
+        stale memory."""
+        xs, ys, ws = _enc_schedule()
+        stack = _enc_stack(3)
+        fused_encoder_round(stack, xs, ys, ws, LR)
+        assert all(l.is_deleted() for l in jax.tree_util.tree_leaves(stack))
+
+    def test_reference_epoch_does_not_consume_its_input(self):
+        xs, ys, ws = _enc_schedule(e=1)
+        stack = _enc_stack(3)
+        masked_batched_epoch(stack, xs[:, 0], ys[:, 0], ws[:, 0], LR)
+        assert not any(l.is_deleted()
+                       for l in jax.tree_util.tree_leaves(stack))
+
+
+# ---------------------------------------------------------------------------
+# layers 3+4: prediction cache + full-round parity through real backends
+# ---------------------------------------------------------------------------
+
+def _run(backend, train_impl, bits=4, **cfg_kw):
+    base = dict(rounds=1, local_epochs=2, batch_size=8, seed=0,
+                modality_strategy="random", gamma=1, quantize_bits=bits,
+                train_impl=train_impl, background_size=12, eval_size=12)
+    base.update(cfg_kw)
+    cfg = MFedMCConfig(**base)
+    clients, spec = build_federation("ucihar", "iid", cfg=cfg, seed=0,
+                                     samples_per_client=16)
+    server = {}
+    hist = run_federation(clients, spec, cfg, server_encoders=server,
+                          backend=backend)
+    return server, hist, clients
+
+
+def _assert_server_match(se_a, se_b, atol=TOL):
+    assert set(se_a) == set(se_b)
+    for m in se_a:
+        for k in se_a[m]:
+            np.testing.assert_allclose(np.asarray(se_b[m][k]),
+                                       np.asarray(se_a[m][k]),
+                                       atol=atol, rtol=0,
+                                       err_msg=f"{m}/{k}")
+
+
+class TestPredictionCache:
+    def test_second_consumer_dispatches_zero_forwards(self):
+        """Stage-#1 fusion fills the round cache; the Shapley enumeration
+        re-reads the SAME train split — one encoder forward per (client,
+        round), not two."""
+        cfg = MFedMCConfig(rounds=1, seed=0)
+        clients, _ = build_federation("ucihar", "iid", cfg=cfg, seed=0,
+                                      samples_per_client=16)
+        datas = [c.train for c in clients]
+        cache = PredictionCache()
+        hostsync.reset()
+        first = _population_predictions(clients, datas, cache=cache)
+        assert hostsync.dispatches() > 0
+        assert len(cache) == len(clients)
+        hostsync.reset()
+        second = _population_predictions(clients, datas, cache=cache)
+        assert hostsync.dispatches() == 0, \
+            "cached train-split predictions must cost zero forwards"
+        np.testing.assert_array_equal(first, second)
+
+    def test_fused_round_dispatches_strictly_fewer_programs(self):
+        with hostsync.measuring() as m_f:
+            _run("batched", "fused")
+        with hostsync.measuring() as m_r:
+            _run("batched", "reference")
+        assert 0 < m_f.dispatches < m_r.dispatches
+        assert m_f.syncs == m_r.syncs
+
+
+class TestFullRoundTrainParity:
+    @pytest.mark.parametrize("backend", ("batched", "engine", "async"))
+    def test_fused_matches_reference(self, backend):
+        se_f, h_f, _ = _run(backend, "fused")
+        se_r, h_r, _ = _run(backend, "reference")
+        _assert_server_match(se_r, se_f)
+        assert h_f.records[0].uploads == h_r.records[0].uploads
+        assert h_f.records[0].accuracy == h_r.records[0].accuracy
+        assert h_f.records[0].comm_mb == h_r.records[0].comm_mb
+
+    def test_fused_matches_reference_full_precision(self):
+        se_f, h_f, _ = _run("batched", "fused", bits=32, rounds=2)
+        se_r, h_r, _ = _run("batched", "reference", bits=32, rounds=2)
+        _assert_server_match(se_r, se_f)
+        for rec_f, rec_r in zip(h_f.records, h_r.records):
+            assert rec_f.uploads == rec_r.uploads
+            assert rec_f.accuracy == rec_r.accuracy
+
+    def test_invalid_train_impl_rejected(self):
+        with pytest.raises(ValueError, match="train_impl"):
+            _run("batched", "fussed")
+
+    def test_env_selected_impl_smokes(self):
+        """CI runs this module under both REPRO_TRAIN_IMPL values; whatever
+        mode is selected must complete a round and count its training
+        dispatches."""
+        with hostsync.measuring() as m:
+            _, hist, _ = _run("batched", TRAIN_IMPL)
+        assert hist.records and hist.records[0].uploads
+        assert m.dispatches > 0
+
+
+class TestShardedTrainParity:
+    def test_sharded_d1_fused_matches_reference(self):
+        se_f, h_f, _ = _run("sharded", "fused", mesh_clients=1)
+        se_r, h_r, _ = _run("sharded", "reference", mesh_clients=1)
+        _assert_server_match(se_r, se_f)
+        assert h_f.records[0].uploads == h_r.records[0].uploads
+        assert h_f.records[0].accuracy == h_r.records[0].accuracy
+
+    @pytest.mark.multidevice
+    def test_sharded_d8_fused_matches_reference(self):
+        se_f, h_f, _ = _run("sharded", "fused", mesh_clients=8)
+        se_r, h_r, _ = _run("sharded", "reference", mesh_clients=8)
+        _assert_server_match(se_r, se_f)
+        assert h_f.records[0].uploads == h_r.records[0].uploads
