@@ -38,7 +38,8 @@ from typing import Dict, List
 import jax
 
 from benchmarks.bench_batched_round import synthetic_federation
-from benchmarks.common import Row, Timer, lint_stamp
+from benchmarks.common import (Row, Timer, interleaved_min, lint_stamp,
+                               phase_breakdown)
 from repro.core import hostsync
 from repro.core.rounds import MFedMCConfig, aggregate_uploads, run_federation
 from repro.roofline import quantized_uplink_roofline
@@ -90,14 +91,10 @@ def time_comm_path(K: int, bits: int, *, n: int = 48, reps: int = 7) -> Dict:
     for impl in ("fused", "reference"):
         with hostsync.measuring() as m:
             once(impl)
-        bytes_moved[impl] = m.bytes_moved
+        bytes_moved[impl] = m.as_dict()["bytes_moved"]
 
-    best = {"fused": float("inf"), "reference": float("inf")}
-    for _ in range(reps):
-        for impl in ("fused", "reference"):
-            t0 = time.perf_counter()
-            once(impl)
-            best[impl] = min(best[impl], time.perf_counter() - t0)
+    best = interleaved_min({impl: (lambda impl=impl: once(impl))
+                            for impl in ("fused", "reference")}, reps=reps)
 
     # K here is a power of two, so pad_uploads_pow2 is the identity and the
     # roofline shapes match the timed program exactly.
@@ -203,6 +200,8 @@ def main(argv=None) -> int:
         "results": results,
         "comm_path": comm_path,
         "lint": lint_stamp(("batched", "engine"), ("fused", "reference")),
+        "phase_breakdown": [phase_breakdown("engine", ci)
+                            for ci in ("fused", "reference")],
     }
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)

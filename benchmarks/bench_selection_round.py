@@ -35,7 +35,8 @@ import time
 from typing import List, Tuple
 
 from benchmarks.bench_batched_round import synthetic_federation
-from benchmarks.common import Row, Timer, lint_stamp
+from benchmarks.common import (Row, Timer, interleaved_min, lint_stamp,
+                               phase_breakdown)
 from repro.core import hostsync
 from repro.core.rounds import MFedMCConfig, run_federation
 
@@ -74,14 +75,24 @@ def time_paths(K: int, *, n: int = 48, repeats: int = 1) -> dict:
     the measured repeats INTERLEAVE the paths so box-level noise (shared
     CPU, throttling windows) hits every path alike instead of biasing
     whichever ran during the slow window."""
+    out = {}
     for path in PATHS:
-        _one_run(K, path, n)                       # warm/compile
-    out = {p: {"seconds": float("inf"), "host_syncs": 0} for p in PATHS}
-    for _ in range(max(repeats, 1)):
-        for path in PATHS:
-            sec, syncs = _one_run(K, path, n)
-            out[path]["seconds"] = min(out[path]["seconds"], sec)
-            out[path]["host_syncs"] = syncs
+        _, syncs = _one_run(K, path, n)            # warm/compile + syncs
+        out[path] = {"seconds": 0.0, "host_syncs": syncs}
+
+    def timed(args):
+        clients, spec, cfg, backend = args
+        run_federation(clients, spec, cfg, backend=backend)
+
+    best = interleaved_min(
+        {p: timed for p in PATHS},
+        prepare={p: (lambda p=p: (*synthetic_federation(K, n=n),
+                                  _cfg(PATHS[p]["selection_impl"]),
+                                  PATHS[p]["backend"]))
+                 for p in PATHS},
+        reps=max(repeats, 1))
+    for p in PATHS:
+        out[p]["seconds"] = best[p] / ROUNDS_TIMED
     return out
 
 
@@ -153,6 +164,7 @@ def main(argv=None) -> int:
         },
         "results": results,
         "lint": lint_stamp(("batched", "engine"), ("fused",)),
+        "phase_breakdown": [phase_breakdown("engine")],
     }
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)

@@ -26,7 +26,6 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import time
 
 
 def main(argv=None) -> int:
@@ -51,8 +50,9 @@ def main(argv=None) -> int:
     from benchmarks.bench_batched_round import synthetic_federation
     from repro.core import hostsync
     from repro.core.rounds import MFedMCConfig, run_federation
+    from repro.telemetry.timer import interleaved_min
 
-    def one_run(D: int, K: int):
+    def build(D: int, K: int):
         clients, spec = synthetic_federation(K, n=args.samples)
         cfg = MFedMCConfig(rounds=args.rounds, local_epochs=args.epochs,
                            batch_size=16, seed=0,
@@ -60,20 +60,24 @@ def main(argv=None) -> int:
                            client_strategy="low_loss", gamma=1,
                            background_size=16, eval_size=16,
                            mesh_clients=D)
-        hostsync.reset()
-        t0 = time.perf_counter()
-        run_federation(clients, spec, cfg, backend="sharded")
-        sec = (time.perf_counter() - t0) / args.rounds
-        return sec, hostsync.count() // args.rounds
+        return clients, spec, cfg
+
+    def warm_and_count(D: int, K: int) -> int:
+        clients, spec, cfg = build(D, K)
+        with hostsync.measuring() as m:
+            run_federation(clients, spec, cfg, backend="sharded")
+        return m.as_dict()["host_syncs"] // args.rounds
 
     results = []
     for D in meshes:
         K = D * args.k_per_device
-        one_run(D, K)                                   # warm/compile
-        best, syncs = float("inf"), 0
-        for _ in range(max(args.repeats, 1)):
-            sec, syncs = one_run(D, K)
-            best = min(best, sec)
+        syncs = warm_and_count(D, K)                    # warm/compile
+        label = f"mesh{D}"
+        best = interleaved_min(
+            {label: (lambda a: run_federation(a[0], a[1], a[2],
+                                              backend="sharded"))},
+            prepare={label: (lambda D=D, K=K: build(D, K))},
+            reps=max(args.repeats, 1))[label] / args.rounds
         results.append({"mesh": D, "K": K,
                         "seconds_per_round": round(best, 4),
                         "host_syncs_per_round": syncs})

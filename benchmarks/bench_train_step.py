@@ -29,7 +29,8 @@ import time
 from typing import Dict, List
 
 from benchmarks.bench_batched_round import synthetic_federation
-from benchmarks.common import Row, Timer, lint_stamp
+from benchmarks.common import (Row, interleaved_min, lint_stamp,
+                               phase_breakdown)
 from repro.core import hostsync
 from repro.core.rounds import MFedMCConfig, run_federation
 
@@ -67,17 +68,16 @@ def time_train_round(K: int, *, n: int = 48, reps: int = 5,
     for impl in IMPLS:
         with hostsync.measuring() as m:
             once(impl)
-        counters[impl] = {"dispatches": m.dispatches,
-                          "host_syncs": m.syncs}
+        counters[impl] = m.as_dict()
 
-    best = {impl: float("inf") for impl in IMPLS}
-    for _ in range(reps):
-        for impl in IMPLS:
-            clients, spec = synthetic_federation(K, n=n)
-            cfg = _cfg(impl)
-            with Timer() as t:
-                run_federation(clients, spec, cfg, backend=backend)
-            best[impl] = min(best[impl], t.us / 1e6)
+    best = interleaved_min(
+        {impl: (lambda a: run_federation(a[0], a[1], a[2],
+                                         backend=backend))
+         for impl in IMPLS},
+        prepare={impl: (lambda impl=impl:
+                        (*synthetic_federation(K, n=n), _cfg(impl)))
+                 for impl in IMPLS},
+        reps=reps)
 
     return {
         "K": K,
@@ -139,6 +139,8 @@ def main(argv=None) -> int:
         },
         "results": results,
         "lint": lint_stamp(("batched",), ("fused",)),
+        "phase_breakdown": [phase_breakdown("batched", "fused", impl)
+                            for impl in IMPLS],
     }
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)

@@ -7,10 +7,13 @@ contract: ``us_per_call`` is wall-microseconds for the measured unit and
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 from typing import Any, Dict
 
+# the one shared timing implementation (every bench's interleaved
+# min-of-reps loop goes through interleaved_min; Timer re-exported for
+# one-shot wall windows)
+from repro.telemetry.timer import Timer, interleaved_min  # noqa: F401
 from repro.core.rounds import MFedMCConfig
 
 
@@ -46,13 +49,28 @@ def samples_for(fast: bool) -> int:
     return 48 if fast else 96
 
 
-class Timer:
-    def __enter__(self):
-        self.t0 = time.perf_counter()
-        return self
-
-    def __exit__(self, *a):
-        self.us = (time.perf_counter() - self.t0) * 1e6
+def phase_breakdown(backend: str = "engine", comm_impl: str = "fused",
+                    train_impl: str = "fused",
+                    rounds: int = 2) -> Dict[str, Any]:
+    """Traced per-phase time/sync/byte/dispatch table of a seeded
+    mini-federation run, stamped into BENCH jsons so an artifact explains
+    *where* its round budget goes (and records that the trace reconciled
+    with the hostsync counters)."""
+    from repro import telemetry
+    from repro.analysis import budgets as budgets_mod
+    from repro.core.rounds import run_federation
+    clients, spec = budgets_mod.mini_federation()
+    cfg = budgets_mod.federation_config(comm_impl, rounds=rounds,
+                                        train_impl=train_impl)
+    tracer = telemetry.Tracer()
+    with telemetry.install(tracer):
+        run_federation(clients, spec, cfg, backend=backend)
+    return {
+        "backend": backend, "comm_impl": comm_impl,
+        "train_impl": train_impl,
+        "phases": telemetry.tracer_phase_table(tracer),
+        "reconciled": not telemetry.reconcile(tracer),
+    }
 
 
 def lint_stamp(backends, comm_impls) -> Dict[str, Any]:

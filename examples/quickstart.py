@@ -47,6 +47,11 @@ def main():
                          "quantize+pack and reduce-from-packed-codes "
                          "(repro.kernels.comm); reference = historical "
                          "quantize_population + aggregate_quantized")
+    ap.add_argument("--trace", default=None, metavar="DIR",
+                    help="write a per-phase trace of the run to DIR: "
+                         "trace.json (open in ui.perfetto.dev), "
+                         "spans.jsonl, metrics.jsonl; inspect with "
+                         "`python -m repro.telemetry.report DIR`")
     args = ap.parse_args()
 
     if args.mesh_clients > 1:
@@ -73,8 +78,18 @@ def main():
         comm_impl=args.comm_impl,
         seed=0,
     )
-    history = run_mfedmc(args.dataset, args.scenario, cfg, verbose=True,
-                         backend=args.backend, samples_per_client=48)
+    if args.trace:
+        from repro import telemetry
+        with telemetry.tracing(args.trace):
+            history = run_mfedmc(args.dataset, args.scenario, cfg,
+                                 verbose=True, backend=args.backend,
+                                 samples_per_client=48)
+        print(f"\ntrace written to {args.trace}/ — load "
+              f"{args.trace}/trace.json in https://ui.perfetto.dev or run "
+              f"`python -m repro.telemetry.report {args.trace}`")
+    else:
+        history = run_mfedmc(args.dataset, args.scenario, cfg, verbose=True,
+                             backend=args.backend, samples_per_client=48)
 
     print("\nround  accuracy  cumulative-MB")
     for r in history.records:

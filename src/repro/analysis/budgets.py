@@ -84,8 +84,7 @@ def measure(backend: str, comm_impl: str, *, bits: int = _BITS,
                             train_impl=train_impl)
     with hostsync.measuring() as m:
         run_federation(clients, spec, cfg, backend=backend)
-    return {"host_syncs": int(m.syncs), "bytes_moved": int(m.bytes_moved),
-            "dispatches": int(m.dispatches)}
+    return m.as_dict()
 
 
 def measure_all(backends: Tuple[str, ...] = ("batched", "engine", "async",

@@ -5,7 +5,7 @@
         --comm-impl fused --static-only
     PYTHONPATH=src python -m repro.analysis.lint --bless
 
-Three layers, strict to slow:
+Four layers, strict to slow:
 
 1. **static passes** (seconds) — host-transfer, precision, mask-safety,
    collective-audit over the traced programs of the selected backends,
@@ -17,7 +17,11 @@ Three layers, strict to slow:
    pinned ``budgets.json`` manifest;
 3. **recompile audit** — warms each backend's jit caches with a real
    federation, then asserts an identically-seeded re-run compiles
-   nothing.
+   nothing;
+4. **telemetry audit** — re-runs each target under an installed tracer
+   and requires the reconciliation guarantee: per-span counter sums
+   equal the global hostsync totals and the metrics uplink log equals
+   the CommLedger exactly (``repro.analysis.telemetry_check``).
 
 Exit 0 only when every layer is clean. ``--bless`` re-measures and
 rewrites the manifest (commit the diff with the change that moved it).
@@ -96,6 +100,10 @@ def run_lint(backend: str = "all", comm_impl: str = "all", *,
         findings.extend(budget_findings)
         report["budgets"] = measured
         findings.extend(lint_recompiles(targets))
+        from repro.analysis.telemetry_check import lint_telemetry
+        telemetry_findings = lint_telemetry(targets)
+        findings.extend(telemetry_findings)
+        report["telemetry_findings"] = len(telemetry_findings)
     report["findings"] = len(findings)
     return findings, report
 

@@ -1,0 +1,87 @@
+"""Lint-tier telemetry audit: the reconciliation guarantee, re-proven.
+
+For every (backend, comm_impl, train_impl) target this module runs the
+seeded mini-federation (``repro.analysis.budgets``) under an installed
+tracer AND a ``hostsync.measuring`` window, then requires, exactly:
+
+1. the tracer's run totals equal the measuring window's counters — the
+   trace explains ALL the host syncs / uplink bytes / dispatches the
+   budget manifest pins, not a subset;
+2. :func:`repro.telemetry.reconcile` is clean — root spans sum to the run
+   totals, children never exceed their parent, and the metrics uplink log
+   equals the CommLedger byte for byte.
+
+A failure prints an expected-vs-measured diff per counter, in the style
+of ``repro.analysis.budgets.compare`` — e.g. an instrumentation gap (a
+new fetch outside every round span) shows up here before it silently
+skews any per-phase attribution a benchmark stamps.
+
+Wired into ``python -m repro.analysis.lint`` (not ``--static-only``) and
+exercised by the ``lint``-marked tier of ``tests/test_telemetry.py``.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+from repro.analysis.framework import Finding
+
+# the audited matrix: the loop backend has no (backend-specific) program
+# tier but is traced all the same — it joins when the target set spans
+# every backend (lint --backend all)
+TRAIN_IMPLS = ("fused", "reference")
+
+
+def check(backend: str, comm_impl: str, train_impl: str = "fused", *,
+          rounds: int = 2) -> List[Finding]:
+    """Findings for one traced (backend, comm_impl, train_impl) run."""
+    from repro import telemetry
+    from repro.analysis import budgets as budgets_mod
+    from repro.core import hostsync
+    from repro.core.rounds import run_federation
+    tag = f"{backend}/{comm_impl}/{train_impl}"
+    clients, spec = budgets_mod.mini_federation()
+    cfg = budgets_mod.federation_config(comm_impl, rounds=rounds,
+                                        train_impl=train_impl)
+    with hostsync.measuring() as m:
+        tracer = telemetry.Tracer()
+        with telemetry.install(tracer):
+            run_federation(clients, spec, cfg, backend=backend)
+        totals = tracer.finish()
+    findings: List[Finding] = []
+    for key, want in m.as_dict().items():
+        got = int(totals[key])
+        if got != want:
+            findings.append(Finding(
+                "telemetry", tag,
+                f"{key}: tracer run total is {got}, hostsync measured "
+                f"{want} ({got - want:+d}) — counter activity outside the "
+                "tracer's lifetime, or a span straddling a measuring() "
+                "window"))
+    findings.extend(Finding("telemetry", tag, d)
+                    for d in telemetry.reconcile(tracer))
+    return findings
+
+
+def check_all(backends: Sequence[str],
+              comm_impls: Sequence[str] = ("fused", "reference"),
+              train_impls: Sequence[str] = TRAIN_IMPLS, *,
+              rounds: int = 2) -> List[Finding]:
+    findings: List[Finding] = []
+    for b in backends:
+        for ci in comm_impls:
+            for ti in train_impls:
+                findings.extend(check(b, ci, ti, rounds=rounds))
+    return findings
+
+
+def lint_telemetry(targets: Sequence[Tuple[str, str]]) -> List[Finding]:
+    """The lint layer: audit every (backend, comm_impl) target at both
+    trainer impls; when the targets span every backend, the loop
+    reference joins the matrix (it has no traced-program tier of its own
+    but must reconcile all the same)."""
+    from repro.analysis.programs import BACKENDS
+    backends = sorted({b for b, _ in targets})
+    comm_impls = tuple(sorted({ci for _, ci in targets}))
+    if set(backends) >= set(BACKENDS):
+        backends = ["loop"] + backends
+    return check_all(backends, comm_impls)

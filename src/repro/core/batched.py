@@ -81,6 +81,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.core import encoders as enc
 from repro.core import hostsync
 from repro.core.client import Client
@@ -316,7 +317,9 @@ def train_population_encoders(plans: Sequence[ClientPlan], *, epochs: int,
             buckets.setdefault(_shape_family(p.client, m, batch_size),
                                []).append((p, m))
     for key in sorted(buckets, key=repr):
-        pairs = buckets[key]
+      pairs = buckets[key]
+      with telemetry.span("train.encoder", clients=len(pairs),
+                          impl=train_impl):
         clients = [p.client for p, _ in pairs]
         mods = [m for _, m in pairs]
         kg = len(pairs)
@@ -425,13 +428,15 @@ def _population_predictions(clients: Sequence[Client], datas, store=None,
           else _batched_predict)
     for key in sorted(buckets, key=repr):
         entries = buckets[key]
-        stacked = store.gather_encoders([(c, m) for _, _, c, _, m in entries])
-        xs = jnp.asarray(np.stack([c.padded_modality(d, m, n_pad)
-                                   for _, _, c, d, m in entries]))
-        hostsync.record_dispatch()
-        pr = hostsync.fetch(fn(stacked, xs))         # [Kg, n_pad, C]
-        for j, (k, mi, *_rest) in enumerate(entries):
-            out[k, :, mi] = pr[j]
+        with telemetry.span("predict", clients=len(entries)):
+            stacked = store.gather_encoders(
+                [(c, m) for _, _, c, _, m in entries])
+            xs = jnp.asarray(np.stack([c.padded_modality(d, m, n_pad)
+                                       for _, _, c, d, m in entries]))
+            hostsync.record_dispatch()
+            pr = hostsync.fetch(fn(stacked, xs))     # [Kg, n_pad, C]
+            for j, (k, mi, *_rest) in enumerate(entries):
+                out[k, :, mi] = pr[j]
     if cache is not None:
         for k, (c, d) in enumerate(zip(clients, datas)):
             if k not in hits:
@@ -453,41 +458,46 @@ def train_population_fusion(clients: Sequence[Client],
     mask — one donated program (``"fused"``) or one launch per epoch
     (``"reference"``)."""
     store = store or _default_store()
-    preds = _population_predictions(clients, [c.train for c in clients],
-                                    store, cache=cache)
-    n_pad = preds.shape[1]
-    y = np.stack([c.padded_labels(c.train, n_pad) for c in clients])
-    presence = jnp.asarray(np.stack([c.avail_mask() for c in clients]))
-    ns = [c.train.num_samples for c in clients]
-    steps = max(num_steps(n, batch_size) for n in ns)
-    stacked = store.gather_fusion(clients)
-    kg = len(clients)
-    gather = np.arange(kg)[:, None]
-    if train_impl == "fused" and epochs:
-        idx_w = [padded_perm_indices([p[e] for p in perms], ns, steps,
-                                     batch_size) for e in range(epochs)]
-        idx = np.stack([iw[0] for iw in idx_w], axis=1)      # [kg, E, L]
-        w = np.stack([iw[1] for iw in idx_w], axis=1)
-        pe = preds[gather[:, None], idx].reshape(
-            kg, epochs, steps, batch_size, *preds.shape[2:])
-        ye = y[gather[:, None], idx].reshape(kg, epochs, steps, batch_size)
-        ws = w.reshape(kg, epochs, steps, batch_size)
-        hostsync.record_dispatch()
-        stacked, _ = fused_fusion_round(stacked, jnp.asarray(pe), presence,
-                                        jnp.asarray(ye), jnp.asarray(ws), lr)
-    else:
-        for e in range(epochs):
-            idx, w = padded_perm_indices([p[e] for p in perms], ns, steps,
-                                         batch_size)
-            pe = preds[gather, idx].reshape(kg, steps, batch_size,
-                                            *preds.shape[2:])
-            ye = y[gather, idx].reshape(kg, steps, batch_size)
-            ws = w.reshape(kg, steps, batch_size)
+    with telemetry.span("train.fusion", clients=len(clients),
+                        impl=train_impl):
+        preds = _population_predictions(clients,
+                                        [c.train for c in clients],
+                                        store, cache=cache)
+        n_pad = preds.shape[1]
+        y = np.stack([c.padded_labels(c.train, n_pad) for c in clients])
+        presence = jnp.asarray(np.stack([c.avail_mask() for c in clients]))
+        ns = [c.train.num_samples for c in clients]
+        steps = max(num_steps(n, batch_size) for n in ns)
+        stacked = store.gather_fusion(clients)
+        kg = len(clients)
+        gather = np.arange(kg)[:, None]
+        if train_impl == "fused" and epochs:
+            idx_w = [padded_perm_indices([p[e] for p in perms], ns, steps,
+                                         batch_size) for e in range(epochs)]
+            idx = np.stack([iw[0] for iw in idx_w], axis=1)  # [kg, E, L]
+            w = np.stack([iw[1] for iw in idx_w], axis=1)
+            pe = preds[gather[:, None], idx].reshape(
+                kg, epochs, steps, batch_size, *preds.shape[2:])
+            ye = y[gather[:, None], idx].reshape(kg, epochs, steps,
+                                                 batch_size)
+            ws = w.reshape(kg, epochs, steps, batch_size)
             hostsync.record_dispatch()
-            stacked, _ = masked_fusion_epoch(stacked, jnp.asarray(pe),
-                                             presence, jnp.asarray(ye),
-                                             jnp.asarray(ws), lr)
-    store.scatter_fusion(clients, stacked)
+            stacked, _ = fused_fusion_round(stacked, jnp.asarray(pe),
+                                            presence, jnp.asarray(ye),
+                                            jnp.asarray(ws), lr)
+        else:
+            for e in range(epochs):
+                idx, w = padded_perm_indices([p[e] for p in perms], ns,
+                                             steps, batch_size)
+                pe = preds[gather, idx].reshape(kg, steps, batch_size,
+                                                *preds.shape[2:])
+                ye = y[gather, idx].reshape(kg, steps, batch_size)
+                ws = w.reshape(kg, steps, batch_size)
+                hostsync.record_dispatch()
+                stacked, _ = masked_fusion_epoch(stacked, jnp.asarray(pe),
+                                                 presence, jnp.asarray(ye),
+                                                 jnp.asarray(ws), lr)
+        store.scatter_fusion(clients, stacked)
 
 
 # ---------------------------------------------------------------------------

@@ -108,6 +108,15 @@ class Measurement:
     def dispatches(self) -> int:
         return _dispatches if self._live else self._frozen_dispatches
 
+    def as_dict(self) -> dict:
+        """The window's counters under the canonical budget keys — the
+        schema ``budgets.json``, the BENCH jsons, and the telemetry run
+        totals all share (``host_syncs`` / ``bytes_moved`` /
+        ``dispatches``)."""
+        return {"host_syncs": int(self.syncs),
+                "bytes_moved": int(self.bytes_moved),
+                "dispatches": int(self.dispatches)}
+
 
 @contextlib.contextmanager
 def measuring():

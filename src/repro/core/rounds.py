@@ -51,6 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.core import hostsync
 from repro.core.aggregation import (CommLedger, aggregate_quantized,
                                     aggregate_stacked, pad_axis0,
@@ -210,42 +211,51 @@ def aggregate_uploads(clients: Sequence[Client], modality: str,
                                     quantize_pack_population_ef,
                                     reduce_packed_population)
     store = store or ClientStore()
-    stacked = store.gather_encoders([(c, modality) for c in clients])
-    w = jnp.asarray(np.asarray(sample_counts, np.float32))
-    stacked, w, pad = pad_uploads_pow2(stacked, w, len(clients))
-    ref = clients[0].encoders[modality]
-    if bits >= 32:
-        hostsync.record_bytes(payload_nbytes(stacked))
-        return aggregate_stacked(stacked, w)
-    if error_feedback:
-        res = stack_uploads([
-            c.residuals[modality] if modality in c.residuals
-            else zero_residual(c.encoders[modality]) for c in clients])
-        if pad:
-            res = pad_axis0(res, pad)
-        if comm_impl == "fused":
-            packed, scales, zeros, new_res = \
-                quantize_pack_population_ef(stacked, res, bits=bits)
-        else:
-            codes, scales, zeros, new_res = \
-                quantize_population_with_error_feedback(stacked, res,
-                                                        bits=bits)
-        for j, c in enumerate(clients):    # padded slots are discarded
-            c.residuals[modality] = jax.tree.map(lambda v: v[j], new_res)
-    elif comm_impl == "fused":
-        packed, scales, zeros = quantize_pack_population(stacked, bits=bits)
-    else:
-        codes, scales, zeros = quantize_population(stacked, bits=bits)
-    if comm_impl == "fused":
-        hostsync.record_bytes(payload_nbytes(packed, scales, zeros))
-        shapes = tuple(tuple(l.shape[1:])
-                       for l in jax.tree_util.tree_leaves(stacked))
-        agg = reduce_packed_population(packed, scales, zeros, w, bits=bits,
-                                       shapes=shapes)
-    else:
-        hostsync.record_bytes(payload_nbytes(codes, scales, zeros))
-        agg = aggregate_quantized(codes, scales, zeros, w)
-    return jax.tree.map(lambda a, r: a.astype(r.dtype), agg, ref)
+    with telemetry.span("comm.aggregate", modality=modality,
+                        clients=len(clients), bits=bits, impl=comm_impl):
+        stacked = store.gather_encoders([(c, modality) for c in clients])
+        w = jnp.asarray(np.asarray(sample_counts, np.float32))
+        stacked, w, pad = pad_uploads_pow2(stacked, w, len(clients))
+        ref = clients[0].encoders[modality]
+        if bits >= 32:
+            hostsync.record_bytes(payload_nbytes(stacked))
+            with telemetry.span("comm.reduce"):
+                return aggregate_stacked(stacked, w)
+        with telemetry.span("comm.quantize_pack"):
+            if error_feedback:
+                res = stack_uploads([
+                    c.residuals[modality] if modality in c.residuals
+                    else zero_residual(c.encoders[modality])
+                    for c in clients])
+                if pad:
+                    res = pad_axis0(res, pad)
+                if comm_impl == "fused":
+                    packed, scales, zeros, new_res = \
+                        quantize_pack_population_ef(stacked, res, bits=bits)
+                else:
+                    codes, scales, zeros, new_res = \
+                        quantize_population_with_error_feedback(stacked, res,
+                                                                bits=bits)
+                for j, c in enumerate(clients):  # padded slots discarded
+                    c.residuals[modality] = jax.tree.map(lambda v: v[j],
+                                                         new_res)
+            elif comm_impl == "fused":
+                packed, scales, zeros = quantize_pack_population(stacked,
+                                                                 bits=bits)
+            else:
+                codes, scales, zeros = quantize_population(stacked,
+                                                           bits=bits)
+        with telemetry.span("comm.reduce"):
+            if comm_impl == "fused":
+                hostsync.record_bytes(payload_nbytes(packed, scales, zeros))
+                shapes = tuple(tuple(l.shape[1:])
+                               for l in jax.tree_util.tree_leaves(stacked))
+                agg = reduce_packed_population(packed, scales, zeros, w,
+                                               bits=bits, shapes=shapes)
+            else:
+                hostsync.record_bytes(payload_nbytes(codes, scales, zeros))
+                agg = aggregate_quantized(codes, scales, zeros, w)
+        return jax.tree.map(lambda a, r: a.astype(r.dtype), agg, ref)
 
 
 def _weighted_accuracy(clients: Sequence[Client]) -> Tuple[float, float]:
@@ -368,99 +378,104 @@ def _joint_selection(avail: List[Client], state: FederationState,
     Returns ``(choices, selected, round_shapley)``: per-client top-γ
     modality lists, the server-selected client ids, and the raw |φ| samples
     per modality for the round record."""
-    # -- modality selection (§3.2) --------------------------------------
-    round_shapley: Dict[str, List[float]] = {}
-    choices: Dict[int, List[str]] = {}
-    names_by_cid: Dict[int, List[str]] = {}
-    engine_sel = cfg.selection_impl == "engine"
-    for c in avail:
-        names = list(c.modality_names)
-        if cfg.allowed_modalities is not None:
-            allowed = cfg.allowed_modalities.get(c.client_id)
-            names = [m for m in names
-                     if allowed is None or m in allowed]
-        if names:
-            names_by_cid[c.client_id] = names
-    phi_by_cid = None
-    if cfg.modality_strategy not in ("all", "random") and batched:
-        # one vmapped 2^M Shapley enumeration for the population;
-        # draws the per-client eval/background subsets in the exact
-        # client order the loop backend would (RNG parity)
-        from repro.core.batched import batched_shapley_values
-        shap_clients = [c for c in avail
-                        if c.client_id in names_by_cid]
-        if shap_clients:
-            phi_by_cid = batched_shapley_values(
-                shap_clients, cfg.background_size, cfg.eval_size,
-                rng, store=store, cache=cache)
-    phi_by_name: Dict[int, Dict[str, float]] = {}
-    for c in avail:
-        if c.client_id not in names_by_cid:
-            continue
-        names = names_by_cid[c.client_id]
-        if cfg.modality_strategy == "all":
-            choices[c.client_id] = names
-        elif cfg.modality_strategy == "random":
-            g = min(cfg.gamma, len(names))
-            choices[c.client_id] = sorted(
-                rng.choice(names, size=g, replace=False).tolist())
-        else:  # priority (paper)
-            phi = (phi_by_cid[c.client_id]
-                   if phi_by_cid is not None
-                   else c.shapley_values(cfg.background_size,
-                                         cfg.eval_size, rng))
-            phi_named = dict(zip(c.modality_names, phi))
-            phi_by_name[c.client_id] = phi_named
-            for m, p in phi_named.items():
-                round_shapley.setdefault(m, []).append(
-                    abs(float(p)))
-            if engine_sel:
-                continue        # ranked below, whole population
-            # Eq. 10's cost criterion ranks what the uplink
-            # actually ships: exact compressed wire bytes at the
-            # round's precision
-            sizes = c.encoder_sizes(qbits)
-            idx = [list(c.modality_names).index(m) for m in names]
-            rec = c.recency.recency_vector(names, t)
-            prio = modality_priority(
-                np.array([phi[i] for i in idx]), sizes[idx], rec,
-                t, cfg.alpha_s, cfg.alpha_c, cfg.alpha_r)
-            choices[c.client_id] = select_top_gamma(
-                prio, names, cfg.gamma)
-    if engine_sel and phi_by_name:
-        choices.update(_engine_modality_choices(
-            state, sorted(phi_by_name), names_by_cid, phi_by_name,
-            t, cfg, recency_matrix=recency_matrix))
+    with telemetry.span("select.joint", clients=len(avail)):
+        # -- modality selection (§3.2) ----------------------------------
+        round_shapley: Dict[str, List[float]] = {}
+        choices: Dict[int, List[str]] = {}
+        names_by_cid: Dict[int, List[str]] = {}
+        engine_sel = cfg.selection_impl == "engine"
+        with telemetry.span("select.modality"):
+            for c in avail:
+                names = list(c.modality_names)
+                if cfg.allowed_modalities is not None:
+                    allowed = cfg.allowed_modalities.get(c.client_id)
+                    names = [m for m in names
+                             if allowed is None or m in allowed]
+                if names:
+                    names_by_cid[c.client_id] = names
+            phi_by_cid = None
+            if cfg.modality_strategy not in ("all", "random") and batched:
+                # one vmapped 2^M Shapley enumeration for the population;
+                # draws the per-client eval/background subsets in the exact
+                # client order the loop backend would (RNG parity)
+                from repro.core.batched import batched_shapley_values
+                shap_clients = [c for c in avail
+                                if c.client_id in names_by_cid]
+                if shap_clients:
+                    with telemetry.span("select.shapley",
+                                        clients=len(shap_clients)):
+                        phi_by_cid = batched_shapley_values(
+                            shap_clients, cfg.background_size,
+                            cfg.eval_size, rng, store=store, cache=cache)
+            phi_by_name: Dict[int, Dict[str, float]] = {}
+            for c in avail:
+                if c.client_id not in names_by_cid:
+                    continue
+                names = names_by_cid[c.client_id]
+                if cfg.modality_strategy == "all":
+                    choices[c.client_id] = names
+                elif cfg.modality_strategy == "random":
+                    g = min(cfg.gamma, len(names))
+                    choices[c.client_id] = sorted(
+                        rng.choice(names, size=g, replace=False).tolist())
+                else:  # priority (paper)
+                    phi = (phi_by_cid[c.client_id]
+                           if phi_by_cid is not None
+                           else c.shapley_values(cfg.background_size,
+                                                 cfg.eval_size, rng))
+                    phi_named = dict(zip(c.modality_names, phi))
+                    phi_by_name[c.client_id] = phi_named
+                    for m, p in phi_named.items():
+                        round_shapley.setdefault(m, []).append(
+                            abs(float(p)))
+                    if engine_sel:
+                        continue        # ranked below, whole population
+                    # Eq. 10's cost criterion ranks what the uplink
+                    # actually ships: exact compressed wire bytes at the
+                    # round's precision
+                    sizes = c.encoder_sizes(qbits)
+                    idx = [list(c.modality_names).index(m) for m in names]
+                    rec = c.recency.recency_vector(names, t)
+                    prio = modality_priority(
+                        np.array([phi[i] for i in idx]), sizes[idx], rec,
+                        t, cfg.alpha_s, cfg.alpha_c, cfg.alpha_r)
+                    choices[c.client_id] = select_top_gamma(
+                        prio, names, cfg.gamma)
+            if engine_sel and phi_by_name:
+                choices.update(_engine_modality_choices(
+                    state, sorted(phi_by_name), names_by_cid, phi_by_name,
+                    t, cfg, recency_matrix=recency_matrix))
 
-    # -- client selection (§3.3) ----------------------------------------
-    cands = [c for c in avail if c.client_id in choices]
-    if not cands:
-        # No client has a selectable modality this round (e.g. an
-        # allowed_modalities config that bars every candidate):
-        # record an explicit empty-upload round instead of
-        # selecting from an empty candidate set.
-        selected: List[int] = []
-    elif cfg.client_strategy == "all":
-        selected = [c.client_id for c in cands]
-    elif engine_sel and cfg.client_strategy != "random":
-        selected = _engine_client_selection(
-            state, cands, choices, t, cfg,
-            client_staleness=client_staleness)
-    else:
-        # representative loss = min over the selected modalities
-        losses = {c.client_id: min(c.losses[m]
-                                   for m in choices[c.client_id])
-                  for c in cands}
-        crit = cfg.client_strategy
-        client_rec: Dict[int, int] = {}
-        if crit == "loss_recency":
-            for c in cands:
-                client_rec[c.client_id] = t - 1 - max(
-                    c.recency.last_upload.values(), default=-1)
-        selected = select_clients(
-            losses, cfg.delta, criterion=crit, recency=client_rec,
-            loss_weight=cfg.loss_weight, rng=rng)
-    return choices, selected, round_shapley
+        # -- client selection (§3.3) ------------------------------------
+        with telemetry.span("select.client"):
+            cands = [c for c in avail if c.client_id in choices]
+            if not cands:
+                # No client has a selectable modality this round (e.g. an
+                # allowed_modalities config that bars every candidate):
+                # record an explicit empty-upload round instead of
+                # selecting from an empty candidate set.
+                selected: List[int] = []
+            elif cfg.client_strategy == "all":
+                selected = [c.client_id for c in cands]
+            elif engine_sel and cfg.client_strategy != "random":
+                selected = _engine_client_selection(
+                    state, cands, choices, t, cfg,
+                    client_staleness=client_staleness)
+            else:
+                # representative loss = min over the selected modalities
+                losses = {c.client_id: min(c.losses[m]
+                                           for m in choices[c.client_id])
+                          for c in cands}
+                crit = cfg.client_strategy
+                client_rec: Dict[int, int] = {}
+                if crit == "loss_recency":
+                    for c in cands:
+                        client_rec[c.client_id] = t - 1 - max(
+                            c.recency.last_upload.values(), default=-1)
+                selected = select_clients(
+                    losses, cfg.delta, criterion=crit, recency=client_rec,
+                    loss_weight=cfg.loss_weight, rng=rng)
+        return choices, selected, round_shapley
 
 
 def run_federation(clients: List[Client], spec: DatasetSpec,
@@ -576,8 +591,10 @@ def run_federation(clients: List[Client], spec: DatasetSpec,
     store = state.store if resident else ClientStore()
 
     trace = resolve_trace(cfg)
+    tr = telemetry.get()
     try:
         for t in range(1, cfg.rounds + 1):
+          with telemetry.span("round", round=t, backend=backend):
             # -- client availability (§4.9, trace-driven) ----------------
             avail_mask = trace.step(rng, len(clients))
             avail = [c for k, c in enumerate(clients) if avail_mask[k]]
@@ -585,14 +602,21 @@ def run_federation(clients: List[Client], spec: DatasetSpec,
                 # nobody reported this round: an explicit empty-upload
                 # round (shared semantics with the baselines) — no
                 # training, no uploads, accuracy of the current models
-                if batched:
-                    from repro.core.batched import batched_evaluate
-                    acc, loss = batched_evaluate(clients, store=store)
-                else:
-                    acc, loss = _weighted_accuracy(clients)
+                with telemetry.span("eval"):
+                    if batched:
+                        from repro.core.batched import batched_evaluate
+                        acc, loss = batched_evaluate(clients, store=store)
+                    else:
+                        acc, loss = _weighted_accuracy(clients)
                 ledger.rounds = t
                 history.records.append(RoundRecord(
                     t, acc, loss, ledger.megabytes, [], {}))
+                if tr is not None:
+                    tr.metrics.record_round(
+                        round=t, accuracy=float(acc),
+                        mean_loss=float(loss),
+                        comm_mb=ledger.megabytes, uplink=[],
+                        selected=[], choices={}, shapley={}, dropped=[])
                 continue
 
             # -- local learning ------------------------------------------
@@ -603,23 +627,25 @@ def run_federation(clients: List[Client], spec: DatasetSpec,
             if batched:
                 from repro.core.batched import PredictionCache
                 cache = PredictionCache()
-            if backend == "sharded":
-                from repro.core.sharded import sharded_local_learning
-                sharded_local_learning(avail, cfg, rng, state, cache=cache)
-            elif batched:
-                from repro.core.batched import batched_local_learning
-                batched_local_learning(avail, cfg, rng, store=store,
-                                       cache=cache)
-            else:
-                for c in avail:
-                    c.train_encoders(cfg.local_epochs, cfg.lr_encoder,
-                                     cfg.batch_size, rng)
-                    c.train_fusion(cfg.local_epochs, cfg.lr_fusion,
-                                   cfg.batch_size, rng)  # Stage #1
-            for c in avail:                 # mirror ℓ_m^k into the state
-                k = state.row_of[c.client_id]
-                for m, v in c.losses.items():
-                    state.losses[k, state.mod_index[m]] = v
+            with telemetry.span("train.local", clients=len(avail)):
+                if backend == "sharded":
+                    from repro.core.sharded import sharded_local_learning
+                    sharded_local_learning(avail, cfg, rng, state,
+                                           cache=cache)
+                elif batched:
+                    from repro.core.batched import batched_local_learning
+                    batched_local_learning(avail, cfg, rng, store=store,
+                                           cache=cache)
+                else:
+                    for c in avail:
+                        c.train_encoders(cfg.local_epochs, cfg.lr_encoder,
+                                         cfg.batch_size, rng)
+                        c.train_fusion(cfg.local_epochs, cfg.lr_fusion,
+                                       cfg.batch_size, rng)  # Stage #1
+                for c in avail:             # mirror ℓ_m^k into the state
+                    k = state.row_of[c.client_id]
+                    for m, v in c.losses.items():
+                        state.losses[k, state.mod_index[m]] = v
 
             # -- joint selection (§3.2 + §3.3, shared with async) ---------
             choices, selected, round_shapley = _joint_selection(
@@ -631,59 +657,77 @@ def run_federation(clients: List[Client], spec: DatasetSpec,
             uploads: List[Tuple[int, str]] = []
             per_modality: Dict[str, List[Client]] = {}
             upload_mask = np.zeros_like(state.presence)
-            for cid in selected:
-                c = by_id[cid]
-                k = state.row_of[cid]
-                for m in choices[cid]:
-                    per_modality.setdefault(m, []).append(c)
-                    # exact wire bytes, precomputed once per run
-                    ledger.record(float(state.sizes[k, state.mod_index[m]]),
-                                  modality=m)
-                    uploads.append((cid, m))
-                    upload_mask[k, state.mod_index[m]] = True
-                c.recency.mark_uploaded(choices[cid], t)   # tracker mirror
-            state.mark_uploaded(upload_mask, t)            # Eq. 11, [K, M]
-            for m, ups in per_modality.items():
-                if backend == "sharded":
-                    from repro.core.sharded import aggregate_modality_sharded
-                    server_encoders[m] = aggregate_modality_sharded(
-                        state, ups, m, [c.train.num_samples for c in ups],
-                        qbits, comm_impl=cfg.comm_impl)
-                else:
-                    server_encoders[m] = aggregate_uploads(
-                        ups, m, [c.train.num_samples for c in ups], qbits,
-                        error_feedback=cfg.error_feedback, store=store,
-                        comm_impl=cfg.comm_impl)
+            uplink_log: List[Dict] = []
+            with telemetry.span("comm.uplink", clients=len(selected)):
+                for cid in selected:
+                    c = by_id[cid]
+                    k = state.row_of[cid]
+                    for m in choices[cid]:
+                        per_modality.setdefault(m, []).append(c)
+                        # exact wire bytes, precomputed once per run
+                        nb = float(state.sizes[k, state.mod_index[m]])
+                        ledger.record(nb, modality=m)
+                        uplink_log.append({"client": cid, "modality": m,
+                                           "bytes": nb})
+                        uploads.append((cid, m))
+                        upload_mask[k, state.mod_index[m]] = True
+                    c.recency.mark_uploaded(choices[cid], t)  # tracker
+                state.mark_uploaded(upload_mask, t)        # Eq. 11, [K, M]
+                for m, ups in per_modality.items():
+                    if backend == "sharded":
+                        from repro.core.sharded import \
+                            aggregate_modality_sharded
+                        server_encoders[m] = aggregate_modality_sharded(
+                            state, ups, m,
+                            [c.train.num_samples for c in ups],
+                            qbits, comm_impl=cfg.comm_impl)
+                    else:
+                        server_encoders[m] = aggregate_uploads(
+                            ups, m, [c.train.num_samples for c in ups],
+                            qbits, error_feedback=cfg.error_feedback,
+                            store=store, comm_impl=cfg.comm_impl)
 
             # -- local deploying + Stage #2 -------------------------------
-            if resident:
-                for m, params in server_encoders.items():
-                    rows = [state.row_of[c.client_id] for c in avail
-                            if m in c.encoders]
-                    state.deploy_global(m, rows, params)
-            else:
-                for c in avail:
-                    for m in c.modality_names:
-                        if m in server_encoders:
-                            c.install_global(m, server_encoders[m])
-            if batched:
-                from repro.core.batched import batched_fusion_stage
-                batched_fusion_stage(avail, cfg, rng, store=store)
-            else:
-                for c in avail:
-                    c.train_fusion(cfg.local_epochs, cfg.lr_fusion,
-                                   cfg.batch_size, rng)  # Stage #2
+            with telemetry.span("deploy"):
+                if resident:
+                    for m, params in server_encoders.items():
+                        rows = [state.row_of[c.client_id] for c in avail
+                                if m in c.encoders]
+                        state.deploy_global(m, rows, params)
+                else:
+                    for c in avail:
+                        for m in c.modality_names:
+                            if m in server_encoders:
+                                c.install_global(m, server_encoders[m])
+            with telemetry.span("train.fusion2", clients=len(avail)):
+                if batched:
+                    from repro.core.batched import batched_fusion_stage
+                    batched_fusion_stage(avail, cfg, rng, store=store)
+                else:
+                    for c in avail:
+                        c.train_fusion(cfg.local_epochs, cfg.lr_fusion,
+                                       cfg.batch_size, rng)  # Stage #2
 
             # -- evaluate -------------------------------------------------
-            if batched:
-                from repro.core.batched import batched_evaluate
-                acc, loss = batched_evaluate(clients, store=store)
-            else:
-                acc, loss = _weighted_accuracy(clients)
+            with telemetry.span("eval"):
+                if batched:
+                    from repro.core.batched import batched_evaluate
+                    acc, loss = batched_evaluate(clients, store=store)
+                else:
+                    acc, loss = _weighted_accuracy(clients)
             ledger.rounds = t
+            shap = {m: float(np.mean(v))
+                    for m, v in round_shapley.items()}
             history.records.append(RoundRecord(
-                t, acc, loss, ledger.megabytes, uploads,
-                {m: float(np.mean(v)) for m, v in round_shapley.items()}))
+                t, acc, loss, ledger.megabytes, uploads, shap))
+            if tr is not None:
+                tr.metrics.record_round(
+                    round=t, accuracy=float(acc), mean_loss=float(loss),
+                    comm_mb=ledger.megabytes, uplink=uplink_log,
+                    selected=sorted(int(cid) for cid in selected),
+                    choices={int(cid): list(choices[cid])
+                             for cid in selected},
+                    shapley=shap, dropped=[])
             if verbose:
                 print(f"[round {t:3d}] acc={acc:.4f} loss={loss:.4f} "
                       f"comm={ledger.megabytes:.3f}MB "
@@ -693,7 +737,15 @@ def run_federation(clients: List[Client], spec: DatasetSpec,
                 break
     finally:
         if resident:
-            state.write_back()
+            with telemetry.span("write_back"):
+                state.write_back()
+        if tr is not None:
+            tr.metrics.set_run(
+                backend=backend, rounds=len(history.records),
+                ledger_bytes=float(ledger.uploaded_bytes),
+                ledger_uploads=int(ledger.uploads),
+                ledger_by_modality={m: float(v) for m, v in
+                                    ledger.by_modality.items()})
     return history
 
 

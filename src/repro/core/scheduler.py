@@ -63,6 +63,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.core.aggregation import CommLedger
 from repro.core.client import Client
 from repro.core.federation_state import FederationState
@@ -213,17 +214,28 @@ def run_async_federation(clients: List[Client], spec, cfg, *,
     clock = 0.0
     server_version = 0
     by_id = {c.client_id: c for c in clients}
+    tr = telemetry.get()
 
     try:
         for t in range(1, cfg.rounds + 1):
+          with telemetry.span("round", round=t, backend="async"):
             avail_mask = trace.step(rng, K)
             avail = [c for k, c in enumerate(clients) if avail_mask[k]]
             if not avail:
-                acc, loss = batched_evaluate(clients, store=store)
+                with telemetry.span("eval"):
+                    acc, loss = batched_evaluate(clients, store=store)
                 ledger.rounds = t
                 history.records.append(RoundRecord(
                     t, acc, loss, ledger.megabytes, [], {},
                     sim_time=clock))
+                if tr is not None:
+                    tr.metrics.record_round(
+                        round=t, accuracy=float(acc),
+                        mean_loss=float(loss),
+                        comm_mb=ledger.megabytes, uplink=[],
+                        selected=[], choices={}, shapley={},
+                        dropped=[], flushes=0, staleness={},
+                        sim_time=clock)
                 continue
 
             # -- dispatch: local learning starts at τ_t ------------------
@@ -242,11 +254,13 @@ def run_async_federation(clients: List[Client], spec, cfg, *,
             # per-cycle train-split prediction cache (Stage-#1 fills it,
             # Shapley reuses it; dropped before the flushes deploy)
             cache = PredictionCache()
-            batched_local_learning(avail, cfg, rng, store=store, cache=cache)
-            for c in avail:                 # mirror ℓ_m^k into the state
-                k = state.row_of[c.client_id]
-                for m, v in c.losses.items():
-                    state.losses[k, state.mod_index[m]] = v
+            with telemetry.span("train.local", clients=len(avail)):
+                batched_local_learning(avail, cfg, rng, store=store,
+                                       cache=cache)
+                for c in avail:             # mirror ℓ_m^k into the state
+                    k = state.row_of[c.client_id]
+                    for m, v in c.losses.items():
+                        state.losses[k, state.mod_index[m]] = v
 
             # -- joint selection (shared with the sync backends) ---------
             recency_matrix = client_staleness = None
@@ -264,11 +278,20 @@ def run_async_federation(clients: List[Client], spec, cfg, *,
             for c in avail:
                 heap.push(clock + t_comp[c.client_id], EventKind.LOCAL_DONE,
                           c.client_id)
+                if tr is not None:      # virtual-time lanes (pid 2)
+                    tr.virtual_instant("dispatch", c.client_id, clock,
+                                       round=t)
+                    tr.virtual_slice("local", c.client_id, clock,
+                                     clock + t_comp[c.client_id], round=t)
             for cid in selected:
                 k = state.row_of[cid]
                 tu = upload_seconds(state, k, choices[cid], links[k])
                 heap.push(clock + t_comp[cid] + tu, EventKind.UPLOAD_DONE,
                           cid)
+                if tr is not None:
+                    tr.virtual_slice("upload", cid, clock + t_comp[cid],
+                                     clock + t_comp[cid] + tu, round=t,
+                                     modalities=len(choices[cid]))
 
             # -- drain the heap: buffered flushes under the deadline -----
             cycle_deadline = clock + deadline
@@ -285,92 +308,124 @@ def run_async_federation(clients: List[Client], spec, cfg, *,
             # flush reproduces aggregate_uploads bit-for-bit (no merge
             # arithmetic ever runs), which the degenerate parity pins.
             cycle_acc: Dict[str, Tuple[Dict, float]] = {}
+            stale_log: Dict[int, float] = {}   # cid -> flush weight factor
+            uplink_log: List[Dict] = []
 
             def flush(now: float) -> None:
                 nonlocal flushes, server_version
                 flushes += 1
-                per_modality: Dict[str, List[Client]] = {}
-                weights: Dict[str, List[float]] = {}
-                upload_mask = np.zeros_like(state.presence)
-                for cid in sorted(buffer):
-                    c = by_id[cid]
-                    k = state.row_of[cid]
-                    stale = server_version - int(state.model_version[k])
-                    w = (float(c.train.num_samples)
-                         * cfg.staleness_discount ** stale)
-                    for m in choices[cid]:
-                        per_modality.setdefault(m, []).append(c)
-                        weights.setdefault(m, []).append(w)
-                        upload_mask[k, state.mod_index[m]] = True
-                    c.recency.mark_uploaded(choices[cid], t)
-                state.mark_uploaded(upload_mask, t)          # Eq. 11
-                state.mark_uploaded_time(upload_mask, now)   # virtual clock
-                for m, ups in per_modality.items():
-                    avg = aggregate_uploads(
-                        ups, m, weights[m], qbits,
-                        error_feedback=cfg.error_feedback, store=store,
-                        comm_impl=cfg.comm_impl)
-                    w_f = float(sum(weights[m]))
-                    if m in cycle_acc:
-                        prev, w_prev = cycle_acc[m]
-                        tot = w_prev + w_f
-                        avg = jax.tree.map(
-                            lambda a, b: ((w_prev * a.astype(jnp.float32)
-                                           + w_f * b.astype(jnp.float32))
-                                          / tot).astype(b.dtype), prev, avg)
-                        w_f = tot
-                    cycle_acc[m] = (avg, w_f)
-                    server_encoders[m] = avg
-                server_version += 1
-                buffer.clear()
+                with telemetry.span("comm.flush", arrivals=len(buffer)):
+                    if tr is not None:
+                        tr.virtual_instant("flush", 0, now,
+                                           arrivals=len(buffer), round=t)
+                    per_modality: Dict[str, List[Client]] = {}
+                    weights: Dict[str, List[float]] = {}
+                    upload_mask = np.zeros_like(state.presence)
+                    for cid in sorted(buffer):
+                        c = by_id[cid]
+                        k = state.row_of[cid]
+                        stale = server_version - int(state.model_version[k])
+                        stale_log[cid] = cfg.staleness_discount ** stale
+                        w = (float(c.train.num_samples)
+                             * cfg.staleness_discount ** stale)
+                        for m in choices[cid]:
+                            per_modality.setdefault(m, []).append(c)
+                            weights.setdefault(m, []).append(w)
+                            upload_mask[k, state.mod_index[m]] = True
+                        c.recency.mark_uploaded(choices[cid], t)
+                    state.mark_uploaded(upload_mask, t)          # Eq. 11
+                    state.mark_uploaded_time(upload_mask, now)   # clock
+                    for m, ups in per_modality.items():
+                        avg = aggregate_uploads(
+                            ups, m, weights[m], qbits,
+                            error_feedback=cfg.error_feedback, store=store,
+                            comm_impl=cfg.comm_impl)
+                        w_f = float(sum(weights[m]))
+                        if m in cycle_acc:
+                            prev, w_prev = cycle_acc[m]
+                            tot = w_prev + w_f
+                            avg = jax.tree.map(
+                                lambda a, b:
+                                    ((w_prev * a.astype(jnp.float32)
+                                      + w_f * b.astype(jnp.float32))
+                                     / tot).astype(b.dtype), prev, avg)
+                            w_f = tot
+                        cycle_acc[m] = (avg, w_f)
+                        server_encoders[m] = avg
+                    server_version += 1
+                    buffer.clear()
 
-            while heap:
-                ev = heap.pop()
-                last_event = max(last_event, min(ev.time, cycle_deadline))
-                if ev.kind is not EventKind.UPLOAD_DONE:
-                    continue
-                if ev.time > cycle_deadline:
-                    dropped.append(ev.client_id)   # preempted at deadline
-                    continue
-                k = state.row_of[ev.client_id]
-                for m in choices[ev.client_id]:
-                    ledger.record(
-                        float(state.sizes[k, state.mod_index[m]]),
-                        modality=m)
-                buffer.append(ev.client_id)
-                arrived.append(ev.client_id)
-                last_arrival = ev.time
-                if len(buffer) >= buffer_cap:
-                    flush(ev.time)
-            if buffer:
-                # stamp the cycle-end flush at its last accepted arrival —
-                # not at the cohort compute barrier, which a non-uploading
-                # client's LOCAL_DONE can push later
-                flush(last_arrival)
+            with telemetry.span("comm.uplink", clients=len(selected)):
+                while heap:
+                    ev = heap.pop()
+                    last_event = max(last_event,
+                                     min(ev.time, cycle_deadline))
+                    if ev.kind is not EventKind.UPLOAD_DONE:
+                        continue
+                    if ev.time > cycle_deadline:
+                        dropped.append(ev.client_id)  # preempted
+                        if tr is not None:
+                            tr.virtual_instant("deadline_drop",
+                                               ev.client_id,
+                                               cycle_deadline, round=t)
+                        continue
+                    k = state.row_of[ev.client_id]
+                    for m in choices[ev.client_id]:
+                        nb = float(state.sizes[k, state.mod_index[m]])
+                        ledger.record(nb, modality=m)
+                        uplink_log.append({"client": ev.client_id,
+                                           "modality": m, "bytes": nb})
+                    buffer.append(ev.client_id)
+                    arrived.append(ev.client_id)
+                    last_arrival = ev.time
+                    if len(buffer) >= buffer_cap:
+                        flush(ev.time)
+                if buffer:
+                    # stamp the cycle-end flush at its last accepted
+                    # arrival — not at the cohort compute barrier, which a
+                    # non-uploading client's LOCAL_DONE can push later
+                    flush(last_arrival)
             # the cohort barrier, deadline-clamped event by event above
             # (any dropped event already pinned it to cycle_deadline)
             cycle_end = last_event
+            if tr is not None:      # server lane: the whole cycle window
+                tr.virtual_slice("cycle", 0, clock, cycle_end, round=t)
 
             # -- local deploying + Stage #2 ------------------------------
-            for m, params in server_encoders.items():
-                rows = [state.row_of[c.client_id] for c in avail
-                        if m in c.encoders]
-                state.deploy_global(m, rows, params)
-            for c in avail:     # deploy ships the post-flush globals
-                state.model_version[state.row_of[c.client_id]] = \
-                    server_version
-            batched_fusion_stage(avail, cfg, rng, store=store)
+            with telemetry.span("deploy"):
+                for m, params in server_encoders.items():
+                    rows = [state.row_of[c.client_id] for c in avail
+                            if m in c.encoders]
+                    state.deploy_global(m, rows, params)
+                for c in avail:     # deploy ships the post-flush globals
+                    state.model_version[state.row_of[c.client_id]] = \
+                        server_version
+            with telemetry.span("train.fusion2", clients=len(avail)):
+                batched_fusion_stage(avail, cfg, rng, store=store)
 
             # -- evaluate + record ---------------------------------------
-            acc, loss = batched_evaluate(clients, store=store)
+            with telemetry.span("eval"):
+                acc, loss = batched_evaluate(clients, store=store)
             clock = max(clock, cycle_end)
             ledger.rounds = t
             uploads = [(cid, m) for cid in selected if cid in arrived
                        for m in choices[cid]]
+            shap = {m: float(np.mean(v))
+                    for m, v in round_shapley.items()}
             history.records.append(RoundRecord(
-                t, acc, loss, ledger.megabytes, uploads,
-                {m: float(np.mean(v)) for m, v in round_shapley.items()},
+                t, acc, loss, ledger.megabytes, uploads, shap,
                 sim_time=clock, flushes=flushes, dropped=sorted(dropped)))
+            if tr is not None:
+                tr.metrics.record_round(
+                    round=t, accuracy=float(acc), mean_loss=float(loss),
+                    comm_mb=ledger.megabytes, uplink=uplink_log,
+                    selected=sorted(int(cid) for cid in selected),
+                    choices={int(cid): list(choices[cid])
+                             for cid in selected},
+                    shapley=shap, dropped=sorted(dropped),
+                    flushes=flushes,
+                    staleness={int(k): v for k, v in stale_log.items()},
+                    sim_time=clock)
             if verbose:
                 print(f"[cycle {t:3d}] τ={clock:9.2f}s acc={acc:.4f} "
                       f"loss={loss:.4f} comm={ledger.megabytes:.3f}MB "
@@ -380,5 +435,13 @@ def run_async_federation(clients: List[Client], spec, cfg, *,
                     ledger.megabytes >= cfg.comm_budget_mb:
                 break
     finally:
-        state.write_back()
+        with telemetry.span("write_back"):
+            state.write_back()
+        if tr is not None:
+            tr.metrics.set_run(
+                backend="async", rounds=len(history.records),
+                ledger_bytes=float(ledger.uploaded_bytes),
+                ledger_uploads=int(ledger.uploads),
+                ledger_by_modality={m: float(v) for m, v in
+                                    ledger.by_modality.items()})
     return history

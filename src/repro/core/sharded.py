@@ -60,6 +60,7 @@ from jax.experimental import enable_x64
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import telemetry
 from repro.core import hostsync
 from repro.core.encoders import masked_encoder_loss
 from repro.core.federation_state import (FederationState, StateStore,
@@ -329,60 +330,64 @@ def _train_encoder_bucket(state: ShardedFederationState, bucket, plan_of,
         for _, c, m, _ in live:
             c.losses[m] = 0.0
         return
-    size = bucket.size
-    feat = bucket.key[0]
-    n_max = max(c.train.num_samples for _, c, _, _ in live)
-    steps = max(num_steps(c.train.num_samples, B) for _, c, _, _ in live)
-    x = np.zeros((size, n_max) + tuple(feat), np.float32)
-    y = np.zeros((size, n_max), np.int32)
-    for s, c, m, _ in live:
-        x[s] = c.padded_modality(c.train, m, n_max)
-        y[s] = c.padded_labels(c.train, n_max)
-    perms: List[np.ndarray] = [np.zeros(0, np.int64)] * size
-    ns = [0] * size
-    for s, c, _, _ in live:
-        ns[s] = c.train.num_samples
-    gather = np.arange(size)[:, None]
-    sharding = jax.sharding.NamedSharding(state.mesh, client_spec())
-    params, le = bucket.params, None
-    if getattr(cfg, "train_impl", "fused") == "fused":
-        idx_w = []
-        for e in range(E):
-            for s, _, m, p in live:
-                perms[s] = p.encoder_perms[m][e]
-            idx_w.append(padded_perm_indices(perms, ns, steps, B))
-        idx = np.stack([iw[0] for iw in idx_w], axis=1)      # [size, E, L]
-        w = np.stack([iw[1] for iw in idx_w], axis=1)
-        xe = x[gather[:, None], idx].reshape(size, E, steps, B, *x.shape[2:])
-        ye = y[gather[:, None], idx].reshape(size, E, steps, B)
-        ws = w.reshape(size, E, steps, B)
-        program = _fused_round_program(state.mesh, float(cfg.lr_encoder))
-        hostsync.record_dispatch()
-        # the resident shard is donated: the bucket updates in place and
-        # the old `params` buffers are consumed by the dispatch
-        params, le = program(params,
-                             jax.device_put(xe, sharding),
-                             jax.device_put(ye, sharding),
-                             jax.device_put(ws, sharding))
-    else:
-        program = _epoch_program(state.mesh, float(cfg.lr_encoder))
-        for e in range(E):
-            for s, _, m, p in live:
-                perms[s] = p.encoder_perms[m][e]
-            idx, w = padded_perm_indices(perms, ns, steps, B)
-            xe = x[gather, idx].reshape(size, steps, B, *x.shape[2:])
-            ye = y[gather, idx].reshape(size, steps, B)
-            ws = w.reshape(size, steps, B)
+    with telemetry.span("train.encoder", clients=len(live),
+                        impl=getattr(cfg, "train_impl", "fused")):
+        size = bucket.size
+        feat = bucket.key[0]
+        n_max = max(c.train.num_samples for _, c, _, _ in live)
+        steps = max(num_steps(c.train.num_samples, B)
+                    for _, c, _, _ in live)
+        x = np.zeros((size, n_max) + tuple(feat), np.float32)
+        y = np.zeros((size, n_max), np.int32)
+        for s, c, m, _ in live:
+            x[s] = c.padded_modality(c.train, m, n_max)
+            y[s] = c.padded_labels(c.train, n_max)
+        perms: List[np.ndarray] = [np.zeros(0, np.int64)] * size
+        ns = [0] * size
+        for s, c, _, _ in live:
+            ns[s] = c.train.num_samples
+        gather = np.arange(size)[:, None]
+        sharding = jax.sharding.NamedSharding(state.mesh, client_spec())
+        params, le = bucket.params, None
+        if getattr(cfg, "train_impl", "fused") == "fused":
+            idx_w = []
+            for e in range(E):
+                for s, _, m, p in live:
+                    perms[s] = p.encoder_perms[m][e]
+                idx_w.append(padded_perm_indices(perms, ns, steps, B))
+            idx = np.stack([iw[0] for iw in idx_w], axis=1)  # [size, E, L]
+            w = np.stack([iw[1] for iw in idx_w], axis=1)
+            xe = x[gather[:, None], idx].reshape(size, E, steps, B,
+                                                 *x.shape[2:])
+            ye = y[gather[:, None], idx].reshape(size, E, steps, B)
+            ws = w.reshape(size, E, steps, B)
+            program = _fused_round_program(state.mesh, float(cfg.lr_encoder))
             hostsync.record_dispatch()
+            # the resident shard is donated: the bucket updates in place
+            # and the old `params` buffers are consumed by the dispatch
             params, le = program(params,
                                  jax.device_put(xe, sharding),
                                  jax.device_put(ye, sharding),
                                  jax.device_put(ws, sharding))
-    bucket.params = params
-    last = hostsync.fetch(le).astype(np.float64)   # one fetch per bucket
-    for s, c, m, _ in live:
-        c.losses[m] = float(last[s, :num_steps(c.train.num_samples,
-                                               B)].mean())
+        else:
+            program = _epoch_program(state.mesh, float(cfg.lr_encoder))
+            for e in range(E):
+                for s, _, m, p in live:
+                    perms[s] = p.encoder_perms[m][e]
+                idx, w = padded_perm_indices(perms, ns, steps, B)
+                xe = x[gather, idx].reshape(size, steps, B, *x.shape[2:])
+                ye = y[gather, idx].reshape(size, steps, B)
+                ws = w.reshape(size, steps, B)
+                hostsync.record_dispatch()
+                params, le = program(params,
+                                     jax.device_put(xe, sharding),
+                                     jax.device_put(ye, sharding),
+                                     jax.device_put(ws, sharding))
+        bucket.params = params
+        last = hostsync.fetch(le).astype(np.float64)  # one fetch/bucket
+        for s, c, m, _ in live:
+            c.losses[m] = float(last[s, :num_steps(c.train.num_samples,
+                                                   B)].mean())
 
 
 def sharded_local_learning(avail, cfg, rng: np.random.Generator,
@@ -506,31 +511,34 @@ def aggregate_modality_sharded(state: ShardedFederationState,
     crosses shards is identical either way — D sets of [leaf]-shaped
     float32 partials — and is what :func:`~repro.core.hostsync.bytes_moved`
     accounts."""
-    locs = [state.enc_slot[(state.row_of[c.client_id], modality)]
-            for c in clients]
-    bids = {b for b, _ in locs}
-    assert len(bids) == 1, "uploads span shape-family buckets"
-    bucket = state.enc_buckets[bids.pop()]
-    w = np.zeros(bucket.size, np.float32)
-    for (_, s), n in zip(locs, sample_counts):
-        w[s] = float(n)
-    wdev = jax.device_put(
-        w, jax.sharding.NamedSharding(state.mesh, client_spec()))
-    part_bytes = sum(
-        int(np.prod(l.shape[1:], dtype=np.int64)) * 4
-        for l in jax.tree_util.tree_leaves(bucket.params))
-    hostsync.record_bytes(int(state.mesh.devices.size) * part_bytes)
-    if bits >= 32:
-        agg = _aggregate_program(state.mesh)(bucket.params, wdev)
-    elif comm_impl == "fused":
-        agg = _aggregate_quantized_fused_program(state.mesh, int(bits))(
-            bucket.params, wdev)
-    else:
-        agg = _aggregate_quantized_program(state.mesh, int(bits))(
-            bucket.params, wdev)
-    ref = state.clients[state.row_of[clients[0].client_id]]\
-        .encoders[modality]
-    return jax.tree.map(lambda a, r: a.astype(r.dtype), agg, ref)
+    with telemetry.span("comm.aggregate", modality=modality,
+                        clients=len(clients), bits=bits, impl=comm_impl):
+        locs = [state.enc_slot[(state.row_of[c.client_id], modality)]
+                for c in clients]
+        bids = {b for b, _ in locs}
+        assert len(bids) == 1, "uploads span shape-family buckets"
+        bucket = state.enc_buckets[bids.pop()]
+        w = np.zeros(bucket.size, np.float32)
+        for (_, s), n in zip(locs, sample_counts):
+            w[s] = float(n)
+        wdev = jax.device_put(
+            w, jax.sharding.NamedSharding(state.mesh, client_spec()))
+        part_bytes = sum(
+            int(np.prod(l.shape[1:], dtype=np.int64)) * 4
+            for l in jax.tree_util.tree_leaves(bucket.params))
+        hostsync.record_bytes(int(state.mesh.devices.size) * part_bytes)
+        with telemetry.span("comm.reduce"):
+            if bits >= 32:
+                agg = _aggregate_program(state.mesh)(bucket.params, wdev)
+            elif comm_impl == "fused":
+                agg = _aggregate_quantized_fused_program(
+                    state.mesh, int(bits))(bucket.params, wdev)
+            else:
+                agg = _aggregate_quantized_program(state.mesh, int(bits))(
+                    bucket.params, wdev)
+        ref = state.clients[state.row_of[clients[0].client_id]]\
+            .encoders[modality]
+        return jax.tree.map(lambda a, r: a.astype(r.dtype), agg, ref)
 
 
 # ---------------------------------------------------------------------------

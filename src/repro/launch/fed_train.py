@@ -109,6 +109,12 @@ def main(argv=None):
     ap.add_argument("--link-sigma", type=float, default=0.0,
                     help="async: log-normal per-client bandwidth spread "
                          "(0 = one shared link)")
+    ap.add_argument("--trace", default=None, metavar="DIR",
+                    help="write a per-phase trace to DIR (trace.json for "
+                         "ui.perfetto.dev + spans.jsonl/metrics.jsonl; "
+                         "`python -m repro.telemetry.report DIR`); the "
+                         "async/sharded simulator backends trace every "
+                         "phase, the mesh backend per-round")
     args = ap.parse_args(argv)
     if not 0.0 <= args.loss_weight <= 1.0:
         ap.error("--loss-weight must be in [0, 1]")
@@ -207,8 +213,17 @@ def main(argv=None):
                   f"{args.mesh_clients or len(jax.devices())} devices "
                   f"(scenario={args.scenario}, "
                   f"trace={args.availability_trace or 'always'})")
-        h = run_federation(sim_clients, sim_spec, cfg, verbose=True,
-                           backend=args.backend)
+        if args.trace:
+            from repro import telemetry
+            with telemetry.tracing(args.trace):
+                h = run_federation(sim_clients, sim_spec, cfg, verbose=True,
+                                   backend=args.backend)
+            print(f"trace written to {args.trace}/ — load "
+                  f"{args.trace}/trace.json in https://ui.perfetto.dev or "
+                  f"run `python -m repro.telemetry.report {args.trace}`")
+        else:
+            h = run_federation(sim_clients, sim_spec, cfg, verbose=True,
+                               backend=args.backend)
         tail = ""
         if args.backend == "async":
             dropped = sum(len(r.dropped) for r in h.records)
@@ -259,24 +274,34 @@ def main(argv=None):
     name_rank = lexicographic_rank(modalities)
     sel_rng = np.random.default_rng(args.seed)
     ledger = CommLedger()
-    with mesh:
+    import contextlib
+
+    from repro import telemetry
+    trace_ctx = (telemetry.tracing(args.trace) if args.trace
+                 else contextlib.nullcontext())
+    with trace_ctx, mesh:
+        tr = telemetry.get()
         # round 1 is the cold start: everyone uploads everything they own
         select = {m: jnp.asarray(presence[:, i])
                   for i, m in enumerate(modalities)}
         last_upload = np.full((K, M), -1, np.int64)      # Eq. 11 state
         prev_loss = None                                  # [K, M]
         for t in range(1, args.rounds + 1):
+          with telemetry.span("round", round=t, backend="mesh"):
             t0 = time.time()
             params, agg, losses = round_fn(params, batches, select, weight)
 
             # ---- per-modality uplink accounting for THIS round's mask ----
             # (recency marks the round a pair actually uploads, Eq. 11)
             per_mod_bytes = {}
+            uplink_log = []
             for i, m in enumerate(modalities):
                 mask = np.asarray(select[m])
                 n_up = int(mask.sum())
                 per_mod_bytes[m] = n_up * sizes[m]
                 ledger.record(per_mod_bytes[m], n_up, modality=m)
+                uplink_log.append({"clients": n_up, "modality": m,
+                                   "bytes": float(per_mod_bytes[m])})
                 last_upload[mask > 0, i] = t
             ledger.rounds = t
 
@@ -331,8 +356,24 @@ def main(argv=None):
                   f"global-enc acc(ref)={np.mean(accs):.3f} "
                   f"selected={len(chosen)}/{K} uplink[{mb}] "
                   f"cum={ledger.megabytes:.2f}MB ({time.time() - t0:.1f}s)")
+            if tr is not None:
+                tr.metrics.record_round(
+                    round=t, mean_loss=mean_loss,
+                    accuracy=float(np.mean(accs)),
+                    comm_mb=ledger.megabytes, uplink=uplink_log,
+                    selected=sorted(int(k) for k in chosen))
+        if tr is not None:
+            tr.metrics.set_run(
+                backend="mesh", rounds=args.rounds,
+                ledger_bytes=float(ledger.uploaded_bytes),
+                ledger_uploads=int(ledger.uploads),
+                ledger_by_modality={m: float(v) for m, v
+                                    in ledger.by_modality.items()})
         for m in modalities:
             assert bool(jnp.isfinite(losses[m]).all())
+    if args.trace:
+        print(f"trace written to {args.trace}/ — run "
+              f"`python -m repro.telemetry.report {args.trace}`")
     print("done")
     return 0
 

@@ -1,0 +1,113 @@
+"""Structured tracing + metrics for the federation round, all backends.
+
+The repo can *count* (``repro.core.hostsync``, ``budgets.json``,
+rooflines); this package makes it *explain*: every
+``run_federation`` phase — local training, the Shapley enumeration,
+joint selection, quantize/pack uplink, aggregation, deploy, evaluation,
+and the async scheduler's virtual-time events — records a span with its
+wall time and its share of the host-sync / uplink-byte / dispatch
+counters, per round, per backend.
+
+Usage — module-level, ``measuring()``-style scoping:
+
+    from repro import telemetry
+    with telemetry.tracing("trace_dir") as tracer:
+        run_federation(clients, spec, cfg, backend="engine")
+    # trace_dir/trace.json   -> open in https://ui.perfetto.dev
+    # trace_dir/spans.jsonl  -> per-span wall + counter deltas
+    # trace_dir/metrics.jsonl-> per-round uplink/selection/loss record
+    # python -m repro.telemetry.report trace_dir
+
+Instrumentation points call :func:`span`, which returns a shared no-op
+context manager while no tracer is installed — disabled cost is one
+global ``None`` check, and tracing never changes a round outcome
+(``tests/test_telemetry.py`` pins bit-identical uploads/selection).
+The reconciliation contract — span sums equal the global hostsync
+counters and the metrics uplink log equals the CommLedger, exactly — is
+enforced by :func:`reconcile`, the report CLI, and the lint tier
+(``repro.analysis.telemetry_check``).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+from repro.telemetry.metrics import MetricsRegistry
+from repro.telemetry.reconcile import reconcile, reconcile_records
+from repro.telemetry.timer import Timer, interleaved_min
+from repro.telemetry.tracer import SpanRecord, Tracer, VirtualEvent
+
+__all__ = [
+    "MetricsRegistry", "SpanRecord", "Timer", "Tracer", "VirtualEvent",
+    "get", "install", "interleaved_min", "phase_table", "reconcile",
+    "reconcile_records", "span", "tracer_phase_table", "tracing",
+]
+
+_tracer: Optional[Tracer] = None
+
+
+class _NullSpan:
+    """Shared do-nothing span for the disabled path."""
+    __slots__ = ()
+
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_SPAN = _NullSpan()
+
+
+def get() -> Optional[Tracer]:
+    """The installed tracer, or None when tracing is off."""
+    return _tracer
+
+
+def span(name: str, **args):
+    """A span on the installed tracer — or the shared no-op context
+    manager when tracing is off (near-zero disabled overhead)."""
+    if _tracer is None:
+        return _NULL_SPAN
+    return _tracer.span(name, **args)
+
+
+@contextlib.contextmanager
+def install(tracer: Tracer):
+    """Install ``tracer`` as the process-global collector for the block;
+    restores the previous tracer on exit. Does not finish or export —
+    callers that want the artifacts use :func:`tracing`."""
+    global _tracer
+    prev = _tracer
+    _tracer = tracer
+    try:
+        yield tracer
+    finally:
+        _tracer = prev
+
+
+@contextlib.contextmanager
+def tracing(trace_dir: Optional[str] = None):
+    """Trace the block with a fresh :class:`Tracer`; on exit the tracer
+    is finished and, when ``trace_dir`` is given, exported there
+    (``trace.json`` + ``spans.jsonl`` + ``metrics.jsonl``)."""
+    from repro.telemetry.export import write_trace
+    tracer = Tracer()
+    with install(tracer):
+        try:
+            yield tracer
+        finally:
+            tracer.finish()
+            if trace_dir is not None:
+                write_trace(tracer, trace_dir)
+
+
+def phase_table(spans, depth: int = 1):
+    from repro.telemetry.report import phase_table as _pt
+    return _pt(spans, depth=depth)
+
+
+def tracer_phase_table(tracer: Tracer, depth: int = 1):
+    from repro.telemetry.report import tracer_phase_table as _tpt
+    return _tpt(tracer, depth=depth)

@@ -1,0 +1,90 @@
+"""Trace exporters: JSONL event logs + Chrome/Perfetto ``trace_event``.
+
+:func:`write_trace` lays a finished tracer down as a directory:
+
+- ``spans.jsonl``   — one ``{"kind": "run", ...}`` header with the frozen
+  run totals, then one line per span (wall offsets in µs + inclusive
+  counter deltas);
+- ``metrics.jsonl`` — one line per round record, then a ``"run"`` footer
+  with the CommLedger snapshot;
+- ``trace.json``    — Chrome ``trace_event`` JSON loadable in
+  https://ui.perfetto.dev (and ``chrome://tracing``): spans as complete
+  ``"X"`` slices on pid 1 ("federation (wall clock)"), async scheduler
+  events on pid 2 ("scheduler (virtual time)") with one thread lane per
+  client — virtual seconds map to trace microseconds, so both timelines
+  zoom sensibly even though their units differ.
+
+Every event carries the keys the CI schema check requires: ``ph``,
+``ts``, ``pid``, ``tid``, ``name``.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List
+
+from repro.telemetry.tracer import Tracer
+
+SPANS_FILE = "spans.jsonl"
+METRICS_FILE = "metrics.jsonl"
+TRACE_FILE = "trace.json"
+
+WALL_PID = 1        # spans: real wall clock
+VIRTUAL_PID = 2     # async scheduler: virtual clock (1 virtual s = 1e6 ts)
+
+
+def perfetto_trace(tracer: Tracer) -> Dict[str, Any]:
+    """The tracer as a Chrome ``trace_event`` JSON object."""
+    ev: List[Dict[str, Any]] = [
+        {"ph": "M", "pid": WALL_PID, "tid": 0, "ts": 0,
+         "name": "process_name",
+         "args": {"name": "federation (wall clock)"}},
+        {"ph": "M", "pid": WALL_PID, "tid": 0, "ts": 0,
+         "name": "thread_name", "args": {"name": "round loop"}},
+    ]
+    for r in tracer.records:
+        ev.append({"ph": "X", "pid": WALL_PID, "tid": 0, "cat": "phase",
+                   "name": r.name, "ts": round(r.t0_us, 3),
+                   "dur": round(r.dur_us, 3),
+                   "args": {**r.args, **r.counters()}})
+    if tracer.events:
+        ev.append({"ph": "M", "pid": VIRTUAL_PID, "tid": 0, "ts": 0,
+                   "name": "process_name",
+                   "args": {"name": "scheduler (virtual time)"}})
+        for tid in sorted({e.tid for e in tracer.events}):
+            ev.append({"ph": "M", "pid": VIRTUAL_PID, "tid": tid, "ts": 0,
+                       "name": "thread_name",
+                       "args": {"name": "server" if tid == 0
+                                else f"client {tid}"}})
+        for e in tracer.events:
+            base = {"pid": VIRTUAL_PID, "tid": e.tid, "cat": "virtual",
+                    "name": e.name, "ts": round(e.t0_s * 1e6, 3),
+                    "args": dict(e.args)}
+            if e.dur_s is None:
+                ev.append({"ph": "i", "s": "t", **base})
+            else:
+                ev.append({"ph": "X", "dur": round(e.dur_s * 1e6, 3),
+                           **base})
+    return {"traceEvents": ev, "displayTimeUnit": "ms"}
+
+
+def write_trace(tracer: Tracer, trace_dir: str) -> Dict[str, str]:
+    """Finish the tracer and write all three artifacts into
+    ``trace_dir`` (created if missing). Returns the file paths."""
+    os.makedirs(trace_dir, exist_ok=True)
+    totals = tracer.finish()
+    paths = {k: os.path.join(trace_dir, v) for k, v in
+             (("spans", SPANS_FILE), ("metrics", METRICS_FILE),
+              ("trace", TRACE_FILE))}
+    with open(paths["spans"], "w") as f:
+        f.write(json.dumps({"kind": "run", **totals}) + "\n")
+        for r in tracer.records:
+            f.write(json.dumps(r.as_dict()) + "\n")
+    with open(paths["metrics"], "w") as f:
+        for rec in tracer.metrics.rounds:
+            f.write(json.dumps(rec) + "\n")
+        f.write(json.dumps({"kind": "run", **tracer.metrics.run}) + "\n")
+    with open(paths["trace"], "w") as f:
+        json.dump(perfetto_trace(tracer), f)
+        f.write("\n")
+    return paths

@@ -1,0 +1,52 @@
+"""Per-round metrics registry: the run's quantitative record, as data.
+
+One :class:`MetricsRegistry` per :class:`~repro.telemetry.tracer.Tracer`.
+Each round the federation loop appends a round record — the per-upload
+byte log (client, modality, exact wire bytes, in ledger order), the joint
+selection decision, losses/accuracy, and on the async backend the
+staleness discounts, flush count, deadline-dropped ids and virtual
+clock — and at run end :meth:`set_run` stamps the CommLedger snapshot the
+reconciliation check compares the uplink log against
+(``repro.telemetry.reconcile``). ``repro.telemetry.export`` emits the
+whole registry as ``metrics.jsonl``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+
+class MetricsRegistry:
+    """Append-only round records plus one run-level record."""
+
+    def __init__(self):
+        self.rounds: List[Dict[str, Any]] = []
+        self.run: Dict[str, Any] = {}
+
+    def record_round(self, **kw) -> Dict[str, Any]:
+        """Append one round's record. Conventional keys: ``round``,
+        ``accuracy``, ``mean_loss``, ``comm_mb``, ``uplink`` (a list of
+        ``{"client", "modality", "bytes"}`` in ledger order), ``selected``,
+        ``choices``, ``shapley``; async adds ``staleness``, ``flushes``,
+        ``dropped``, ``sim_time``."""
+        rec = {"kind": "round", **kw}
+        self.rounds.append(rec)
+        return rec
+
+    def set_run(self, **kw) -> None:
+        """Merge run-level facts (backend, the final CommLedger snapshot:
+        ``ledger_bytes``/``ledger_uploads``/``ledger_by_modality``)."""
+        self.run.update(kw)
+
+    def uplink_totals(self) -> Tuple[float, Dict[str, float]]:
+        """(total bytes, per-modality bytes) summed over every round's
+        uplink log, accumulated in record order — the same float-add
+        sequence the CommLedger performed, so equality is exact."""
+        total = 0.0
+        by_modality: Dict[str, float] = {}
+        for r in self.rounds:
+            for u in r.get("uplink", ()):
+                b = float(u["bytes"])
+                total += b
+                m = u["modality"]
+                by_modality[m] = by_modality.get(m, 0.0) + b
+        return total, by_modality

@@ -1,0 +1,99 @@
+"""The reconciliation guarantee: trace totals equal the global counters.
+
+A trace that disagrees with the accounting it claims to explain is worse
+than no trace. :func:`reconcile` therefore requires, EXACTLY (integer
+counters; ledger bytes are integer-valued floats far below 2^53, so float
+sums are exact too):
+
+1. the root spans' inclusive counter deltas sum to the tracer's run
+   totals for every counter (host syncs, bytes moved, dispatches) — no
+   counter activity escapes the round spans;
+2. no span's children sum past the span itself — inclusive deltas nest,
+   so double counting (e.g. a phase recorded under two spans at once)
+   cannot hide;
+3. the metrics registry's per-round uplink log sums — total and
+   per-modality — equal the run's CommLedger snapshot byte for byte.
+
+Returns a list of human-readable diff strings, empty when clean. The
+same checks run from a written trace directory via
+``python -m repro.telemetry.report`` and, over every
+backend × comm_impl × train_impl, in the lint tier
+(``repro.analysis.telemetry_check``).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, List, Optional
+
+from repro.telemetry.tracer import COUNTER_KEYS, Tracer
+
+
+def reconcile_records(run_totals: Dict[str, Any],
+                      spans: Iterable[Dict[str, Any]],
+                      metrics_rounds: Iterable[Dict[str, Any]] = (),
+                      metrics_run: Optional[Dict[str, Any]] = None
+                      ) -> List[str]:
+    """Run all checks over plain record dicts (the ``spans.jsonl`` /
+    ``metrics.jsonl`` schema); see the module docstring."""
+    spans = list(spans)
+    diffs: List[str] = []
+
+    # 1. root spans cover the run totals exactly
+    for key in COUNTER_KEYS:
+        got = sum(s[key] for s in spans if s["parent"] < 0)
+        want = int(run_totals[key])
+        if got != want:
+            diffs.append(
+                f"{key}: root spans sum to {got}, run total is {want} "
+                f"({got - want:+d}) — counter activity outside every root "
+                "span, or a span straddling a measuring() window")
+
+    # 2. children never exceed their parent (inclusive deltas nest)
+    child_sums: Dict[int, Dict[str, int]] = {}
+    by_index = {s["index"]: s for s in spans}
+    for s in spans:
+        p = s["parent"]
+        if p >= 0:
+            acc = child_sums.setdefault(p, dict.fromkeys(COUNTER_KEYS, 0))
+            for key in COUNTER_KEYS:
+                acc[key] += s[key]
+    for p, acc in sorted(child_sums.items()):
+        parent = by_index[p]
+        for key in COUNTER_KEYS:
+            if acc[key] > parent[key]:
+                diffs.append(
+                    f"{key}: children of span #{p} ({parent['name']!r}) "
+                    f"sum to {acc[key]}, parent recorded {parent[key]} "
+                    f"({acc[key] - parent[key]:+d}) — double counting")
+
+    # 3. the metrics uplink log equals the CommLedger snapshot
+    metrics_run = metrics_run or {}
+    if "ledger_bytes" in metrics_run:
+        total = 0.0
+        by_modality: Dict[str, float] = {}
+        for r in metrics_rounds:
+            for u in r.get("uplink", ()):
+                b = float(u["bytes"])
+                total += b
+                by_modality[u["modality"]] = \
+                    by_modality.get(u["modality"], 0.0) + b
+        want_total = float(metrics_run["ledger_bytes"])
+        if total != want_total:
+            diffs.append(
+                f"uplink bytes: metrics log sums to {total:.0f}, "
+                f"CommLedger recorded {want_total:.0f} "
+                f"({total - want_total:+.0f})")
+        want_mod = {k: float(v) for k, v in
+                    (metrics_run.get("ledger_by_modality") or {}).items()}
+        if by_modality != want_mod:
+            diffs.append(
+                f"uplink bytes by modality: metrics log {by_modality}, "
+                f"CommLedger {want_mod}")
+    return diffs
+
+
+def reconcile(tracer: Tracer) -> List[str]:
+    """All checks over a live tracer (finishes it if needed)."""
+    totals = tracer.finish()
+    return reconcile_records(totals,
+                             (r.as_dict() for r in tracer.records),
+                             tracer.metrics.rounds, tracer.metrics.run)

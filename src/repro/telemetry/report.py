@@ -1,0 +1,116 @@
+"""Report CLI: per-phase breakdown + reconciliation of a trace directory.
+
+    PYTHONPATH=src python -m repro.telemetry.report TRACE_DIR
+
+Reads the ``spans.jsonl`` / ``metrics.jsonl`` a traced run wrote (see
+``repro.telemetry.export``), prints the per-phase wall-time / host-sync /
+byte / dispatch breakdown, and re-runs the reconciliation checks from the
+files alone — exit 1 on any diff, so CI can gate on a written trace.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Any, Dict, Iterable, List, Tuple
+
+from repro.telemetry.export import METRICS_FILE, SPANS_FILE
+from repro.telemetry.reconcile import reconcile_records
+from repro.telemetry.tracer import COUNTER_KEYS, Tracer
+
+
+def phase_table(spans: Iterable[Dict[str, Any]], depth: int = 1
+                ) -> Dict[str, Dict[str, Any]]:
+    """Aggregate span records at ``depth`` by name: count, wall seconds,
+    and every hostsync counter, in first-seen order."""
+    out: Dict[str, Dict[str, Any]] = {}
+    for s in spans:
+        if s["depth"] != depth:
+            continue
+        e = out.setdefault(s["name"], {"count": 0, "seconds": 0.0,
+                                       **dict.fromkeys(COUNTER_KEYS, 0)})
+        e["count"] += 1
+        e["seconds"] += s["dur_us"] / 1e6
+        for key in COUNTER_KEYS:
+            e[key] += s[key]
+    return out
+
+
+def tracer_phase_table(tracer: Tracer, depth: int = 1
+                       ) -> Dict[str, Dict[str, Any]]:
+    """:func:`phase_table` over a live tracer."""
+    return phase_table((r.as_dict() for r in tracer.records), depth=depth)
+
+
+def load_trace_dir(trace_dir: str
+                   ) -> Tuple[Dict, List[Dict], List[Dict], Dict]:
+    """(run totals, span records, round metrics, run metrics) from a
+    trace directory."""
+    run_totals: Dict[str, Any] = {}
+    spans: List[Dict[str, Any]] = []
+    with open(os.path.join(trace_dir, SPANS_FILE)) as f:
+        for line in f:
+            rec = json.loads(line)
+            if rec.get("kind") == "run":
+                run_totals = rec
+            else:
+                spans.append(rec)
+    rounds: List[Dict[str, Any]] = []
+    metrics_run: Dict[str, Any] = {}
+    with open(os.path.join(trace_dir, METRICS_FILE)) as f:
+        for line in f:
+            rec = json.loads(line)
+            if rec.get("kind") == "run":
+                metrics_run = rec
+            else:
+                rounds.append(rec)
+    return run_totals, spans, rounds, metrics_run
+
+
+def print_report(run_totals: Dict, spans: List[Dict], rounds: List[Dict],
+                 metrics_run: Dict) -> List[str]:
+    """Print the breakdown, return the reconciliation diffs."""
+    n_rounds = sum(1 for s in spans if s["parent"] < 0
+                   and s["name"] == "round")
+    print(f"{len(spans)} spans over {n_rounds} round(s), backend="
+          f"{metrics_run.get('backend', '?')}, wall "
+          f"{run_totals.get('wall_s', 0.0):.3f}s")
+    header = (f"{'phase':16s} {'count':>5s} {'seconds':>9s} "
+              f"{'syncs':>6s} {'bytes':>12s} {'dispatches':>10s}")
+    print(header)
+    print("-" * len(header))
+    for name, e in phase_table(spans).items():
+        print(f"{name:16s} {e['count']:5d} {e['seconds']:9.3f} "
+              f"{e['host_syncs']:6d} {e['bytes_moved']:12d} "
+              f"{e['dispatches']:10d}")
+    print("-" * len(header))
+    print(f"{'run totals':16s} {'':5s} {run_totals.get('wall_s', 0.0):9.3f} "
+          f"{run_totals['host_syncs']:6d} "
+          f"{run_totals['bytes_moved']:12d} "
+          f"{run_totals['dispatches']:10d}")
+    if "ledger_bytes" in metrics_run:
+        print(f"ledger: {metrics_run['ledger_bytes']:.0f} B over "
+              f"{metrics_run.get('ledger_uploads', '?')} upload(s) "
+              f"{ {k: int(v) for k, v in (metrics_run.get('ledger_by_modality') or {}).items()} }")
+    diffs = reconcile_records(run_totals, spans, rounds, metrics_run)
+    if diffs:
+        for d in diffs:
+            print(f"RECONCILE: {d}")
+    else:
+        print("reconciled: span sums == hostsync totals, "
+              "uplink log == CommLedger")
+    return diffs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.telemetry.report",
+        description="per-phase breakdown + reconciliation of a --trace dir")
+    ap.add_argument("trace_dir", help="directory written by a --trace run")
+    args = ap.parse_args(argv)
+    diffs = print_report(*load_trace_dir(args.trace_dir))
+    return 1 if diffs else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

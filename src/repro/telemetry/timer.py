@@ -1,0 +1,60 @@
+"""The benchmarks' shared wall-clock timing utilities.
+
+One implementation of the two idioms every ``benchmarks/bench_*.py``
+repeated by hand:
+
+- :class:`Timer` — the ``with Timer() as t: ...; t.us`` block
+  (previously defined in ``benchmarks/common.py``, re-exported there);
+- :func:`interleaved_min` — strictly interleaved min-of-reps over a set
+  of labeled thunks. This host's wall clock drifts between process
+  phases (throttling windows, shared CPU), so timing all reps of one
+  variant then all reps of another biases whichever ran during the slow
+  window; alternating variants inside each rep is the only fair
+  comparison, and min-of-reps is the steady-state estimate every bench
+  reports.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Mapping, Optional
+
+
+class Timer:
+    """``with Timer() as t: ...`` → ``t.us`` (wall microseconds)."""
+
+    def __enter__(self) -> "Timer":
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a) -> None:
+        self.us = (time.perf_counter() - self.t0) * 1e6
+
+    @property
+    def s(self) -> float:
+        return self.us / 1e6
+
+
+def interleaved_min(thunks: Mapping[str, Callable], *, reps: int = 3,
+                    prepare: Optional[Mapping[str, Callable]] = None
+                    ) -> Dict[str, float]:
+    """Best-of-``reps`` wall seconds per labeled thunk, strictly
+    interleaved: each rep runs every label once, in insertion order, so
+    clock drift hits all variants alike.
+
+    ``prepare[label]`` (optional) runs UNtimed before each timed call and
+    its return value is passed to the thunk — the hook for per-rep state
+    rebuilds (e.g. a fresh federation) that must stay outside the timed
+    region. Labels without a prepare hook are called with no argument.
+    """
+    best = {k: float("inf") for k in thunks}
+    for _ in range(max(int(reps), 1)):
+        for k, fn in thunks.items():
+            if prepare is not None and k in prepare:
+                arg = prepare[k]()
+                with Timer() as t:
+                    fn(arg)
+            else:
+                with Timer() as t:
+                    fn()
+            best[k] = min(best[k], t.us / 1e6)
+    return best

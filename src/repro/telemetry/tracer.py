@@ -1,0 +1,168 @@
+"""Span tracer: wall-time + hostsync counter deltas per round phase.
+
+A :class:`Tracer` collects three kinds of observations from one
+``run_federation`` call:
+
+- **spans** — nested wall-clock intervals (``round`` → ``train.local`` /
+  ``select.joint`` / ``comm.uplink`` / …) that also snapshot the three
+  process-global :mod:`repro.core.hostsync` counters (host syncs, uplink
+  bytes moved, training dispatches) on entry and record the *inclusive*
+  deltas on exit — the same ``measuring()``-style scoping the budget
+  manifest uses, so span sums reconcile exactly against the global
+  counters (``repro.telemetry.reconcile``);
+- **virtual events** — the async scheduler's per-client lifecycle on the
+  VIRTUAL clock (local-compute and upload slices, flush and
+  deadline-drop instants), kept separate from wall time so the Perfetto
+  export can show both timelines side by side;
+- **metrics** — the per-round :class:`~repro.telemetry.metrics.
+  MetricsRegistry` (uplink log, selection decisions, losses, staleness).
+
+Counter deltas stay correct when a ``hostsync.measuring()`` window is
+fully nested inside a span, or encloses the tracer's whole lifetime:
+``measuring`` folds its totals back into the enclosing scope on exit, so
+the counters look continuous from outside the window. A window that
+straddles a span boundary (entered inside, exited outside) is
+unsupported — don't do that.
+
+When no tracer is installed, ``repro.telemetry.span`` returns a shared
+no-op context manager: the disabled cost of every instrumentation point
+is one module-global ``None`` check, and no round outcome ever depends
+on whether a tracer is present (pinned by ``tests/test_telemetry.py``).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+from repro.core import hostsync
+
+COUNTER_KEYS = ("host_syncs", "bytes_moved", "dispatches")
+
+
+@dataclass
+class SpanRecord:
+    """One span: a wall-clock interval plus the *inclusive* hostsync
+    counter deltas (everything that ran while the span was open, children
+    included). ``t0_us`` is the offset from the tracer's start."""
+    name: str
+    index: int
+    parent: int                  # records index of the enclosing span; -1
+    depth: int                   # 0 = root
+    t0_us: float
+    dur_us: float = 0.0
+    host_syncs: int = 0
+    bytes_moved: int = 0
+    dispatches: int = 0
+    args: Dict[str, Any] = field(default_factory=dict)
+
+    def counters(self) -> Dict[str, int]:
+        return {"host_syncs": self.host_syncs,
+                "bytes_moved": self.bytes_moved,
+                "dispatches": self.dispatches}
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {"kind": "span", "name": self.name, "index": self.index,
+                "parent": self.parent, "depth": self.depth,
+                "t0_us": round(self.t0_us, 3),
+                "dur_us": round(self.dur_us, 3),
+                "host_syncs": self.host_syncs,
+                "bytes_moved": self.bytes_moved,
+                "dispatches": self.dispatches, "args": self.args}
+
+
+@dataclass
+class VirtualEvent:
+    """One async-scheduler event on the VIRTUAL clock (seconds).
+    ``dur_s=None`` marks an instant; ``tid`` is the timeline lane —
+    a client id for per-client slices, 0 for server-side events."""
+    name: str
+    tid: int
+    t0_s: float
+    dur_s: Optional[float] = None
+    args: Dict[str, Any] = field(default_factory=dict)
+
+
+class _Span:
+    """Context manager for one live span; created by :meth:`Tracer.span`.
+    The record is appended on ``__enter__`` (when nesting is known) and
+    finalized on ``__exit__``."""
+    __slots__ = ("_tracer", "_name", "_args", "_rec", "_c0", "_t0")
+
+    def __init__(self, tracer: "Tracer", name: str, args: Dict[str, Any]):
+        self._tracer = tracer
+        self._name = name
+        self._args = args
+
+    def __enter__(self) -> SpanRecord:
+        tr = self._tracer
+        rec = SpanRecord(
+            name=self._name, index=len(tr.records),
+            parent=tr._stack[-1] if tr._stack else -1,
+            depth=len(tr._stack),
+            t0_us=(time.perf_counter() - tr._wall0) * 1e6,
+            args=self._args)
+        tr.records.append(rec)
+        tr._stack.append(rec.index)
+        self._rec = rec
+        self._c0 = (hostsync.count(), hostsync.bytes_moved(),
+                    hostsync.dispatches())
+        self._t0 = time.perf_counter()
+        return rec
+
+    def __exit__(self, *exc) -> bool:
+        rec = self._rec
+        rec.dur_us = (time.perf_counter() - self._t0) * 1e6
+        rec.host_syncs = hostsync.count() - self._c0[0]
+        rec.bytes_moved = hostsync.bytes_moved() - self._c0[1]
+        rec.dispatches = hostsync.dispatches() - self._c0[2]
+        self._tracer._stack.pop()
+        return False
+
+
+class Tracer:
+    """One run's trace: spans, scheduler virtual events, metrics, and the
+    frozen run totals (:meth:`finish`)."""
+
+    def __init__(self):
+        from repro.telemetry.metrics import MetricsRegistry
+        self._wall0 = time.perf_counter()
+        self._c0 = (hostsync.count(), hostsync.bytes_moved(),
+                    hostsync.dispatches())
+        self.records: List[SpanRecord] = []
+        self.events: List[VirtualEvent] = []
+        self.metrics = MetricsRegistry()
+        self._stack: List[int] = []
+        self.totals: Optional[Dict[str, Any]] = None
+
+    def span(self, name: str, **args) -> _Span:
+        return _Span(self, name, args)
+
+    def virtual_slice(self, name: str, tid: int, t0_s: float, t1_s: float,
+                      **args) -> None:
+        self.events.append(VirtualEvent(
+            name, int(tid), float(t0_s),
+            dur_s=max(float(t1_s) - float(t0_s), 0.0), args=args))
+
+    def virtual_instant(self, name: str, tid: int, t_s: float,
+                        **args) -> None:
+        self.events.append(VirtualEvent(name, int(tid), float(t_s),
+                                        args=args))
+
+    def finish(self) -> Dict[str, Any]:
+        """Freeze the run totals as the counter deltas since this tracer
+        was constructed (idempotent — later calls return the first
+        snapshot). Construct and finish on the same side of any
+        ``hostsync.measuring()`` window."""
+        if self.totals is None:
+            self.totals = {
+                "wall_s": time.perf_counter() - self._wall0,
+                "host_syncs": hostsync.count() - self._c0[0],
+                "bytes_moved": hostsync.bytes_moved() - self._c0[1],
+                "dispatches": hostsync.dispatches() - self._c0[2],
+                "spans": len(self.records),
+            }
+        return self.totals
+
+    def roots(self) -> List[SpanRecord]:
+        return [r for r in self.records if r.parent < 0]

@@ -1,0 +1,315 @@
+"""Telemetry tier: the observability subsystem's three contracts.
+
+1. **Reconciliation** — a traced seeded federation on every backend
+   writes spans/metrics/Perfetto artifacts whose sums equal the global
+   hostsync counters and the CommLedger exactly (and the report CLI
+   re-proves it from the files alone);
+2. **Zero-interference** — installing a tracer never changes a round
+   outcome: uploads, losses, accuracies, and selection are bit-identical
+   with tracing on and off;
+3. **Scoping** — span counter deltas stay correct around fully-nested
+   ``hostsync.measuring()`` windows, and the reconciliation checks
+   actually fire on hand-built violations (the self-test the lint tier
+   leans on).
+
+The ``lint``-marked subset re-runs ``repro.analysis.telemetry_check``
+the way ``python -m repro.analysis.lint`` does.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import telemetry
+from repro.analysis import budgets
+from repro.core import hostsync
+from repro.core.rounds import MFedMCConfig, run_federation
+from repro.telemetry import report
+from repro.telemetry.export import METRICS_FILE, SPANS_FILE, TRACE_FILE
+from repro.telemetry.reconcile import reconcile_records
+from repro.telemetry.timer import interleaved_min
+
+BACKENDS = ("loop", "batched", "engine", "async", "sharded")
+ROUNDS = 3
+
+
+def _mini(comm_impl="fused", rounds=ROUNDS):
+    clients, spec = budgets.mini_federation()
+    cfg = budgets.federation_config(comm_impl, rounds=rounds)
+    return clients, spec, cfg
+
+
+class TestTracedRuns:
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_trace_reconciles_and_exports(self, backend, tmp_path):
+        clients, spec, cfg = _mini()
+        out = str(tmp_path / f"trace_{backend}")
+        with telemetry.tracing(out) as tracer:
+            h = run_federation(clients, spec, cfg, backend=backend)
+        assert telemetry.get() is None          # uninstalled on exit
+        assert len(h.records) == ROUNDS
+
+        # live-tracer reconciliation: span sums == hostsync totals,
+        # uplink log == CommLedger, exactly
+        assert telemetry.reconcile(tracer) == []
+        totals = tracer.finish()
+        assert totals["host_syncs"] > 0
+        assert totals["bytes_moved"] > 0
+        rounds = [r for r in tracer.roots() if r.name == "round"]
+        assert len(rounds) == ROUNDS
+        names = {r.name for r in tracer.records}
+        assert {"round", "train.local", "comm.uplink", "eval"} <= names
+
+        # written artifacts carry the same records
+        for fn in (SPANS_FILE, METRICS_FILE, TRACE_FILE):
+            assert os.path.exists(os.path.join(out, fn))
+        run_totals, spans, met_rounds, met_run = report.load_trace_dir(out)
+        assert run_totals["host_syncs"] == totals["host_syncs"]
+        assert len(spans) == len(tracer.records)
+        assert [r["round"] for r in met_rounds] == list(range(1, ROUNDS + 1))
+        assert met_run["backend"] == backend
+        assert met_run["ledger_bytes"] == sum(
+            u["bytes"] for r in met_rounds for u in r["uplink"])
+
+        # Perfetto schema: every event has ph/name/pid/tid (+ts off "M")
+        with open(os.path.join(out, TRACE_FILE)) as f:
+            trace = json.load(f)
+        assert trace["traceEvents"]
+        for ev in trace["traceEvents"]:
+            assert {"ph", "name", "pid", "tid"} <= set(ev)
+            if ev["ph"] != "M":
+                assert "ts" in ev
+
+        # the report CLI reconciles from the files alone (exit 0)
+        assert report.main([out]) == 0
+
+    def test_per_round_metrics_schema(self):
+        clients, spec, cfg = _mini()
+        with telemetry.tracing() as tracer:
+            run_federation(clients, spec, cfg, backend="engine")
+        for rec in tracer.metrics.rounds:
+            assert rec["kind"] == "round"
+            assert set(rec) >= {"round", "accuracy", "mean_loss",
+                                "comm_mb", "uplink", "selected",
+                                "choices", "shapley", "dropped"}
+            for u in rec["uplink"]:
+                assert set(u) >= {"client", "modality", "bytes"}
+        # δ=0.2 over K=8 keeps exactly 2 clients per round
+        assert all(len(r["selected"]) == 2 for r in tracer.metrics.rounds)
+
+
+class TestAsyncVirtualTime:
+    def test_flush_drop_and_virtual_events(self, tmp_path):
+        from repro.core.scheduler import nominal_cycle_seconds
+        clients, spec = budgets.mini_federation()
+        base = dict(rounds=ROUNDS, local_epochs=1, batch_size=8, seed=0,
+                    gamma=1, delta=1.0, modality_strategy="priority",
+                    client_strategy="all", quantize_bits=4,
+                    compute_sec_per_step=0.05, straggler_fraction=0.25,
+                    straggler_factor=10.0, buffer_size=2,
+                    staleness_discount=0.9)
+        nom = nominal_cycle_seconds(clients, spec, MFedMCConfig(**base))
+        cfg = MFedMCConfig(deadline_s=1.5 * nom, **base)
+        out = str(tmp_path / "trace_async_drop")
+        with telemetry.tracing(out) as tracer:
+            h = run_federation(clients, spec, cfg, backend="async")
+        assert telemetry.reconcile(tracer) == []
+
+        # virtual-clock lanes: dispatch/local/upload per client, server
+        # flush instants and cycle slices
+        ev_names = {e.name for e in tracer.events}
+        assert {"dispatch", "local", "upload", "flush",
+                "cycle"} <= ev_names
+        assert all(e.tid == 0 for e in tracer.events
+                   if e.name in ("flush", "cycle"))
+        # one deadline_drop instant per dropped id, pinned to the cycle
+        dropped = [cid for r in h.records for cid in r.dropped]
+        drops = [e for e in tracer.events if e.name == "deadline_drop"]
+        assert dropped, "straggler setup must force deadline drops"
+        assert sorted(e.tid for e in drops) == sorted(dropped)
+        # metrics mirror the history's async fields
+        mrounds = tracer.metrics.rounds
+        assert [r["flushes"] for r in mrounds] == \
+            [r.flushes for r in h.records]
+        assert [r["dropped"] for r in mrounds] == \
+            [sorted(r.dropped) for r in h.records]
+        assert any(r["staleness"] for r in mrounds)
+        assert [r["sim_time"] for r in mrounds] == \
+            [r.sim_time for r in h.records]
+        # flush work also shows on the wall clock as comm.flush spans
+        assert any(s.name == "comm.flush" for s in tracer.records)
+
+        # the virtual timeline lands on Perfetto pid 2
+        with open(os.path.join(out, TRACE_FILE)) as f:
+            trace = json.load(f)
+        virt = [e for e in trace["traceEvents"]
+                if e["pid"] == 2 and e["ph"] != "M"]
+        assert virt
+        assert {e["ph"] for e in virt} <= {"X", "i"}
+
+
+class TestZeroInterference:
+    def test_disabled_tracing_changes_no_round_outcome(self):
+        clients_a, spec_a, cfg = _mini()
+        h_plain = run_federation(clients_a, spec_a, cfg, backend="engine")
+        clients_b, spec_b, _ = _mini()
+        with telemetry.tracing() as tracer:
+            h_traced = run_federation(clients_b, spec_b, cfg,
+                                      backend="engine")
+        assert len(tracer.records) > 0
+        for ra, rb in zip(h_plain.records, h_traced.records):
+            assert ra.accuracy == rb.accuracy
+            assert ra.mean_loss == rb.mean_loss
+            assert ra.comm_mb == rb.comm_mb
+            assert ra.uploads == rb.uploads
+            assert ra.shapley == rb.shapley
+
+    def test_span_is_shared_noop_when_disabled(self):
+        assert telemetry.get() is None
+        s1, s2 = telemetry.span("a"), telemetry.span("b", k=1)
+        assert s1 is s2                         # the shared null span
+        with s1 as rec:
+            assert rec is None
+
+
+class TestScoping:
+    def test_span_counters_nest_with_measuring_window(self):
+        tracer = telemetry.Tracer()
+        with telemetry.install(tracer):
+            with telemetry.span("outer"):
+                hostsync.fetch(np.zeros(3))
+                with hostsync.measuring() as m:
+                    with telemetry.span("inner"):
+                        hostsync.fetch(np.zeros(3))
+                        hostsync.record_bytes(10)
+                hostsync.fetch(np.zeros(3))
+        # the window saw only its own fetch; the span saw all three
+        assert m.as_dict() == {"host_syncs": 1, "bytes_moved": 10,
+                               "dispatches": 0}
+        outer, inner = tracer.records
+        assert (outer.host_syncs, outer.bytes_moved) == (3, 10)
+        assert (inner.host_syncs, inner.bytes_moved) == (1, 10)
+        assert inner.parent == outer.index and inner.depth == 1
+        assert tracer.finish()["host_syncs"] == 3
+        assert telemetry.reconcile(tracer) == []
+
+    def test_measurement_as_dict(self):
+        with hostsync.measuring() as m:
+            hostsync.fetch_scalar(1.0)
+            hostsync.record_bytes(5)
+            hostsync.record_dispatch(2)
+        assert m.as_dict() == {"host_syncs": 1, "bytes_moved": 5,
+                               "dispatches": 2}
+
+    def test_install_restores_previous_tracer(self):
+        t1, t2 = telemetry.Tracer(), telemetry.Tracer()
+        with telemetry.install(t1):
+            assert telemetry.get() is t1
+            with telemetry.install(t2):
+                assert telemetry.get() is t2
+            assert telemetry.get() is t1
+        assert telemetry.get() is None
+
+
+class TestReconcileChecks:
+    def test_flags_all_three_violations(self):
+        spans = [
+            {"name": "round", "index": 0, "parent": -1, "depth": 0,
+             "host_syncs": 2, "bytes_moved": 100, "dispatches": 1},
+            # child claims more syncs than its parent: double counting
+            {"name": "train.local", "index": 1, "parent": 0, "depth": 1,
+             "host_syncs": 5, "bytes_moved": 0, "dispatches": 0},
+        ]
+        run = {"host_syncs": 3, "bytes_moved": 100, "dispatches": 1}
+        diffs = reconcile_records(
+            run, spans,
+            [{"uplink": [{"modality": "acc", "bytes": 80.0}]}],
+            {"ledger_bytes": 100.0,
+             "ledger_by_modality": {"acc": 100.0}})
+        text = "\n".join(diffs)
+        assert "root spans sum to 2" in text        # totals mismatch
+        assert "double counting" in text            # child > parent
+        assert "uplink bytes" in text               # ledger mismatch
+
+    def test_clean_records_pass(self):
+        spans = [
+            {"name": "round", "index": 0, "parent": -1, "depth": 0,
+             "host_syncs": 3, "bytes_moved": 100, "dispatches": 1},
+            {"name": "train.local", "index": 1, "parent": 0, "depth": 1,
+             "host_syncs": 2, "bytes_moved": 0, "dispatches": 1},
+        ]
+        run = {"host_syncs": 3, "bytes_moved": 100, "dispatches": 1}
+        assert reconcile_records(
+            run, spans,
+            [{"uplink": [{"modality": "acc", "bytes": 60.0},
+                         {"modality": "gyr", "bytes": 40.0}]}],
+            {"ledger_bytes": 100.0,
+             "ledger_by_modality": {"acc": 60.0, "gyr": 40.0}}) == []
+
+
+class TestTimer:
+    def test_interleaved_min_order_and_prepare(self):
+        order = []
+
+        def mk(label):
+            def thunk(*a):
+                order.append((label, a))
+            return thunk
+
+        best = interleaved_min(
+            {"a": mk("a"), "b": mk("b")},
+            prepare={"a": lambda: "payload"}, reps=3)
+        assert set(best) == {"a", "b"}
+        assert all(v >= 0.0 for v in best.values())
+        # strict interleave: every rep runs every label once, in order
+        assert [lbl for lbl, _ in order] == ["a", "b"] * 3
+        # prepare's return feeds the thunk; bare labels get no argument
+        assert all(a == ("payload",) for lbl, a in order if lbl == "a")
+        assert all(a == () for lbl, a in order if lbl == "b")
+
+    def test_phase_table_aggregates_depth(self):
+        tracer = telemetry.Tracer()
+        with telemetry.install(tracer):
+            for _ in range(2):
+                with telemetry.span("round"):
+                    with telemetry.span("train.local"):
+                        hostsync.record_dispatch(3)
+                    with telemetry.span("eval"):
+                        hostsync.fetch_scalar(0.0)
+        table = telemetry.tracer_phase_table(tracer)
+        assert table["train.local"]["count"] == 2
+        assert table["train.local"]["dispatches"] == 6
+        assert table["eval"]["host_syncs"] == 2
+        assert "round" not in table                 # depth-0 spans excluded
+
+
+@pytest.mark.lint
+class TestLintTier:
+    def test_telemetry_audit_clean(self):
+        from repro.analysis.telemetry_check import check
+        assert check("engine", "fused") == []
+        assert check("async", "reference", "reference") == []
+
+    def test_lint_matrix_includes_loop_on_full_target_set(self):
+        from repro.analysis.programs import BACKENDS as PROGRAM_BACKENDS
+        from repro.analysis import telemetry_check
+
+        audited = []
+
+        def fake_check_all(backends, comm_impls, *a, **kw):
+            audited.append((tuple(backends), tuple(comm_impls)))
+            return []
+
+        orig = telemetry_check.check_all
+        telemetry_check.check_all = fake_check_all
+        try:
+            targets = [(b, ci) for b in PROGRAM_BACKENDS
+                       for ci in ("fused", "reference")]
+            telemetry_check.lint_telemetry(targets)
+        finally:
+            telemetry_check.check_all = orig
+        (backends, comm_impls), = audited
+        assert backends[0] == "loop"
+        assert set(backends) == {"loop"} | set(PROGRAM_BACKENDS)
+        assert comm_impls == ("fused", "reference")
